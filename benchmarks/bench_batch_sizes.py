@@ -1,0 +1,68 @@
+"""Paper Table 6 / §7.1 — batch-size generalization case study.
+
+A candidate synthesized at one batch size is re-verified and re-modeled
+across batch sizes {8,16,32,64,128}: correctness must hold (robust to shape
+variation, §7.1) and the modeled TPU time is reported for baseline vs the
+KForge candidate. Wall-clock of the XLA reference on CPU is included as the
+measured column.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, wall_us
+from repro.core import LoopConfig, kernelbench, run_workload, verify
+from repro.core import candidates as cand_mod
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+
+BATCHES = (8, 16, 32, 64, 128)
+
+
+def _attn_workload(b: int) -> Workload:
+    return Workload(
+        name=f"case/attn_b{b}", level=3, op="attention",
+        ref_fn=lambda q, k, v: ref.attention(q, k, v, causal=True),
+        input_fn=lambda rng: {"q": randn(rng, (b, 256, 8, 64), 4.0),
+                              "k": randn(rng, (b, 256, 2, 64), 4.0),
+                              "v": randn(rng, (b, 256, 2, 64))},
+        input_shapes={"q": (b, 256, 8, 64), "k": (b, 256, 2, 64),
+                      "v": (b, 256, 2, 64)})
+
+
+def _mlp_workload(b: int) -> Workload:
+    t = b * 64
+    return Workload(
+        name=f"case/swiglu_b{b}", level=3, op="swiglu",
+        ref_fn=lambda gate, up: ref.swish(gate) * up,
+        input_fn=lambda rng: {"gate": randn(rng, (t, 512)),
+                              "up": randn(rng, (t, 512))},
+        input_shapes={"gate": (t, 512), "up": (t, 512)})
+
+
+def run(small: bool = True):
+    del small
+    rows: list[Row] = []
+    for family, mk in (("attn", _attn_workload), ("swiglu", _mlp_workload)):
+        # synthesize once at the generation batch size (16)
+        out = run_workload(mk(16), LoopConfig(num_iterations=4,
+                                              use_reference=True,
+                                              use_profiling=True))
+        cand = out.best_candidate
+        assert cand is not None, f"{family}: synthesis failed"
+        for b in BATCHES:
+            wl = mk(b)
+            res = verify(cand, wl, seed=b)
+            shapes = {k: tuple(v) for k, v in wl.input_shapes.items()}
+            base_ms = cand_mod.baseline_time(cand.op, shapes) * 1e3
+            kf_ms = cand_mod.model_time(cand, shapes) * 1e3
+            inputs = wl.inputs(0)
+            import jax
+            measured = wall_us(jax.jit(wl.ref_fn), *inputs.values(), reps=3)
+            rows.append((f"case/{family}/b{b}", measured,
+                         f"correct={int(res.correct)};"
+                         f"baseline_ms={base_ms:.3f};kforge_ms={kf_ms:.3f}"))
+    return rows

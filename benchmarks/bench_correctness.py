@@ -1,0 +1,18 @@
+"""Paper Table 4 — single-shot correctness rate, Baseline vs CUDA-reference
+configuration (here: XLA-oracle reference transfer)."""
+from __future__ import annotations
+
+from repro.core import LoopConfig, fast_p, kernelbench, run_suite
+from benchmarks.common import Row
+
+
+def run(small: bool = True):
+    rows: list[Row] = []
+    for cname, use_ref in (("baseline", False), ("reference", True)):
+        cfg = LoopConfig(single_shot=True, use_reference=use_ref)
+        for level in (1, 2, 3):
+            outs = run_suite(kernelbench.suite(level, small=small), cfg)
+            finals = [o.final for o in outs]
+            rows.append((f"correctness/{cname}/L{level}", 0.0,
+                         f"{fast_p(finals, 0.0):.3f}"))
+    return rows

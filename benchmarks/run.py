@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_fastp_levels       Fig. 2  (iterative refinement fast_p per level)
+  bench_correctness        Table 4 (single-shot correctness ± reference)
+  bench_profiling_impact   Fig. 3 / Table 5 (analysis-agent impact)
+  bench_batch_sizes        Table 6 / §7.1 (batch-size generalization)
+  bench_roofline           assignment §Roofline (reads experiments/dryrun)
+  bench_kernels_wall       measured CPU wall-clock of reference ops
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_batch_sizes, bench_correctness,
+                        bench_fastp_levels, bench_kernels_wall,
+                        bench_profiling_impact, bench_roofline)
+from benchmarks.common import emit
+
+MODULES = {
+    "fastp_levels": bench_fastp_levels,
+    "correctness": bench_correctness,
+    "profiling_impact": bench_profiling_impact,
+    "batch_sizes": bench_batch_sizes,
+    "roofline": bench_roofline,
+    "kernels_wall": bench_kernels_wall,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use full-size kernelbench workloads (slow on CPU)")
+    args = ap.parse_args()
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived", flush=True)
+    for name in names:
+        t0 = time.time()
+        rows = MODULES[name].run(small=not args.full_size)
+        emit(rows)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

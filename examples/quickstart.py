@@ -1,0 +1,33 @@
+"""Quickstart: run the KForge loop on one KernelBench-JAX workload.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import LoopConfig, kernelbench, run_workload
+
+wl = kernelbench.by_name("L1/softmax", small=True)
+print(f"workload: {wl.name} — {wl.description}\n")
+
+for label, cfg in [
+    ("single-shot (no reference)",
+     LoopConfig(single_shot=True)),
+    ("iterative refinement",
+     LoopConfig(num_iterations=5)),
+    ("iterative + reference + profiling agent",
+     LoopConfig(num_iterations=5, use_reference=True, use_profiling=True)),
+]:
+    out = run_workload(wl, cfg)
+    print(f"== {label}")
+    for log in out.logs:
+        line = f"  iter {log.iteration} [{log.phase}] {log.candidate_desc}"
+        line += f" -> {log.result.state.value}"
+        if log.result.correct and log.result.speedup:
+            line += f" ({log.result.speedup:.2f}x modeled speedup)"
+        if log.recommendation:
+            line += f"\n      G: {log.recommendation}"
+        print(line)
+    final = out.final
+    if final.correct:
+        print(f"  best: {out.best_candidate.describe()} "
+              f"speedup={final.speedup:.2f}x\n")
+    else:
+        print(f"  failed: {final.error}\n")

@@ -1,0 +1,14 @@
+"""Architecture config registry. Importing this package registers all archs."""
+from repro.configs.base import (  # noqa: F401
+    LM_SHAPES, SHAPES, EncoderConfig, MoEConfig, ModelConfig, SSMConfig,
+    ShapeConfig, get_config, list_archs, reduced, register_arch,
+)
+
+# Register every assigned architecture.
+from repro.configs import (  # noqa: F401
+    deepseek_67b, yi_34b, phi3_medium_14b, starcoder2_7b, rwkv6_7b,
+    internvl2_2b, zamba2_7b, whisper_base, moonshot_v1_16b_a3b,
+    qwen2_moe_a2_7b,
+)
+
+ALL_ARCHS = list_archs()

@@ -1,0 +1,236 @@
+"""Config system: model architecture + input-shape + parallelism configs.
+
+Every assigned architecture registers a :class:`ModelConfig` via
+``@register_arch``.  Shape cells (train_4k / prefill_32k / decode_32k /
+long_500k) are :class:`ShapeConfig` instances shared across the LM family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell.
+
+    ``kind`` is 'train' (lower train_step), 'prefill' (serve prefill) or
+    'decode' (serve_step: one new token against a KV cache of ``seq_len``).
+    """
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+    subquadratic_only: bool = False
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode", subquadratic_only=True)
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+SHAPES: Dict[str, ShapeConfig] = {s.name: s for s in LM_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64
+    conv_width: int = 4
+    expand: int = 2
+    chunk: int = 256          # SSD chunk length
+    num_heads: int = 0        # mamba2 heads; 0 -> derived
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Auxiliary encoder (whisper audio encoder / internvl vision tower stub).
+
+    Frontends are STUBS per the assignment: ``input_specs()`` provides
+    precomputed frame/patch embeddings of shape (batch, num_positions, d_model).
+    """
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    d_ff: int = 0
+    num_positions: int = 0    # 1500 audio frames / 256 vision patches
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0         # 0 -> d_model // num_heads
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    attn_period: int = 0      # hybrid: shared attention applied after every N ssm layers
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    subquadratic: bool = False   # supports long_500k decode
+    has_decoder: bool = True     # encoder-only archs skip decode shapes
+    source: str = ""             # citation tag
+    # training knobs (overridable per shape at launch)
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        n = V * d  # token embedding
+        if not self.tie_embeddings:
+            n += V * d  # lm head
+        attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
+            + self.num_heads * hd * d
+        dense_mlp = 3 * d * self.d_ff  # SwiGLU: gate, up, down
+        if self.family in ("dense", "vlm"):
+            n += L * (attn + dense_mlp + 2 * d)
+        elif self.family == "moe":
+            m = self.moe
+            expert = 3 * d * m.expert_d_ff
+            shared = 3 * d * m.shared_d_ff * m.num_shared_experts
+            router = d * m.num_experts
+            n += L * (attn + m.num_experts * expert + shared + router + 2 * d)
+        elif self.family == "ssm":
+            # rwkv6: time-mix (~4 d^2 with lora decays) + channel-mix (~2*d*d_ff... use 3 for swiglu-like)
+            n += L * (4 * d * d + 2 * d * self.d_ff + 2 * d)
+        elif self.family == "hybrid":
+            s = self.ssm
+            dinner = s.expand * d
+            mamba = d * 2 * dinner + dinner * d + dinner * (2 * s.state_dim) \
+                + s.conv_width * dinner
+            n += L * (mamba + 2 * d)
+            n_attn = max(1, self.num_layers // max(1, self.attn_period))
+            n += attn + 2 * d  # shared attention block counted once
+            del n_attn
+        elif self.family == "encdec":
+            e = self.encoder
+            enc_attn = 4 * e.d_model * e.num_heads * (e.d_model // e.num_heads)
+            enc_mlp = 2 * e.d_model * e.d_ff
+            n += e.num_layers * (enc_attn + enc_mlp + 2 * e.d_model)
+            # decoder: self-attn + cross-attn + mlp (gelu, 2 mats)
+            n += L * (2 * attn + 2 * d * self.d_ff + 3 * d)
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top_k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        m = self.moe
+        inactive = L * 3 * d * m.expert_d_ff * (m.num_experts - m.top_k)
+        return self.param_count() - inactive
+
+    def shapes(self) -> Tuple[ShapeConfig, ...]:
+        """Shape cells applicable to this arch (skips recorded elsewhere)."""
+        out = []
+        for s in LM_SHAPES:
+            if s.kind == "decode" and not self.has_decoder:
+                continue
+            if s.subquadratic_only and not self.subquadratic:
+                continue
+            out.append(s)
+        return tuple(out)
+
+    def skipped_shapes(self) -> Tuple[Tuple[ShapeConfig, str], ...]:
+        out = []
+        for s in LM_SHAPES:
+            if s.kind == "decode" and not self.has_decoder:
+                out.append((s, "encoder-only arch has no decode step"))
+            elif s.subquadratic_only and not self.subquadratic:
+                out.append((s, "pure full-attention arch; long_500k requires sub-quadratic attention"))
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCHS: Dict[str, ModelConfig] = {}
+
+
+def register_arch(cfg: ModelConfig) -> ModelConfig:
+    if cfg.name in _ARCHS:
+        raise ValueError(f"duplicate arch {cfg.name}")
+    _ARCHS[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    from repro import configs  # noqa: F401  (ensure registration ran)
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCHS)}")
+    return _ARCHS[name]
+
+
+def list_archs():
+    from repro import configs  # noqa: F401
+    return sorted(_ARCHS)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test-sized config of the same family (tiny dims, same topology)."""
+    changes: Dict[str, object] = dict(
+        num_layers=min(cfg.num_layers, 2 if cfg.family != "hybrid" else 4),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+    )
+    if cfg.moe is not None:
+        # capacity_factor high enough that no token is dropped at smoke
+        # scale: keeps prefill/decode exactly consistent in tests.
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2), expert_d_ff=64,
+            shared_d_ff=64 if cfg.moe.num_shared_experts else 0,
+            capacity_factor=8.0)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, state_dim=16, chunk=16)
+    if cfg.encoder is not None:
+        changes["encoder"] = EncoderConfig(
+            num_layers=2, d_model=128, num_heads=4, d_ff=256, num_positions=16)
+    if cfg.attn_period:
+        changes["attn_period"] = 2
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,14 @@
+"""deepseek-67b — dense llama-arch GQA [arXiv:2401.02954; hf]."""
+from repro.configs.base import ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    source="arXiv:2401.02954; hf",
+))

@@ -1,0 +1,19 @@
+"""internvl2-2b — InternViT (stub frontend) + InternLM2 backbone [arXiv:2404.16821; hf].
+
+The vision tower is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (batch, 256, d_model) projected into the LM space.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    encoder=EncoderConfig(num_positions=256),   # patch-embedding stub only
+    source="arXiv:2404.16821; hf",
+))

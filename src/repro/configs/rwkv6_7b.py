@@ -1,0 +1,17 @@
+"""rwkv6-7b (Finch) — attention-free, data-dependent decay [arXiv:2404.05892; hf]."""
+from repro.configs.base import ModelConfig, SSMConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,          # WKV heads, head_dim = 64
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    ssm=SSMConfig(state_dim=64, chunk=128),
+    subquadratic=True,
+    source="arXiv:2404.05892; hf",
+))

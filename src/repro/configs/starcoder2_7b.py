@@ -1,0 +1,14 @@
+"""starcoder2-7b — dense GQA, RoPE [arXiv:2402.19173; hf]."""
+from repro.configs.base import ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    source="arXiv:2402.19173; hf",
+))

@@ -1,0 +1,22 @@
+"""whisper-base — encoder-decoder, conv frontend STUB [arXiv:2212.04356; unverified].
+
+The conv1d/mel frontend is a stub per the assignment: ``input_specs()``
+provides precomputed frame embeddings (batch, 1500, d_model) as the encoder
+input. 6 encoder + 6 decoder layers, d_model=512, 8 heads, GELU MLP.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    encoder=EncoderConfig(
+        num_layers=6, d_model=512, num_heads=8, d_ff=2048, num_positions=1500),
+    rope_theta=0.0,   # whisper uses learned/sinusoidal positions, not RoPE
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,24 @@
+"""zamba2-7b — hybrid Mamba2 backbone + shared attention blocks [arXiv:2411.15242; unverified].
+
+81 Mamba2 layers; a single weight-shared GQA attention block is applied after
+every 6th Mamba2 layer (13 applications), Zamba-style. Sub-quadratic: Mamba2
+state is O(1) per token, shared-attention KV caches are sequence-sharded for
+the long_500k decode cell.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(state_dim=64, expand=2, conv_width=4, chunk=256),
+    attn_period=6,
+    subquadratic=True,
+    source="arXiv:2411.15242; unverified",
+))

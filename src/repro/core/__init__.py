@@ -1,0 +1,24 @@
+"""KForge core: the paper's contribution as a composable JAX module.
+
+Two collaborating agents (generation F, performance-analysis G), five-state
+program verification, the iterative refinement loop (functional pass →
+optimization pass), cross-platform reference transfer, the KernelBench-JAX
+suite, and the fast_p metric.
+"""
+from repro.core.states import EvalResult, ExecutionState  # noqa: F401
+from repro.core.workload import Workload  # noqa: F401
+from repro.core import kernelbench  # noqa: F401
+from repro.core.candidates import Candidate, initial_candidate  # noqa: F401
+from repro.core.synthesis import (  # noqa: F401
+    Generation, LLMBackend, TemplateSearchBackend,
+)
+from repro.core.analysis import (  # noqa: F401
+    Recommendation, RuleBasedAnalyzer, analyze_dryrun_cell,
+)
+from repro.core.verification import verify  # noqa: F401
+from repro.core.refinement import (  # noqa: F401
+    LoopConfig, RefinementOutcome, run_suite, run_workload,
+)
+from repro.core.metrics import (  # noqa: F401
+    fast_p, fast_p_curve, speedup_distribution, state_histogram,
+)

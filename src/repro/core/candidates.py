@@ -1,0 +1,329 @@
+"""The Pallas candidate space the generation agent explores.
+
+A candidate is (strategy, parameters) for one op family — exactly the
+degrees of freedom a kernel engineer (or the paper's LLM) controls:
+  * tiling / BlockSpec shapes (VMEM working set, MXU alignment),
+  * elements-per-"thread" vectorization (the paper's §7.2 Metal trick →
+    sublane rows per grid step on TPU),
+  * numerically-naive vs online-softmax strategies,
+  * fused vs staged elementwise epilogues.
+
+``materialize`` turns a candidate into a callable (Pallas interpret-mode on
+CPU / real kernel on TPU); ``model_time`` is the analytic TPU roofline
+estimate used as the performance signal (wall-clock of interpret mode
+measures the interpreter, not the kernel — DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels import (flash_attention as _fa, matmul as _mm,
+                           rmsnorm as _rn, softmax as _sm, swiglu as _sg,
+                           swish as _sw, xent as _xe)
+from repro.roofline.analysis import HW_V5E
+
+MXU = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    op: str                    # op family: swish, softmax, matmul, ...
+    params: Dict[str, Any]     # block sizes / strategy flags
+
+    def describe(self) -> str:
+        kv = " ".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        return f"{self.op}({kv})"
+
+
+# ---------------------------------------------------------------------------
+# Parameter spaces per op family (what the agent can mutate)
+# ---------------------------------------------------------------------------
+
+SPACES: Dict[str, Dict[str, Tuple]] = {
+    "swish": {"block_rows": (1, 8, 64), "block_lanes": (128, 512, 2048)},
+    "softmax": {"block_rows": (8, 64, 128, 256), "online": (False, True)},
+    "rmsnorm": {"block_rows": (8, 64, 256, 512)},
+    "matmul": {"block_m": (64, 128, 256, 512), "block_n": (64, 128, 256, 512),
+               "block_k": (64, 128, 256, 512)},
+    "swiglu": {"block_rows": (8, 64, 128), "block_cols": (64, 128, 512, 2048),
+               "fused": (False, True)},
+    "attention": {"block_q": (64, 128, 256, 512),
+                  "block_k": (64, 128, 256, 512), "online": (False, True)},
+    "xent": {"block_t": (32, 128, 256), "block_v": (512, 2048, 8192),
+             "online": (False, True)},
+    # SSD/Mamba2 recurrence: the strategy axis is recurrent (token-by-token
+    # state updates) vs matrix (chunk-parallel MXU form) — the same
+    # transformation EXPERIMENTS.md §Perf B1 applies by hand.
+    "ssd": {"chunk": (32, 64, 128, 256), "form": ("recurrent", "matrix")},
+}
+
+# Heuristic defaults a model proposes with NO reference implementation:
+# plausible but naive — numerically unstable softmax, undersized tiles.
+NAIVE_DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "swish": {"block_rows": 1, "block_lanes": 128},
+    "softmax": {"block_rows": 8, "online": False},
+    "rmsnorm": {"block_rows": 8},
+    "matmul": {"block_m": 64, "block_n": 64, "block_k": 512},
+    "swiglu": {"block_rows": 8, "block_cols": 128, "fused": False},
+    "attention": {"block_q": 64, "block_k": 64, "online": False},
+    "xent": {"block_t": 32, "block_v": 512, "online": False},
+    "ssd": {"chunk": 64, "form": "recurrent"},
+}
+
+# What a correct cross-platform reference implementation teaches the agent:
+# the *strategy* (online softmax, fusion) transfers even though the tiling
+# must be re-derived for the target hardware (paper §6.2).
+REFERENCE_HINTS: Dict[str, Dict[str, Any]] = {
+    "softmax": {"online": True},
+    "attention": {"online": True},
+    "xent": {"online": True},
+    "swiglu": {"fused": True},
+    "ssd": {"form": "matrix"},
+}
+
+
+def initial_candidate(op: str, *, use_reference: bool) -> Candidate:
+    params = dict(NAIVE_DEFAULTS[op])
+    if use_reference:
+        params.update(REFERENCE_HINTS.get(op, {}))
+        # reference CUDA kernels in the paper's dataset are MXU/warp-aligned;
+        # transferring them biases tile choices toward alignment.
+        for k in params:
+            if k.startswith("block_") and params[k] < MXU \
+                    and MXU in SPACES[op][k]:
+                params[k] = MXU
+    return Candidate(op=op, params=params)
+
+
+def mutations(cand: Candidate) -> Dict[str, Candidate]:
+    """All single-parameter mutations of a candidate."""
+    out = {}
+    for k, choices in SPACES[cand.op].items():
+        cur = cand.params.get(k)
+        for c in choices:
+            if c != cur:
+                p = dict(cand.params)
+                p[k] = c
+                out[f"{k}->{c}"] = Candidate(cand.op, p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Materialization: candidate -> callable
+# ---------------------------------------------------------------------------
+
+
+def _naive_softmax(x):
+    """Numerically naive softmax (no max subtraction) — overflows for
+    large-magnitude rows, exactly the bug iterative refinement must fix."""
+    e = jnp.exp(x.astype(jnp.float32))
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
+    p = cand.params
+    op = cand.op
+    if op == "swish":
+        def fn(x):
+            r, l = x.shape
+            if r % p["block_rows"] or l % p["block_lanes"]:
+                raise ValueError(
+                    f"grid misalignment: {x.shape} not divisible by "
+                    f"({p['block_rows']},{p['block_lanes']})")
+            return _sw.swish(x, block_rows=p["block_rows"],
+                             block_lanes=p["block_lanes"],
+                             interpret=interpret)
+        return fn
+    if op == "softmax":
+        def fn(x):
+            if not p["online"]:
+                return _naive_softmax(x)
+            if x.shape[0] % p["block_rows"]:
+                raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
+            return _sm.softmax(x, block_rows=p["block_rows"],
+                               interpret=interpret)
+        return fn
+    if op == "rmsnorm":
+        def fn(x, g):
+            if x.shape[0] % p["block_rows"]:
+                raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
+            return _rn.rmsnorm(x, g, block_rows=p["block_rows"],
+                               interpret=interpret)
+        return fn
+    if op == "matmul":
+        def fn(a, b):
+            m, k = a.shape
+            _, n = b.shape
+            if m % p["block_m"] or n % p["block_n"] or k % p["block_k"]:
+                raise ValueError(
+                    f"matmul tiles {p} do not divide {(m, k, n)}")
+            return _mm.matmul(a, b, block_m=p["block_m"],
+                              block_n=p["block_n"], block_k=p["block_k"],
+                              interpret=interpret)
+        return fn
+    if op == "swiglu":
+        def fn(g, u):
+            if not p["fused"]:
+                return (ref.swish(g.astype(jnp.float32)) *
+                        u.astype(jnp.float32)).astype(g.dtype)
+            if g.shape[0] % p["block_rows"] or g.shape[1] % p["block_cols"]:
+                raise ValueError(f"swiglu tiles {p} do not divide {g.shape}")
+            return _sg.swiglu_act(g, u, block_rows=p["block_rows"],
+                                  block_cols=p["block_cols"],
+                                  interpret=interpret)
+        return fn
+    if op == "attention":
+        def fn(q, k, v):
+            if not p["online"]:
+                # full S×S materialization with naive softmax
+                b, sq, h, d = q.shape
+                logits = jnp.einsum("bqhd,bkhd->bhqk", q,
+                                    ref._expand_kv(k, h)) * (d ** -0.5)
+                qi = jnp.arange(sq)[:, None]
+                ki = jnp.arange(k.shape[1])[None, :]
+                logits = jnp.where(ki <= qi, logits, -1e30)
+                pr = _naive_softmax(logits)
+                return jnp.einsum("bhqk,bkhd->bqhd", pr,
+                                  ref._expand_kv(v, h)).astype(q.dtype)
+            if q.shape[1] % p["block_q"] or k.shape[1] % p["block_k"]:
+                raise ValueError(
+                    f"attention tiles {p} do not divide "
+                    f"{(q.shape[1], k.shape[1])}")
+            return _fa.flash_attention(q, k, v, causal=True,
+                                       block_q=p["block_q"],
+                                       block_k=p["block_k"],
+                                       interpret=interpret)
+        return fn
+    if op == "ssd":
+        def fn(x, a, b, c):
+            if p["form"] == "recurrent":
+                from repro.kernels import ref as _ref
+                y, _ = _ref.ssd(x, a, b, c)
+                return y
+            from repro.kernels import ops as _ops
+            t = x.shape[1]
+            if t % p["chunk"]:
+                raise ValueError(f"chunk {p['chunk']} does not divide T={t}")
+            y, _ = _ops.ssd_matrix(x, a, b, c, chunk=p["chunk"])
+            return y
+        return fn
+    if op == "xent":
+        def fn(logits, labels):
+            if not p["online"]:
+                lf = logits.astype(jnp.float32)
+                lse = jnp.log(jnp.sum(jnp.exp(lf), axis=-1))  # overflows
+                gold = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+                return lse - gold
+            t, v = logits.shape
+            if t % p["block_t"] or v % p["block_v"]:
+                raise ValueError(f"xent tiles {p} do not divide {(t, v)}")
+            return _xe.softmax_xent(logits, labels, block_t=p["block_t"],
+                                    block_v=p["block_v"],
+                                    interpret=interpret)
+        return fn
+    raise KeyError(f"unknown op family {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU performance model (the optimization signal)
+# ---------------------------------------------------------------------------
+
+
+def _mxu_eff(dim: int) -> float:
+    """MXU utilization penalty for tiles not aligned to 128."""
+    return min(1.0, dim / MXU) if dim < MXU else 1.0
+
+
+def model_time(cand: Candidate, shapes: Dict[str, Tuple[int, ...]],
+               hw=HW_V5E) -> float:
+    """Estimated kernel time on TPU v5e: max(compute, HBM traffic) with
+    tiling-dependent re-load factors and MXU alignment penalties."""
+    p = cand.params
+    op = cand.op
+    bw, peak = hw["hbm_bw"], hw["peak_flops"]
+    vpu_peak = peak / 8  # elementwise ops don't use the MXU
+
+    def elemwise(n_elems, n_streams, rows, lanes):
+        bytes_ = n_elems * 4 * n_streams
+        # tiny tiles pay per-grid-step overhead (launch + pipeline bubbles)
+        steps = n_elems / max(1, rows * lanes)
+        overhead = steps * 2e-8
+        return max(n_elems / vpu_peak, bytes_ / bw) + overhead
+
+    if op == "swish":
+        (r, l) = shapes["x"]
+        return elemwise(r * l, 2, p["block_rows"], p["block_lanes"])
+    if op == "swiglu":
+        (r, l) = shapes["gate"]
+        streams = 3 if p["fused"] else 5  # staged: extra intermediate r/w
+        return elemwise(r * l, streams, p.get("block_rows", 8),
+                        p.get("block_cols", 128))
+    if op == "rmsnorm":
+        (r, l) = shapes["x"]
+        return elemwise(r * l, 2, p["block_rows"], l)
+    if op == "softmax":
+        (r, l) = shapes["x"]
+        streams = 2 if p["online"] else 4  # naive: exp pass + sum pass
+        return elemwise(r * l, streams, p.get("block_rows", 8), l)
+    if op == "matmul":
+        m, k = shapes["a"]
+        _, n = shapes["b"]
+        flops = 2 * m * n * k
+        eff = _mxu_eff(p["block_m"]) * _mxu_eff(p["block_n"])
+        # each A tile re-loaded n/bn times, each B tile m/bm times
+        bytes_ = 4 * (m * k * (n / p["block_n"]) + k * n * (m / p["block_m"])
+                      + m * n)
+        vmem = 4 * (p["block_m"] * p["block_k"] + p["block_k"] * p["block_n"]
+                    + p["block_m"] * p["block_n"])
+        if vmem > hw["vmem_bytes"]:
+            return float("inf")  # does not fit VMEM
+        return max(flops / (peak * eff), bytes_ / bw)
+    if op == "attention":
+        b, sq, h, d = shapes["q"]
+        sk = shapes["k"][1]
+        kv = shapes["k"][2]
+        flops = 4 * b * h * sq * sk * d * 0.5  # causal
+        if not p["online"]:
+            # materializes S×S logits+probs in HBM: reads+writes dominate
+            bytes_ = 4 * b * h * sq * sk * 3
+            return max(flops / peak, bytes_ / bw)
+        eff = _mxu_eff(p["block_q"]) * _mxu_eff(min(p["block_k"], d))
+        # K/V streamed once per q-block row
+        kv_reload = sq / p["block_q"]
+        bytes_ = 4 * (b * h * sq * d + b * kv * sk * d * kv_reload * 0.5 * 2
+                      + b * h * sq * d)
+        return max(flops / (peak * eff), bytes_ / bw)
+    if op == "xent":
+        t, v = shapes["logits"]
+        streams = 2 if p["online"] else 4
+        return elemwise(t * v, streams, p.get("block_t", 32), p["block_v"])
+    if op == "ssd":
+        bsz, t, h, pdim = shapes["x"]
+        n = shapes["b"][-1]
+        if p["form"] == "recurrent":
+            # one (P,N) f32 state read+write per token per head, fully
+            # latency/memory-bound; no MXU utilization
+            state_traffic = bsz * t * h * pdim * n * 4 * 2
+            return state_traffic / bw + t * 5e-7  # sequential-step latency
+        c = p["chunk"]
+        nc = t // max(c, 1)
+        flops = 2 * bsz * nc * h * (c * c * n + c * c * pdim) \
+            + 2 * bsz * nc * h * c * pdim * n
+        bytes_ = 4 * bsz * t * h * (pdim + 2 * n) \
+            + 4 * bsz * nc * c * c * h  # decay-ratio tensor
+        eff = _mxu_eff(min(c, MXU))
+        return max(flops / (peak * eff), bytes_ / bw) + nc * 5e-7
+    raise KeyError(op)
+
+
+def baseline_time(op: str, shapes: Dict[str, Tuple[int, ...]]) -> float:
+    """Roofline time of the naive/default implementation (the 'PyTorch eager'
+    analogue): unfused, non-online, 8-row tiles."""
+    return model_time(Candidate(op, dict(NAIVE_DEFAULTS[op])), shapes)

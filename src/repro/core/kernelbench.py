@@ -1,0 +1,299 @@
+"""KernelBench-JAX: the workload suite KForge is evaluated on.
+
+Mirrors the paper's three levels with problems drawn from the assigned
+architectures (DESIGN.md §6). Softmax-family workloads use large-magnitude
+inputs so numerically-naive candidates genuinely fail (the functional pass
+has real work to do), exactly like fp32 overflow on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+
+_SUITE: List[Workload] = []
+_SUITE_SMALL: List[Workload] = []
+
+
+def _add(wl: Workload):
+    _SUITE.append(wl)
+    _SUITE_SMALL.append(_shrink(wl))
+    return wl
+
+
+def _shrink(wl: Workload, div: int = 4) -> Workload:
+    """Same op/strategy space, dims divided by ``div`` — interpret-mode
+    verification becomes fast while the analytic model still differentiates
+    candidates. Used by the benchmark harness."""
+    def small(shape):
+        # snap to multiples of 64 so the tiling space keeps legal divisors
+        return tuple(max(64, (s // div) // 64 * 64) if s >= 256 else s
+                     for s in shape)
+
+    shapes = {k: small(v) for k, v in wl.input_shapes.items()}
+
+    def input_fn(rng, _wl=wl):
+        full = _wl.input_fn(rng)
+        out = {}
+        for k, v in full.items():
+            tgt = small(tuple(v.shape))
+            sl = tuple(slice(0, t) for t in tgt)
+            arr = v[sl]
+            if k == "labels":
+                # keep labels in range of the shrunken vocab
+                vocab = shapes.get("logits", (0, arr.shape[-1] if arr.ndim
+                                              else 0))[-1]
+                if "logits" in shapes:
+                    arr = arr % shapes["logits"][-1]
+            out[k] = arr
+        return out
+
+    return dataclasses.replace(wl, input_fn=input_fn, input_shapes=shapes)
+
+
+def suite(level=None, *, small: bool = False) -> List[Workload]:
+    pool = _SUITE_SMALL if small else _SUITE
+    if level is None:
+        return list(pool)
+    return [w for w in pool if w.level == level]
+
+
+def by_name(name: str, *, small: bool = False) -> Workload:
+    for w in (_SUITE_SMALL if small else _SUITE):
+        if w.name == name:
+            return w
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Level 1 — single primitives
+# ---------------------------------------------------------------------------
+
+_add(Workload(
+    name="L1/swish", level=1, op="swish",
+    description="Swish activation (paper case study §7.2)",
+    ref_fn=lambda x: ref.swish(x),
+    input_fn=lambda rng: {"x": randn(rng, (2048, 2048))},
+    input_shapes={"x": (2048, 2048)}))
+
+_add(Workload(
+    name="L1/softmax", level=1, op="softmax",
+    description="row softmax; rows contain +-60 magnitude outliers",
+    ref_fn=lambda x: ref.softmax(x),
+    input_fn=lambda rng: {"x": randn(rng, (1024, 4096), scale=60.0)},
+    input_shapes={"x": (1024, 4096)}))
+
+_add(Workload(
+    name="L1/rmsnorm", level=1, op="rmsnorm",
+    description="RMSNorm over d_model=4096 (llama-family norm)",
+    ref_fn=lambda x, g: ref.rmsnorm(x, g),
+    input_fn=lambda rng: {"x": randn(rng, (2048, 4096)),
+                          "g": randn(rng, (4096,), 0.5)},
+    input_shapes={"x": (2048, 4096), "g": (4096,)}))
+
+_add(Workload(
+    name="L1/matmul", level=1, op="matmul",
+    description="GEMM 1024x1024x1024 (MXU workload)",
+    ref_fn=lambda a, b: ref.matmul(a, b),
+    input_fn=lambda rng: {"a": randn(rng, (1024, 1024), 0.05),
+                          "b": randn(rng, (1024, 1024), 0.05)},
+    input_shapes={"a": (1024, 1024), "b": (1024, 1024)}, tol=5e-3))
+
+_add(Workload(
+    name="L1/matmul_tall", level=1, op="matmul",
+    description="skinny GEMM 8192x512x1024 (mlp down-proj shape)",
+    ref_fn=lambda a, b: ref.matmul(a, b),
+    input_fn=lambda rng: {"a": randn(rng, (8192, 512), 0.05),
+                          "b": randn(rng, (512, 1024), 0.05)},
+    input_shapes={"a": (8192, 512), "b": (512, 1024)}, tol=5e-3))
+
+_add(Workload(
+    name="L1/xent", level=1, op="xent",
+    description="softmax cross-entropy over 32k vocab, logits to +-50",
+    ref_fn=lambda logits, labels: ref.softmax_xent(logits, labels),
+    input_fn=lambda rng: {
+        "logits": randn(rng, (512, 32768), scale=50.0),
+        "labels": jnp.asarray(rng.integers(0, 32768, (512,)), jnp.int32)},
+    input_shapes={"logits": (512, 32768), "labels": (512,)}))
+
+
+# ---------------------------------------------------------------------------
+# Level 2 — fusable operation sequences
+# ---------------------------------------------------------------------------
+
+_add(Workload(
+    name="L2/swiglu", level=2, op="swiglu",
+    description="SwiGLU gate fusion: silu(g) * u (Liger-style fusion target)",
+    ref_fn=lambda gate, up: ref.swish(gate) * up,
+    input_fn=lambda rng: {"gate": randn(rng, (4096, 2048)),
+                          "up": randn(rng, (4096, 2048))},
+    input_shapes={"gate": (4096, 2048), "up": (4096, 2048)}))
+
+_add(Workload(
+    name="L2/attention_gqa", level=2, op="attention",
+    description="causal GQA attention block, S=1024 H=8 KV=2 (starcoder2-ish)",
+    ref_fn=lambda q, k, v: ref.attention(q, k, v, causal=True),
+    input_fn=lambda rng: {"q": randn(rng, (2, 1024, 8, 64), 4.0),
+                          "k": randn(rng, (2, 1024, 2, 64), 4.0),
+                          "v": randn(rng, (2, 1024, 2, 64))},
+    input_shapes={"q": (2, 1024, 8, 64), "k": (2, 1024, 2, 64),
+                  "v": (2, 1024, 2, 64)}))
+
+_add(Workload(
+    name="L2/attention_mha", level=2, op="attention",
+    description="causal MHA, S=2048 H=8 (whisper/yi head shapes)",
+    ref_fn=lambda q, k, v: ref.attention(q, k, v, causal=True),
+    input_fn=lambda rng: {"q": randn(rng, (1, 2048, 8, 64), 4.0),
+                          "k": randn(rng, (1, 2048, 8, 64), 4.0),
+                          "v": randn(rng, (1, 2048, 8, 64))},
+    input_shapes={"q": (1, 2048, 8, 64), "k": (1, 2048, 8, 64),
+                  "v": (1, 2048, 8, 64)}))
+
+_add(Workload(
+    name="L2/softmax_wide", level=2, op="softmax",
+    description="attention-logit-shaped softmax (rows=4096, cols=4096)",
+    ref_fn=lambda x: ref.softmax(x),
+    input_fn=lambda rng: {"x": randn(rng, (4096, 4096), scale=40.0)},
+    input_shapes={"x": (4096, 4096)}))
+
+def _ssd_ref(x, a, b, c):
+    y, _ = ref.ssd(x, a, b, c)
+    return y
+
+
+_add(Workload(
+    name="L2/ssd_scan", level=2, op="ssd",
+    description="Mamba2 SSD over T=1024 (zamba2 head geometry): the agent "
+                "must discover the chunk-parallel matrix form (§Perf B1)",
+    arch_tag="zamba2-7b",
+    ref_fn=_ssd_ref,
+    input_fn=lambda rng: {
+        "x": randn(rng, (2, 1024, 4, 64)),
+        "a": jnp.asarray(rng.uniform(0.5, 0.999, (2, 1024, 4)), jnp.float32),
+        "b": randn(rng, (2, 1024, 4, 16)),
+        "c": randn(rng, (2, 1024, 4, 16))},
+    input_shapes={"x": (2, 1024, 4, 64), "a": (2, 1024, 4),
+                  "b": (2, 1024, 4, 16), "c": (2, 1024, 4, 16)},
+    tol=5e-3))
+
+
+_add(Workload(
+    name="L2/xent_moonshot", level=2, op="xent",
+    description="LM loss over moonshot's 163840 vocab (chunked logsumexp)",
+    ref_fn=lambda logits, labels: ref.softmax_xent(logits, labels),
+    input_fn=lambda rng: {
+        "logits": randn(rng, (128, 163840), scale=30.0),
+        "labels": jnp.asarray(rng.integers(0, 163840, (128,)), jnp.int32)},
+    input_shapes={"logits": (128, 163840), "labels": (128,)},
+    arch_tag="moonshot-v1-16b-a3b"))
+
+
+# ---------------------------------------------------------------------------
+# Level 3 — architecture blocks from the assigned archs
+# ---------------------------------------------------------------------------
+
+def _attn_block_ref(x, g, wq, wk, wv, wo):
+    h = ref.rmsnorm(x[0], g)
+    q = jnp.einsum("sd,dhk->shk", h, wq)[None]
+    k = jnp.einsum("sd,dhk->shk", h, wk)[None]
+    v = jnp.einsum("sd,dhk->shk", h, wv)[None]
+    o = ref.attention(q, k, v, causal=True)[0]
+    return x[0] + jnp.einsum("shk,hkd->sd", o, wo)
+
+
+_add(Workload(
+    name="L3/starcoder2_attn_block", level=3, op="attention",
+    description="full pre-norm GQA attention block (starcoder2-7b reduced)",
+    arch_tag="starcoder2-7b",
+    ref_fn=_attn_block_ref,
+    input_fn=lambda rng: {
+        "x": randn(rng, (1, 1024, 256)),
+        "g": randn(rng, (256,), 0.5),
+        "wq": randn(rng, (256, 8, 64), 0.05),
+        "wk": randn(rng, (256, 2, 64), 0.05),
+        "wv": randn(rng, (256, 2, 64), 0.05),
+        "wo": randn(rng, (8, 64, 256), 0.05)},
+    input_shapes={"x": (1, 1024, 256)}, tol=5e-3))
+
+
+def _mlp_block_ref(x, g, wg, wu, wd):
+    h = ref.rmsnorm(x, g)
+    return x + ref.swiglu(h, wg, wu, wd)
+
+
+_add(Workload(
+    name="L3/yi_mlp_block", level=3, op="swiglu",
+    description="pre-norm SwiGLU MLP block (yi-34b reduced ratio)",
+    arch_tag="yi-34b",
+    ref_fn=_mlp_block_ref,
+    input_fn=lambda rng: {
+        "x": randn(rng, (2048, 512)),
+        "g": randn(rng, (512,), 0.5),
+        "wg": randn(rng, (512, 1408), 0.05),
+        "wu": randn(rng, (512, 1408), 0.05),
+        "wd": randn(rng, (1408, 512), 0.05)},
+    input_shapes={"x": (2048, 512), "gate": (2048, 1408),
+                  "up": (2048, 1408)}, tol=5e-3))
+
+
+def _lm_head_ref(x, w, labels):
+    return ref.softmax_xent(jnp.dot(x, w, preferred_element_type=jnp.float32),
+                            labels)
+
+
+_add(Workload(
+    name="L3/qwen_lm_head", level=3, op="xent",
+    description="fused LM head + CE over qwen2's 151936 vocab",
+    arch_tag="qwen2-moe-a2.7b",
+    ref_fn=_lm_head_ref,
+    input_fn=lambda rng: {
+        "x": randn(rng, (128, 512), 1.0),
+        "w": randn(rng, (512, 151936 + 2 * 1024 - 151936 % (2 * 1024)), 0.2),
+        "labels": jnp.asarray(rng.integers(0, 151936, (128,)), jnp.int32)},
+    input_shapes={"logits": (128, 153600), "labels": (128,)}))
+
+
+_add(Workload(
+    name="L3/phi3_gemm_stack", level=3, op="matmul",
+    description="qkv-projection GEMM at phi3-medium geometry (5120->7680)",
+    arch_tag="phi3-medium-14b",
+    ref_fn=lambda a, b: ref.matmul(a, b),
+    input_fn=lambda rng: {"a": randn(rng, (2048, 1280), 0.05),
+                          "b": randn(rng, (1280, 1920), 0.05)},
+    input_shapes={"a": (2048, 1280), "b": (1280, 1920)}, tol=5e-3))
+
+
+def workload_for_candidate_inputs(wl: Workload, inputs: Dict):
+    """Extract the arrays a candidate callable consumes, by op family."""
+    if wl.op == "attention" and "wq" in inputs:
+        h = ref.rmsnorm(inputs["x"][0], inputs["g"])
+        q = jnp.einsum("sd,dhk->shk", h, inputs["wq"])[None]
+        k = jnp.einsum("sd,dhk->shk", h, inputs["wk"])[None]
+        v = jnp.einsum("sd,dhk->shk", h, inputs["wv"])[None]
+        return {"q": q, "k": k, "v": v}
+    if wl.op == "swiglu" and "wg" in inputs:
+        h = ref.rmsnorm(inputs["x"], inputs["g"])
+        return {"gate": jnp.dot(h, inputs["wg"]),
+                "up": jnp.dot(h, inputs["wu"])}
+    if wl.op == "xent" and "w" in inputs:
+        return {"logits": jnp.dot(inputs["x"], inputs["w"],
+                                  preferred_element_type=jnp.float32),
+                "labels": inputs["labels"]}
+    return inputs
+
+
+def finish_candidate_output(wl: Workload, inputs: Dict, out):
+    """Complete the surrounding block math for L3 workloads."""
+    if wl.op == "attention" and "wq" in inputs:
+        return inputs["x"][0] + jnp.einsum("shk,hkd->sd", out[0], inputs["wo"])
+    if wl.op == "swiglu" and "wg" in inputs:
+        return inputs["x"] + jnp.dot(out, inputs["wd"],
+                                     preferred_element_type=jnp.float32
+                                     ).astype(inputs["x"].dtype)
+    return out

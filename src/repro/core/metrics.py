@@ -1,0 +1,42 @@
+"""fast_p metric (paper §4.2) and result aggregation."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.states import EvalResult, ExecutionState
+
+
+def fast_p(results: Iterable[EvalResult], p: float) -> float:
+    """Fraction of problems correct AND speedup > p. fast_0 = correctness."""
+    results = list(results)
+    if not results:
+        return 0.0
+    hits = 0
+    for r in results:
+        if not r.correct:
+            continue
+        if p <= 0:
+            hits += 1
+            continue
+        sp = r.speedup
+        if sp is not None and sp > p:
+            hits += 1
+    return hits / len(results)
+
+
+def fast_p_curve(results: Iterable[EvalResult],
+                 ps=(0.0, 0.5, 1.0, 1.5, 2.0)) -> Dict[float, float]:
+    results = list(results)
+    return {p: fast_p(results, p) for p in ps}
+
+
+def state_histogram(results: Iterable[EvalResult]) -> Dict[str, int]:
+    hist: Dict[str, int] = {s.value: 0 for s in ExecutionState}
+    for r in results:
+        hist[r.state.value] += 1
+    return {k: v for k, v in hist.items() if v}
+
+
+def speedup_distribution(results: Iterable[EvalResult]) -> List[float]:
+    """Continuous speedups (the finer-grained view the paper's §8 asks for)."""
+    return sorted(r.speedup for r in results if r.correct and r.speedup)

@@ -1,0 +1,79 @@
+"""Prompt templates for the LLM backends (paper Listing 1 and §3.2).
+
+Plain ``str.format`` stands in for Jinja2 (same fields as the paper's
+template); the offline template-search backend consumes the same structured
+fields, so the prompt is the single source of task context either way.
+"""
+from __future__ import annotations
+
+SYNTHESIS_TEMPLATE = """\
+You write custom {accelerator} kernels to replace the JAX/XLA operators in
+the given workload to get speedups.
+
+Here's an example to show you the syntax of a custom {accelerator} kernel
+(jax.experimental.pallas, pl.pallas_call with explicit BlockSpec VMEM
+tiling), its scheduling logic and jit integration:
+
+{example_src}
+
+You are given the following workload (reference implementation in pure
+jax.numpy — treat it as the correctness oracle):
+
+{workload_src}
+{reference_block}
+Optimize the workload named {workload_name} with a custom {accelerator}
+kernel. Pay attention to VMEM working-set size (<= 128 MiB), MXU tile
+alignment (128x128), and numerical stability for large-magnitude inputs.
+{feedback_block}
+Output the new code in codeblocks. The code must define a function
+`candidate(*inputs)` returning the workload output.
+"""
+
+REFERENCE_BLOCK = """
+A functionally correct implementation for a different accelerator ({ref_platform})
+is provided as a reference — the parallel decomposition transfers even though
+the tiling must be re-derived for the target:
+
+{ref_src}
+"""
+
+FEEDBACK_BLOCK = """
+Your previous attempt produced:
+
+{prev_result}
+
+Previous program:
+
+{prev_src}
+
+Fix the error if any; otherwise improve performance guided by:
+{recommendation}
+"""
+
+ANALYSIS_TEMPLATE = """\
+You are a TPU performance engineer. Below are profiling artifacts for a
+kernel candidate: the roofline terms (compute / HBM / interconnect seconds),
+the tiling parameters, and the optimized-HLO collective summary.
+
+Profile:
+{profile_json}
+
+Identify the SINGLE change most likely to improve performance, and reply
+with one actionable recommendation (one sentence, name the parameter and
+target value).
+"""
+
+
+def render_synthesis(accelerator: str, example_src: str, workload_src: str,
+                     workload_name: str, *, ref_src: str = "",
+                     ref_platform: str = "CUDA", prev_src: str = "",
+                     prev_result: str = "", recommendation: str = "") -> str:
+    ref_block = REFERENCE_BLOCK.format(
+        ref_platform=ref_platform, ref_src=ref_src) if ref_src else ""
+    fb = FEEDBACK_BLOCK.format(prev_result=prev_result, prev_src=prev_src,
+                               recommendation=recommendation or "(none)") \
+        if prev_src or prev_result else ""
+    return SYNTHESIS_TEMPLATE.format(
+        accelerator=accelerator, example_src=example_src,
+        workload_src=workload_src, workload_name=workload_name,
+        reference_block=ref_block, feedback_block=fb)

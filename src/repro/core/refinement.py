@@ -1,0 +1,112 @@
+"""The KForge iterative loop (paper Figure 1).
+
+Two phases per workload:
+  1. functional pass — regenerate until the candidate compiles, runs, and
+     matches the oracle (bounded by ``num_iterations``);
+  2. optimization pass — feed agent G's single recommendation back into
+     agent F; keep the best verified candidate.
+
+Detailed per-iteration logs are retained (paper §3.3 'we save detailed logs
+for each workload').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core import candidates as cand_mod
+from repro.core.analysis import Recommendation, RuleBasedAnalyzer
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.synthesis import Generation, TemplateSearchBackend
+from repro.core.verification import verify
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class IterationLog:
+    iteration: int
+    phase: str                       # functional | optimization
+    candidate_desc: Optional[str]
+    result: EvalResult
+    recommendation: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RefinementOutcome:
+    workload: str
+    best: Optional[EvalResult]
+    best_candidate: Optional[cand_mod.Candidate]
+    logs: List[IterationLog]
+
+    @property
+    def final(self) -> EvalResult:
+        return self.best if self.best is not None else self.logs[-1].result
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    num_iterations: int = 5          # paper: num_iterations=5
+    use_reference: bool = False      # CUDA-reference configuration (§6.2)
+    use_profiling: bool = False      # profiling-information configuration (§5.2)
+    single_shot: bool = False        # one generation, no refinement
+    seed: int = 0
+
+
+def run_workload(wl: Workload, cfg: LoopConfig, *,
+                 agent=None, analyzer=None) -> RefinementOutcome:
+    agent = agent or TemplateSearchBackend()
+    analyzer = analyzer or RuleBasedAnalyzer()
+    logs: List[IterationLog] = []
+    best: Optional[EvalResult] = None
+    best_cand: Optional[cand_mod.Candidate] = None
+
+    prev: Optional[Generation] = None
+    prev_result: Optional[EvalResult] = None
+    rec: Optional[Recommendation] = None
+
+    iters = 1 if cfg.single_shot else cfg.num_iterations
+    seen: dict = {}
+    for i in range(iters):
+        phase = "functional" if (prev_result is None or
+                                 not prev_result.correct) else "optimization"
+        gen = agent.generate(wl, prev=prev, prev_result=prev_result,
+                             recommendation=rec,
+                             use_reference=cfg.use_reference)
+        if gen.failure or (gen.candidate is None and gen.callable_fn is None):
+            result = EvalResult(ExecutionState.GENERATION_FAILURE,
+                                error=gen.failure or "no candidate")
+            logs.append(IterationLog(i, phase, None, result))
+            prev, prev_result = gen, result
+            continue
+        key = (gen.candidate.op, tuple(sorted(gen.candidate.params.items()))) \
+            if gen.candidate and gen.callable_fn is None else None
+        if key is not None and key in seen:
+            # converged: the agent proposes an already-evaluated candidate
+            logs.append(IterationLog(i, phase, gen.candidate.describe(),
+                                     seen[key], "converged"))
+            break
+        result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
+                        wl, seed=cfg.seed + i, fn=gen.callable_fn)
+        if key is not None:
+            seen[key] = result
+        rec_text = None
+        if result.correct and cfg.use_profiling and not cfg.single_shot:
+            rec = analyzer.analyze(result.profile)
+            rec_text = rec.text
+        elif result.correct:
+            rec = None
+        logs.append(IterationLog(i, phase,
+                                 gen.candidate.describe() if gen.candidate
+                                 else "llm-candidate", result, rec_text))
+        if result.correct and (best is None or
+                               (result.model_time_s or 1e9) <
+                               (best.model_time_s or 1e9)):
+            best, best_cand = result, gen.candidate
+        prev, prev_result = gen, result
+
+    return RefinementOutcome(workload=wl.name, best=best,
+                             best_candidate=best_cand, logs=logs)
+
+
+def run_suite(workloads, cfg: LoopConfig, **kw) -> List[RefinementOutcome]:
+    return [run_workload(wl, cfg, **kw) for wl in workloads]

@@ -1,0 +1,52 @@
+"""Execution states and evaluation results (paper §3.3).
+
+Five terminal states per generation-evaluation iteration, mapped to JAX:
+  generation failure   — backend produced no usable candidate
+  compilation failure  — trace/lower/Mosaic error while jitting
+  runtime error        — exception while executing the compiled program
+  numeric/shape mismatch — outputs differ from the ref.py oracle
+  correct              — shapes, dtypes and values match
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, Optional
+
+
+class ExecutionState(enum.Enum):
+    GENERATION_FAILURE = "generation_failure"
+    COMPILATION_FAILURE = "compilation_failure"
+    RUNTIME_ERROR = "runtime_error"
+    NUMERIC_MISMATCH = "numeric_mismatch"
+    CORRECT = "correct"
+
+
+@dataclasses.dataclass
+class EvalResult:
+    state: ExecutionState
+    error: Optional[str] = None
+    # performance numbers (only meaningful when state == CORRECT)
+    wall_time_s: Optional[float] = None        # measured (CPU/interpret)
+    model_time_s: Optional[float] = None       # analytic TPU roofline estimate
+    baseline_model_time_s: Optional[float] = None
+    max_abs_err: Optional[float] = None
+    profile: Optional[Dict[str, Any]] = None   # fed to the analysis agent
+
+    @property
+    def correct(self) -> bool:
+        return self.state is ExecutionState.CORRECT
+
+    @property
+    def speedup(self) -> Optional[float]:
+        """Model-roofline speedup of candidate vs. the naive baseline."""
+        if not self.correct or not self.model_time_s:
+            return None
+        return self.baseline_model_time_s / self.model_time_s
+
+    def feedback(self) -> str:
+        """The message appended to the next generation prompt (paper §3)."""
+        if self.state is ExecutionState.CORRECT:
+            return (f"correct; model_time={self.model_time_s:.3e}s "
+                    f"speedup={self.speedup:.2f}x")
+        return f"{self.state.value}: {self.error or 'unknown'}"

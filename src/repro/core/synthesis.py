@@ -1,0 +1,208 @@
+"""Generation agent F (paper §3.1): ``F : (p, k_{t-1}, r_{t-1}) -> k_t``.
+
+Backends behind one protocol:
+
+* ``TemplateSearchBackend`` — the offline deterministic synthesizer. It
+  explores the same candidate space an LLM navigates (tiling, vectorization,
+  online-softmax strategy, fusion), consuming the same feedback strings: on
+  a failure it repairs the specific error (functional pass); on a
+  recommendation from agent G it applies the suggested parameter change,
+  falling back to the best predicted mutation (optimization pass).
+
+* ``LLMBackend`` — builds the paper's prompt (core/prompts.py) and calls a
+  user-supplied ``complete(prompt) -> str``; the returned code block is
+  exec'd in a restricted namespace to recover ``candidate(*inputs)``. This
+  is the production path; offline it yields GENERATION_FAILURE unless a
+  completion function (or canned transcript) is supplied.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Protocol, Tuple
+
+from repro.core import candidates as cand_mod
+from repro.core import oneshot, prompts, transfer
+from repro.core.analysis import Recommendation
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.workload import Workload
+
+
+@dataclasses.dataclass
+class Generation:
+    """One synthesis result: a candidate and/or source, or a failure."""
+    candidate: Optional[cand_mod.Candidate] = None
+    source: Optional[str] = None
+    callable_fn: Optional[Callable] = None
+    failure: Optional[str] = None
+
+
+class GenerationAgent(Protocol):
+    def generate(self, wl: Workload, *, prev: Optional[Generation],
+                 prev_result: Optional[EvalResult],
+                 recommendation: Optional[Recommendation],
+                 use_reference: bool) -> Generation:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Offline deterministic backend
+# ---------------------------------------------------------------------------
+
+
+class TemplateSearchBackend:
+    """Deterministic agent over the Pallas candidate space."""
+
+    def generate(self, wl: Workload, *, prev: Optional[Generation] = None,
+                 prev_result: Optional[EvalResult] = None,
+                 recommendation: Optional[Recommendation] = None,
+                 use_reference: bool = False) -> Generation:
+        if wl.op not in cand_mod.SPACES:
+            return Generation(failure=f"no template family for op {wl.op!r}")
+        if prev is None or prev.candidate is None:
+            cand = cand_mod.initial_candidate(wl.op,
+                                              use_reference=use_reference)
+            return Generation(candidate=cand, source=cand.describe())
+
+        cand = prev.candidate
+        state = prev_result.state if prev_result else None
+
+        # ---- functional pass: repair the reported failure -----------------
+        if state in (ExecutionState.COMPILATION_FAILURE,
+                     ExecutionState.RUNTIME_ERROR):
+            fixed = self._repair_shapes(cand, wl, prev_result.error or "")
+            if fixed is not None:
+                return Generation(candidate=fixed, source=fixed.describe())
+            return Generation(failure=f"cannot repair: {prev_result.error}")
+        if state is ExecutionState.NUMERIC_MISMATCH:
+            err = (prev_result.error or "")
+            if ("non-finite" in err or "inf" in err or "nan" in err.lower()) \
+                    and "online" in cand_mod.SPACES[wl.op]:
+                p = dict(cand.params)
+                p["online"] = True  # numerically-stable strategy
+                fixed = cand_mod.Candidate(wl.op, p)
+                fixed = self._repair_shapes(fixed, wl, "") or fixed
+                return Generation(candidate=fixed, source=fixed.describe())
+            return Generation(failure=f"cannot repair numerics: {err}")
+
+        # ---- optimization pass ---------------------------------------------
+        if recommendation is not None and recommendation.param:
+            nxt = recommendation.apply(cand)
+            nxt = self._repair_shapes(nxt, wl, "") or nxt
+            if self._legal(nxt, wl) and nxt.params != cand.params:
+                return Generation(candidate=nxt, source=nxt.describe())
+        # fall back: best predicted single mutation
+        shapes = {k: tuple(v) for k, v in wl.input_shapes.items()}
+        best, best_t = None, cand_mod.model_time(cand, shapes) \
+            if self._legal(cand, wl) else float("inf")
+        for _, mut in cand_mod.mutations(cand).items():
+            if not self._legal(mut, wl):
+                continue
+            t = cand_mod.model_time(mut, shapes)
+            if t < best_t:
+                best, best_t = mut, t
+        if best is not None:
+            return Generation(candidate=best, source=best.describe())
+        return Generation(candidate=cand, source=cand.describe())
+
+    # -- legality helpers -----------------------------------------------------
+
+    def _dims_for(self, wl: Workload):
+        first = next(iter(wl.input_shapes.values()))
+        return first
+
+    def _legal(self, cand: cand_mod.Candidate, wl: Workload) -> bool:
+        return self._repair_shapes(cand, wl, "", check_only=True) is not None
+
+    def _repair_shapes(self, cand, wl, error: str, check_only=False):
+        """Snap block params to divisors of the workload dims."""
+        dims = dict(wl.input_shapes)
+        key0 = next(iter(dims.values()))
+        gate = dims.get("gate", key0)
+        pairs = {
+            "block_rows": gate[0] if cand.op == "swiglu" else key0[0],
+            "block_lanes": key0[-1],
+            "block_cols": gate[-1], "block_t": key0[0],
+            "block_m": dims.get("a", key0)[0],
+            "block_k": (dims.get("a", key0)[-1] if cand.op == "matmul"
+                        else dims.get("k", key0)[1] if "k" in dims else
+                        key0[-1]),
+            "block_n": dims.get("b", key0)[-1],
+            "block_q": dims.get("q", key0)[1] if "q" in dims else key0[0],
+            "block_v": dims.get("logits", key0)[-1],
+            "chunk": key0[1] if len(key0) > 1 else key0[0],
+        }
+        params = dict(cand.params)
+        changed = False
+        for k, v in cand.params.items():
+            if not (k.startswith("block_") or k == "chunk"):
+                continue
+            dim = pairs.get(k)
+            if dim is None or dim % v == 0:
+                continue
+            if check_only:
+                return None
+            choices = [c for c in cand_mod.SPACES[cand.op][k] if dim % c == 0]
+            if not choices:
+                return None
+            params[k] = max(choices)
+            changed = True
+        if check_only:
+            return cand
+        if not changed:
+            return None
+        return cand_mod.Candidate(cand.op, params)
+
+
+# ---------------------------------------------------------------------------
+# LLM backend (production path; exercised offline via canned completions)
+# ---------------------------------------------------------------------------
+
+_CODE_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
+
+
+class LLMBackend:
+    def __init__(self, complete: Optional[Callable[[str], str]] = None,
+                 accelerator: str = "Pallas TPU"):
+        self.complete = complete
+        self.accelerator = accelerator
+
+    def build_prompt(self, wl: Workload, *, prev: Optional[Generation],
+                     prev_result: Optional[EvalResult],
+                     recommendation: Optional[Recommendation],
+                     use_reference: bool) -> str:
+        ref_src = transfer.reference_source(wl) if use_reference else ""
+        return prompts.render_synthesis(
+            self.accelerator, oneshot.VECTOR_ADD_PALLAS,
+            transfer.workload_source(wl), wl.name,
+            ref_src=ref_src or "", ref_platform="XLA (jax.numpy)",
+            prev_src=(prev.source or "") if prev else "",
+            prev_result=prev_result.feedback() if prev_result else "",
+            recommendation=recommendation.text if recommendation else "")
+
+    def generate(self, wl: Workload, *, prev=None, prev_result=None,
+                 recommendation=None, use_reference=False) -> Generation:
+        prompt = self.build_prompt(wl, prev=prev, prev_result=prev_result,
+                                   recommendation=recommendation,
+                                   use_reference=use_reference)
+        if self.complete is None:
+            return Generation(failure="no completion backend configured "
+                                      "(offline)")
+        try:
+            reply = self.complete(prompt)
+        except Exception as exc:  # noqa: BLE001 — network errors etc.
+            return Generation(failure=f"model call failed: {exc}")
+        m = _CODE_RE.search(reply or "")
+        if not m:
+            return Generation(failure="reply contains no code block")
+        src = m.group(1)
+        ns: dict = {}
+        try:
+            exec(compile(src, f"<kforge:{wl.name}>", "exec"), ns)  # noqa: S102
+        except Exception as exc:  # noqa: BLE001
+            return Generation(source=src, failure=f"exec failed: {exc}")
+        fn = ns.get("candidate")
+        if fn is None:
+            return Generation(source=src,
+                              failure="no `candidate` function defined")
+        return Generation(source=src, callable_fn=fn)

@@ -1,0 +1,46 @@
+"""Cross-platform reference-implementation registry (paper §6.2).
+
+The paper shows that a correct CUDA kernel substantially improves Metal
+synthesis. The TPU mapping: the "other platform" is XLA — the pure-jnp
+oracle source (plus any known-good Pallas kernel for the same family) is
+injected into the synthesis prompt, and teaches the offline search backend
+the correct *strategy* (online softmax, fusion) via candidates.REFERENCE_HINTS.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional
+
+from repro.core.workload import Workload
+from repro.kernels import ref as ref_mod
+
+_REF_SOURCES = {
+    "swish": "swish",
+    "softmax": "softmax",
+    "rmsnorm": "rmsnorm",
+    "matmul": "matmul",
+    "swiglu": "swiglu",
+    "attention": "attention",
+    "xent": "softmax_xent",
+}
+
+
+def reference_source(wl: Workload) -> Optional[str]:
+    """Source text of the reference implementation for the prompt."""
+    name = _REF_SOURCES.get(wl.op)
+    if name is None:
+        return None
+    fn = getattr(ref_mod, name, None)
+    if fn is None:
+        return None
+    try:
+        return inspect.getsource(fn)
+    except OSError:
+        return None
+
+
+def workload_source(wl: Workload) -> str:
+    try:
+        return inspect.getsource(wl.ref_fn)
+    except (OSError, TypeError):
+        return f"# {wl.name}: {wl.description}\n# oracle: kernels/ref.py::{wl.op}"

@@ -1,0 +1,116 @@
+"""Program verification (paper §3.3): classify each candidate into one of the
+five execution states and measure its performance.
+
+Inputs are re-randomized on every call (fresh seed), so constant-output
+"cheating" candidates (paper §7.3) are caught as numeric mismatches instead
+of surviving evaluation.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import candidates as cand_mod
+from repro.core import kernelbench as kb
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.workload import Workload
+
+_TRACE_ERRORS = (TypeError, ValueError, AssertionError, KeyError,
+                 IndexError, NotImplementedError)
+
+
+def verify(candidate: cand_mod.Candidate, wl: Workload, *,
+           seed: Optional[int] = None, measure_wall: bool = False,
+           fn: Optional[Callable] = None) -> EvalResult:
+    """Run the verification pipeline for one candidate against one workload."""
+    seed = int(time.time_ns() % (2 ** 31)) if seed is None else seed
+    inputs = wl.inputs(seed)
+    kernel_inputs = kb.workload_for_candidate_inputs(wl, inputs)
+    shapes = {k: tuple(v.shape) for k, v in kernel_inputs.items()}
+
+    # -- generation state handled by the caller; here candidate exists -------
+    if fn is None:
+        try:
+            fn = cand_mod.materialize(candidate)
+        except Exception as exc:  # noqa: BLE001
+            return EvalResult(ExecutionState.GENERATION_FAILURE,
+                              error=f"{type(exc).__name__}: {exc}")
+
+    # -- compilation: trace + lower ------------------------------------------
+    try:
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*kernel_inputs.values())
+        compiled = lowered.compile()
+    except _TRACE_ERRORS as exc:
+        return EvalResult(ExecutionState.COMPILATION_FAILURE,
+                          error=f"{type(exc).__name__}: {exc}")
+    except Exception as exc:  # noqa: BLE001
+        return EvalResult(ExecutionState.COMPILATION_FAILURE,
+                          error=f"{type(exc).__name__}: {exc}")
+
+    # -- runtime ---------------------------------------------------------------
+    try:
+        out = compiled(*kernel_inputs.values())
+        out = jax.block_until_ready(out)
+    except Exception as exc:  # noqa: BLE001
+        return EvalResult(ExecutionState.RUNTIME_ERROR,
+                          error=f"{type(exc).__name__}: {exc}")
+
+    # -- numeric / shape check ---------------------------------------------------
+    expected = wl.reference(inputs)
+    full_out = kb.finish_candidate_output(wl, inputs, out)
+    if tuple(full_out.shape) != tuple(expected.shape):
+        return EvalResult(
+            ExecutionState.NUMERIC_MISMATCH,
+            error=f"shape {tuple(full_out.shape)} != {tuple(expected.shape)}")
+    a = np.asarray(full_out, np.float32)
+    b = np.asarray(expected, np.float32)
+    denom = np.maximum(np.abs(b), 1.0)
+    err = float(np.max(np.abs(a - b) / denom)) if a.size else 0.0
+    if not np.isfinite(a).all():
+        return EvalResult(ExecutionState.NUMERIC_MISMATCH,
+                          error="non-finite values in output", max_abs_err=err)
+    if err > wl.tol:
+        return EvalResult(ExecutionState.NUMERIC_MISMATCH,
+                          error=f"max rel err {err:.2e} > tol {wl.tol:.0e}",
+                          max_abs_err=err)
+
+    # -- performance ----------------------------------------------------------
+    model_t = cand_mod.model_time(candidate, shapes)
+    base_t = cand_mod.baseline_time(candidate.op, shapes)
+    wall = None
+    if measure_wall:
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(compiled(*kernel_inputs.values()))
+        wall = (time.perf_counter() - t0) / 3
+    profile = {
+        "op": candidate.op,
+        "params": dict(candidate.params),
+        "shapes": shapes,
+        "model_time_s": model_t,
+        "baseline_time_s": base_t,
+        "flops": _op_flops(candidate.op, shapes),
+    }
+    return EvalResult(ExecutionState.CORRECT, wall_time_s=wall,
+                      model_time_s=model_t, baseline_model_time_s=base_t,
+                      max_abs_err=err, profile=profile)
+
+
+def _op_flops(op: str, shapes) -> float:
+    if op == "matmul":
+        m, k = shapes["a"]
+        n = shapes["b"][1]
+        return 2.0 * m * n * k
+    if op == "attention":
+        b, sq, h, d = shapes["q"]
+        sk = shapes["k"][1]
+        return 2.0 * b * h * sq * sk * d
+    first = next(iter(shapes.values()))
+    n = 1
+    for d in first:
+        n *= d
+    return float(4 * n)

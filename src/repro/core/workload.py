@@ -1,0 +1,39 @@
+"""Kernel workloads: the KForge task definition.
+
+A workload is one benchmark problem: an oracle (the 'PyTorch module' of
+KernelBench, here a pure-jnp reference), an input generator, the op family
+the generation agent targets, and a difficulty level (paper §4.1):
+  L1 — single primitives, L2 — fusable operation sequences,
+  L3 — architecture blocks from the assigned archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    level: int                      # 1 | 2 | 3
+    op: str                         # candidate op family (candidates.SPACES)
+    ref_fn: Callable                # oracle
+    input_fn: Callable              # rng -> dict of named arrays
+    input_shapes: Dict[str, Tuple[int, ...]]
+    tol: float = 2e-3
+    description: str = ""
+    arch_tag: Optional[str] = None  # assigned architecture it derives from
+
+    def inputs(self, seed: int = 0) -> Dict[str, jax.Array]:
+        return self.input_fn(np.random.default_rng(seed))
+
+    def reference(self, inputs: Dict[str, jax.Array]) -> jax.Array:
+        return self.ref_fn(**inputs)
+
+
+def randn(rng, shape, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots, plus jnp oracles.
+
+Layout (per the repo convention):
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrappers (impl switching, padding, custom_vjp)
+  ref.py    — pure-jnp oracles used by tests and by KForge as the
+              cross-platform reference implementations
+"""
+from repro.kernels import ops, ref  # noqa: F401

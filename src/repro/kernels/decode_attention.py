@@ -1,0 +1,98 @@
+"""Flash-decode Pallas kernel: one query token vs. a long KV cache.
+
+The query head group belonging to each KV head is processed together
+(q reshaped to (B, KV, G, D)), so GQA costs one cache read per KV head.
+The cache-sequence loop is the innermost grid dimension with online-softmax
+accumulators in VMEM scratch. Positions >= lengths[b] are masked, so the
+same kernel serves ragged batches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, block_k: int,
+                   n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0, 0]
+    k_start = ik * block_k
+
+    @pl.when(k_start < length)
+    def _update():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)      # (G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]
+        l_prev = l_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True), l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        out_ref[0, 0, :, :] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, scale: float | None = None,
+                     block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """q (B, 1, H, D); caches (B, S, KV, D); lengths (B,). Returns (B,1,H,D)."""
+    b, one, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    assert one == 1 and h % kv == 0 and s % block_k == 0
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kv, g, d)
+    lengths2 = lengths.reshape(b, 1).astype(jnp.int32)
+    n_k = s // block_k
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          n_k=n_k),
+        grid=(b, kv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, _LANES), jnp.float32),
+            pltpu.VMEM((g, _LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths2, qg, k_cache, v_cache)
+    return out.reshape(b, 1, h, d)

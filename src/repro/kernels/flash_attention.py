@@ -1,0 +1,119 @@
+"""Causal GQA flash attention (forward) as a Pallas TPU kernel.
+
+TPU adaptation of FlashAttention: online softmax over KV tiles streamed
+HBM→VMEM, f32 accumulators in VMEM scratch, MXU-aligned (block_q × head_dim)
+and (block_k × head_dim) tiles. The KV tile loop is the innermost
+(sequential) grid dimension so scratch accumulators persist across it.
+
+GQA is handled in the BlockSpec index maps: query head h reads KV head
+h // (H // KV) — no jnp.repeat materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int, seq_k: int, seq_q: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q + (seq_k - seq_q)  # causal offset for Sq < Sk
+    k_start = ik * block_k
+
+    def _update():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)      # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            mask = kpos <= qpos
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]                          # (bq, 1)
+        l_prev = l_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = jnp.broadcast_to(alpha * l_prev +
+                                      jnp.sum(p, axis=-1, keepdims=True),
+                                      l_ref.shape)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if causal:
+        # Skip KV tiles entirely above the diagonal.
+        pl.when(k_start <= q_start + block_q - 1)(_update)
+    else:
+        _update()
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        out_ref[0, :, 0, :] = (acc_ref[...] / l).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q (B, Sq, H, D); k/v (B, Sk, KV, D); KV divides H. Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0 and sq % block_q == 0 and sk % block_k == 0
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    n_k = sk // block_k
+    grid = (b, h, sq // block_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k=n_k, seq_k=sk, seq_q=sq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // group, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

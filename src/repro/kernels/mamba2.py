@@ -1,0 +1,63 @@
+"""Mamba2 SSD recurrence as a chunked Pallas TPU kernel.
+
+Per (batch, head): state H ∈ R^{P×N} persists in VMEM scratch across the
+sequential chunk grid dimension:
+
+    H_t = a_t · H_{t-1} + x_t ⊗ b_t
+    y_t = H_t c_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    def step(t, _):
+        xt = x_ref[0, t, 0, :].astype(jnp.float32)      # (P,)
+        at = a_ref[0, t, 0].astype(jnp.float32)         # scalar
+        bt = b_ref[0, t, 0, :].astype(jnp.float32)      # (N,)
+        ct = c_ref[0, t, 0, :].astype(jnp.float32)      # (N,)
+        s = at * s_ref[...] + xt[:, None] * bt[None, :]
+        s_ref[...] = s
+        y_ref[0, t, 0, :] = jnp.sum(s * ct[None, :], axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+        chunk: int = 256, interpret: bool = True) -> jax.Array:
+    """x (B,T,H,P); a (B,T,H); b/c (B,T,H,N). Returns y (B,T,H,P) f32."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0
+    grid = (bsz, h, t // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, h, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, a, b, c)

@@ -1,0 +1,57 @@
+"""Tiled matmul Pallas kernel (MXU-aligned, f32 VMEM accumulator)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _store():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: bool = True) -> jax.Array:
+    """C = A @ B with (block_m, block_n, block_k) VMEM tiles.
+
+    A (M, K), B (K, N); M/N/K must be divisible by the block sizes
+    (the ops.py wrapper pads otherwise).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,494 @@
+"""Public kernel API: jit'd wrappers around the Pallas kernels.
+
+Every op takes ``impl`` ∈ {"auto", "pallas", "xla", "ref"}:
+
+* ``pallas`` — the Pallas TPU kernel (interpret-mode automatically when not
+  on a TPU backend, so the same call validates on CPU).
+* ``xla``    — a memory-efficient pure-XLA implementation (chunked online
+  softmax for attention, chunked log-sum-exp for the LM loss). This is the
+  path the multi-pod dry-run lowers, and the "other platform" reference in
+  KForge's cross-platform-transfer sense.
+* ``ref``    — the naive oracle from :mod:`repro.kernels.ref`.
+* ``auto``   — pallas on TPU, xla elsewhere.
+
+Training gradients: :func:`attention` wraps the Pallas forward in a
+``jax.custom_vjp`` whose backward recomputes via the chunked XLA
+implementation (flash-style recompute; no S×S residuals are saved).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2 as _mamba2
+from repro.kernels import matmul as _matmul
+from repro.kernels import rmsnorm as _rmsnorm
+from repro.kernels import rope as _rope
+from repro.kernels import rwkv6 as _rwkv6
+from repro.kernels import softmax as _softmax
+from repro.kernels import swiglu as _swiglu
+from repro.kernels import swish as _swish
+from repro.kernels import xent as _xent
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if on_tpu() else "xla"
+    return impl
+
+
+def _pad_rows(x: jax.Array, mult: int):
+    t = x.shape[0]
+    pad = (-t) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, t
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / norm ops
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-5, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        x2, t = _pad_rows(x2, 256)
+        out = _rmsnorm.rmsnorm(x2, gamma, eps=eps, interpret=_interpret())
+        return out[:t].reshape(shape)
+    return ref.rmsnorm(x, gamma, eps)
+
+
+def swish(x, *, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        shape = x.shape
+        x2 = x.reshape(-1)
+        n = x2.shape[0]
+        pad = (-n) % (8 * 512)
+        x2 = jnp.pad(x2, (0, pad)).reshape(-1, 512)
+        out = _swish.swish(x2, interpret=_interpret())
+        return out.reshape(-1)[:n].reshape(shape)
+    return ref.swish(x)
+
+
+def softmax(x, *, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        x2, t = _pad_rows(x2, 128)
+        out = _softmax.softmax(x2, interpret=_interpret())
+        return out[:t].reshape(shape)
+    return ref.softmax(x)
+
+
+def swiglu_act(gate, up, *, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        shape = gate.shape
+        g2 = gate.reshape(-1, shape[-1])
+        u2 = up.reshape(-1, shape[-1])
+        g2, t = _pad_rows(g2, 128)
+        u2, _ = _pad_rows(u2, 128)
+        f = shape[-1]
+        bc = 512 if f % 512 == 0 else f
+        out = _swiglu.swiglu_act(g2, u2, block_cols=bc, interpret=_interpret())
+        return out[:t].reshape(shape)
+    return ref.swish(gate) * up
+
+
+def matmul(a, b, *, impl: str = "auto", block_m=128, block_n=128, block_k=128):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        m, k = a.shape
+        _, n = b.shape
+        pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
+        a2 = jnp.pad(a, ((0, pm), (0, pk)))
+        b2 = jnp.pad(b, ((0, pk), (0, pn)))
+        out = _matmul.matmul(a2, b2, block_m=block_m, block_n=block_n,
+                             block_k=block_k, interpret=_interpret())
+        return out[:m, :n]
+    return ref.matmul(a, b)
+
+
+def rope(x, positions, *, theta: float = 10_000.0, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas" and x.shape[1] % 256 == 0:
+        return _rope.rope(x, positions.astype(jnp.int32), theta=theta,
+                          interpret=_interpret())
+    return ref.rope(x, positions, theta)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def xla_full_attention(q, k, v, *, causal: bool = True,
+                       scale: Optional[float] = None) -> jax.Array:
+    """Materialized (quadratic) attention in pure XLA, f32 softmax.
+
+    Best choice for TRAINING at moderate sequence lengths: a single MXU dot
+    with heads TP-sharded, no scan carries saved for backward (the enclosing
+    layer remat recomputes it). Peak transient = (B, H, Sq, Sk) f32 / TP."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    kx = ref._expand_kv(k, h)
+    vx = ref._expand_kv(v, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kx,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = jnp.arange(sq) + (sk - sq)
+        mask = jnp.arange(sk)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None], s, _fa.NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vx,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def xla_chunked_attention(q, k, v, *, causal: bool = True,
+                          scale: Optional[float] = None,
+                          chunk: int = 1024) -> jax.Array:
+    """Memory-efficient attention in pure XLA: lax.scan over KV chunks with
+    online softmax. Peak live logits: (B, H, Sq, chunk); f32 accumulators.
+
+    GQA expands KV heads per streamed chunk (keeps the head axis intact so
+    TP sharding propagates without involuntary resharding — a (KV, G)
+    reshape of an H-sharded axis forces SPMD rematerialization)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, sk)
+    while sk % chunk:  # largest divisor of sk <= requested chunk
+        chunk -= 1
+    n_chunks = sk // chunk
+
+    qf = q.astype(jnp.float32) * scale                      # (B, Sq, H, D)
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    def body(carry, ic):
+        m_prev, l_prev, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ic * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ic * chunk, chunk, axis=1)
+        if g > 1:
+            ks = jnp.repeat(ks, g, axis=2)
+            vs = jnp.repeat(vs, g, axis=2)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, ks.astype(jnp.float32))
+        if causal:
+            k_pos = ic * chunk + jnp.arange(chunk)
+            mask = k_pos[None, :] <= q_pos[:, None]          # (Sq, chunk)
+            s = jnp.where(mask[None, None], s, _fa.NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        if causal:
+            p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, h, sq), _fa.NEG_INF, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _pallas_attention(q, k, v, causal, scale):
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=_interpret())
+
+
+def _pallas_attention_fwd(q, k, v, causal, scale):
+    return _pallas_attention(q, k, v, causal, scale), (q, k, v)
+
+
+def _pallas_attention_bwd(causal, scale, res, g):
+    q, k, v = res
+    # Flash-style recompute backward via the chunked XLA implementation.
+    _, vjp = jax.vjp(
+        lambda q, k, v: xla_chunked_attention(q, k, v, causal=causal,
+                                              scale=scale), q, k, v)
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+# Self-attention at or below this Sq·Sk switches to the materialized path
+# under impl="xla" (transient (B,H,Sq,Sk) f32 / TP is cheap; no scan carries
+# are saved for backward). Longer sequences stream KV chunks.
+FULL_ATTN_MAX_SEQ = 8192
+TRAIN_ATTN = "chunked"  # full | chunked (xla self-attention strategy)
+
+
+def attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
+              impl: str = "auto", chunk: int = 1024):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D). Differentiable."""
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        d = q.shape[-1]
+        return _pallas_attention(q, k, v, causal,
+                                 scale if scale is not None else d ** -0.5)
+    if impl == "xla_full":
+        return xla_full_attention(q, k, v, causal=causal, scale=scale)
+    if impl == "xla_chunked":
+        return xla_chunked_attention(q, k, v, causal=causal, scale=scale,
+                                     chunk=chunk)
+    if impl == "xla":
+        if q.shape[1] == 1 or (TRAIN_ATTN == "full" and q.shape[1] * k.shape[1]
+                               <= FULL_ATTN_MAX_SEQ ** 2 // 16):
+            return xla_full_attention(q, k, v, causal=causal, scale=scale)
+        return xla_chunked_attention(q, k, v, causal=causal, scale=scale,
+                                     chunk=chunk)
+    return ref.attention(q, k, v, causal=causal, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     scale: Optional[float] = None, impl: str = "auto"):
+    """One-token attention vs a KV cache. q (B,1,H,D), caches (B,S,KV,D)."""
+    impl = resolve_impl(impl)
+    if impl == "pallas" and k_cache.shape[1] % 512 == 0:
+        return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                     scale=scale, interpret=_interpret())
+    return ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Recurrences
+# ---------------------------------------------------------------------------
+
+
+def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 128):
+    """RWKV6 over a full sequence; returns (B,T,H,D) f32 outputs only."""
+    impl = resolve_impl(impl)
+    t = r.shape[1]
+    if impl == "pallas" and t % chunk == 0:
+        return _rwkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())
+    out, _ = ref.wkv6(r, k, v, w, u)
+    return out
+
+
+def ssd(x, a, b, c, *, impl: str = "auto", chunk: int = 256):
+    impl = resolve_impl(impl)
+    t = x.shape[1]
+    if impl == "pallas" and t % chunk == 0:
+        return _mamba2.ssd(x, a, b, c, chunk=chunk, interpret=_interpret())
+    y, _ = ref.ssd(x, a, b, c)
+    return y
+
+
+def wkv6_matrix(r, k, v, w, u, *, chunk: int = 64, state=None):
+    """RWKV6 WKV in chunked matrix form (per-CHANNEL data-dependent decay).
+
+    Derivation (S_t = diag(w_t) S_{t-1} + k_t v_tᵀ,
+                o_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)):
+      intra:  o_t = Σ_{s<t} [Σ_d r_t·k_s·exp(L_{t-1}-L_s)]_d v_s
+                    + (r_t·u·k_t) v_t
+      inter:  o_t += (r_t ⊙ exp(L_{t-1}-L_{-1}))ᵀ S_prev
+      state:  S    = diag(exp(L_c-L_{-1})) S_prev + Σ_s (exp(L_c-L_s)⊙k_s) v_sᵀ
+    with L_t = chunk-local cumulative log-decay (inclusive). All exponents
+    are differences with t ≥ s ⇒ ≤ 0: numerically stable without the
+    overflowing 1/decay factorization. The (c, c, D) decay tensor is
+    materialized per chunk (transient), traded for ~chunk× fewer sequential
+    steps than the token recurrence.
+
+    r/k/v/w (B,T,H,D); u (H,D). Returns (out (B,T,H,D) f32, state (B,H,D,D)).
+    """
+    bsz, t, h, d = r.shape
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+    f32 = jnp.float32
+    rs = lambda z: z.astype(f32).reshape(bsz, nc, chunk, h, d)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(w)
+    uf = u.astype(f32)
+    logw = jnp.log(jnp.maximum(wc, 1e-20))
+    cum = jnp.cumsum(logw, axis=2)                          # L_t, inclusive
+    cum_prev = cum - logw                                   # L_{t-1}
+
+    # intra-chunk: dec[t,s] = exp(L_{t-1} - L_s) for s <= t-1
+    diff = cum_prev[:, :, :, None, :, :] - cum[:, :, None, :, :, :]
+    # diff: (B,nc,t,s,H,D)
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+    dec = jnp.where(mask[None, None, :, :, None, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bnthd,bnshd,bntshd->bntsh", rc, kc, dec)
+    out = jnp.einsum("bntsh,bnshd->bnthd", scores, vc)
+    # diagonal bonus term
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, uf, kc)
+    out = out + diag[..., None] * vc
+
+    # inter-chunk
+    dec_out = jnp.exp(cum_prev)                             # exp(L_{t-1}-L_{-1})
+    dec_in = jnp.exp(cum[:, :, -1:, :, :] - cum)            # exp(L_c - L_s)
+    chunk_state = jnp.einsum("bnshd,bnshe->bnhde",
+                             dec_in * kc, vc)               # (B,nc,H,D,D)
+    w_total = jnp.exp(cum[:, :, -1])                        # (B,nc,H,D)
+
+    if state is None:
+        state = jnp.zeros((bsz, h, d, d), f32)
+
+    def body(s_prev, inp):
+        cs, wt, rr, dout = inp
+        y_in = jnp.einsum("bthd,bhde->bthe", rr * dout, s_prev)
+        s_new = wt[:, :, :, None] * s_prev + cs
+        return s_new, y_in
+
+    xs = (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(w_total, 1, 0),
+          jnp.moveaxis(rc, 1, 0), jnp.moveaxis(dec_out, 1, 0))
+    state, y_inter = jax.lax.scan(body, state, xs)
+    out = out + jnp.moveaxis(y_inter, 0, 1)
+    return out.reshape(bsz, t, h, d), state
+
+
+def ssd_matrix(x, a, b, c, *, chunk: int = 256, state=None):
+    """Mamba2 SSD in matrix (chunk-parallel) form — the actual SSD algorithm.
+
+    Replaces the token-by-token recurrence (4096 sequential (B,H,P,N) state
+    updates per layer — hopelessly memory-bound) with per-chunk MXU matmuls:
+
+      intra:  y[t] += Σ_{s<=t} exp(cum[t]-cum[s]) (c_t·b_s) x_s
+      inter:  y[t] += exp(cum[t]) · S_prev c_t
+      state:  S     = exp(cum[-1]) S_prev + Σ_s exp(cum[-1]-cum[s]) x_s⊗b_s
+
+    All decay factors are products of a_t ∈ (0,1) ⇒ ≤ 1: numerically stable.
+    x (B,T,H,P); a (B,T,H); b/c (B,T,H,N). Returns (y (B,T,H,P) f32, S).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    shared_bc = b.ndim == 3  # (B,T,N): B/C shared across heads (mamba2
+    # ngroups=1) — §Perf iteration B2: never materialize the (B,T,H,N)
+    # broadcast (1.9 GB/layer/tensor at zamba2 scale).
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(bsz, nc, chunk, h, p)
+    ac = a.astype(f32).reshape(bsz, nc, chunk, h)
+    if shared_bc:
+        bc_ = b.astype(f32).reshape(bsz, nc, chunk, n)
+        cc_ = c.astype(f32).reshape(bsz, nc, chunk, n)
+    else:
+        bc_ = b.astype(f32).reshape(bsz, nc, chunk, h, n)
+        cc_ = c.astype(f32).reshape(bsz, nc, chunk, h, n)
+    cum = jnp.cumsum(jnp.log(jnp.maximum(ac, 1e-20)), axis=2)  # (B,nc,c,H)
+
+    # decay ratio matrix L[t,s] = exp(cum[t] - cum[s]) for s <= t (else 0)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,t,s,H)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    if shared_bc:
+        g_ts = jnp.einsum("bnti,bnsi->bnts", cc_, bc_)         # (B,nc,t,s)
+        y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", g_ts, dec, xc)
+    else:
+        scores = jnp.einsum("bnthi,bnshi->bntsh", cc_, bc_) * dec
+        y_intra = jnp.einsum("bntsh,bnshp->bnthp", scores, xc)
+
+    # inter-chunk: sequential scan over nc chunks (state carry)
+    dec_out = jnp.exp(cum)                                      # (B,nc,c,H)
+    dec_in = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,nc,c,H)
+    if shared_bc:
+        chunk_state = jnp.einsum("bnsh,bnshp,bnsi->bnhpi", dec_in, xc, bc_)
+    else:
+        chunk_state = jnp.einsum("bnsh,bnshp,bnshi->bnhpi", dec_in, xc, bc_)
+    a_total = jnp.exp(cum[:, :, -1, :])                         # (B,nc,H)
+
+    if state is None:
+        state = jnp.zeros((bsz, h, p, n), f32)
+
+    def body(s_prev, inp):
+        cs, at, co, dout = inp  # chunk_state, a_total, c-block, dec_out
+        if shared_bc:
+            y_in = jnp.einsum("bhpi,bti,bth->bthp", s_prev, co, dout)
+        else:
+            y_in = jnp.einsum("bhpi,bthi,bth->bthp", s_prev, co, dout)
+        s_new = at[:, :, None, None] * s_prev + cs
+        return s_new, y_in
+
+    xs = (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(a_total, 1, 0),
+          jnp.moveaxis(cc_, 1, 0), jnp.moveaxis(dec_out, 1, 0))
+    state, y_inter = jax.lax.scan(body, state, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(bsz, t, h, p), state
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def xla_chunked_xent(logits_fn, x, labels, vocab_w, *, chunk_s: int = 512):
+    """Chunked LM loss: scans over SEQUENCE chunks computing logits + CE per
+    chunk so (B, S, V) fp32 logits are never resident.
+
+    Chunking over the sequence axis (not flattened tokens) keeps the batch
+    dimension sharded under pjit — a flattened-token scan makes every chunk
+    live on one data shard and the dx accumulator replicated.
+
+    logits_fn(x_chunk (B, c, D), vocab_w) -> (B, c, V) logits.
+    x (B, S, D); labels (B, S) with -1 = ignore.
+    Returns (summed loss, valid count).
+    """
+    b, s, _ = x.shape
+    chunk_s = min(chunk_s, s)
+    while s % chunk_s:
+        chunk_s -= 1
+    n = s // chunk_s
+
+    # remat: without it the scan stacks every chunk's logits as backward
+    # residuals — O(S·V) fp32, exactly what chunking must avoid.
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, ic):
+        total, count = acc
+        xs = jax.lax.dynamic_slice_in_dim(x, ic * chunk_s, chunk_s, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, ic * chunk_s, chunk_s,
+                                          axis=1)
+        logits = logits_fn(xs, vocab_w)
+        valid = ls >= 0
+        lf = logits.reshape(-1, logits.shape[-1])
+        loss = ref.softmax_xent(lf, jnp.maximum(ls.reshape(-1), 0))
+        loss = jnp.where(valid.reshape(-1), loss, 0.0)
+        return (total + jnp.sum(loss),
+                count + jnp.sum(valid.astype(jnp.float32))), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return total, count
+
+
+def softmax_xent(logits, labels, *, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl == "pallas":
+        t, v = logits.shape
+        if t % 128 == 0 and v % 2048 == 0:
+            return _xent.softmax_xent(logits, labels, interpret=_interpret())
+    return ref.softmax_xent(logits, labels)

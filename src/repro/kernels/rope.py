@@ -1,0 +1,42 @@
+"""Rotary position embedding Pallas kernel (angles computed in-kernel)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rope_kernel(x_ref, pos_ref, out_ref, *, theta: float, half: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)             # (bs, d)
+    pos = pos_ref[0, :].astype(jnp.float32)               # (bs,)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freq[None, :]                    # (bs, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[:, :half], x[:, half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out_ref[0, :, 0, :] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "block_s", "interpret"))
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
+         block_s: int = 256, interpret: bool = True) -> jax.Array:
+    """x (B, S, H, D); positions (B, S) int32. S divisible by block_s."""
+    b, s, h, d = x.shape
+    assert s % block_s == 0 and d % 2 == 0
+    return pl.pallas_call(
+        functools.partial(_rope_kernel, theta=theta, half=d // 2),
+        grid=(b, h, s // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, 1, d), lambda ib, ih, isq: (ib, isq, ih, 0)),
+            pl.BlockSpec((1, block_s), lambda ib, ih, isq: (ib, isq)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, 1, d),
+                               lambda ib, ih, isq: (ib, isq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(x, positions)

@@ -1,0 +1,66 @@
+"""RWKV6 (Finch) WKV recurrence as a chunked Pallas TPU kernel.
+
+State S ∈ R^{D×D} per (batch, head) lives in VMEM scratch and persists across
+the (innermost, sequential) chunk grid dimension. Within a chunk the kernel
+runs the exact recurrence step-by-step with rank-1 updates vectorized over
+the D×D state tile — correct for arbitrary data-dependent decay w_t.
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, s_ref, *,
+                 chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0, :].astype(jnp.float32)                      # (D,)
+
+    def step(t, _):
+        rt = r_ref[0, t, 0, :].astype(jnp.float32)           # (D,)
+        kt = k_ref[0, t, 0, :].astype(jnp.float32)
+        vt = v_ref[0, t, 0, :].astype(jnp.float32)
+        wt = w_ref[0, t, 0, :].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                       # (D, D)
+        s = s_ref[...]
+        ot = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+        out_ref[0, t, 0, :] = ot.astype(out_ref.dtype)
+        s_ref[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 128,
+         interpret: bool = True) -> jax.Array:
+    """r/k/v/w (B, T, H, D); u (H, D); T divisible by chunk. Returns (B,T,H,D) f32."""
+    b, t, h, d = r.shape
+    assert t % chunk == 0
+    grid = (b, h, t // chunk)
+    seq_spec = pl.BlockSpec((1, chunk, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, d), lambda ib, ih, ic: (ih, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)

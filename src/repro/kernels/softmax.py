@@ -1,0 +1,34 @@
+"""Row softmax Pallas kernel (full row in VMEM, numerically stable)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softmax_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    out_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax(x: jax.Array, *, block_rows: int = 128,
+            interpret: bool = True) -> jax.Array:
+    """x (T, D) -> softmax over D. T divisible by block_rows."""
+    t, d = x.shape
+    assert t % block_rows == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(t // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

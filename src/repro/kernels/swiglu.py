@@ -1,0 +1,40 @@
+"""Fused SwiGLU activation Pallas kernel: silu(gate) * up in one VMEM pass.
+
+(The surrounding matmuls use kernels/matmul.py or XLA; fusing the two
+elementwise streams halves HBM traffic for the activation stage.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swiglu_kernel(g_ref, u_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    out_ref[...] = (g * (1.0 / (1.0 + jnp.exp(-g))) * u).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols",
+                                             "interpret"))
+def swiglu_act(gate: jax.Array, up: jax.Array, *, block_rows: int = 128,
+               block_cols: int = 512, interpret: bool = True) -> jax.Array:
+    """gate/up (T, F) -> silu(gate)*up, tile-divisible."""
+    t, f = gate.shape
+    assert gate.shape == up.shape
+    assert t % block_rows == 0 and f % block_cols == 0
+    spec = pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(t // block_rows, f // block_cols),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(gate.shape, gate.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(gate, up)

@@ -1,0 +1,75 @@
+"""Fused softmax cross-entropy Pallas kernel.
+
+Streams vocab tiles through VMEM with an online logsumexp — the (T, V)
+logit matrix is never resident, which is what makes 100k+ vocabularies
+(deepseek/moonshot/qwen) trainable without materializing fp32 logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref, m_ref, l_ref, g_ref, *,
+                 block_v: int, n_v: int):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = logits_ref[...].astype(jnp.float32)                 # (bt, bv)
+    labels = labels_ref[...]                                # (bt,)
+    vocab_ids = iv * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    m_prev = m_ref[:, 0:1]
+    l_prev = l_ref[:, 0:1]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1, keepdims=True))
+    p = jnp.exp(x - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = jnp.broadcast_to(alpha * l_prev + jnp.sum(p, -1, keepdims=True),
+                                  l_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    hit = (vocab_ids == labels[:, None])
+    g_ref[...] += jnp.broadcast_to(
+        jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True), g_ref.shape)
+
+    @pl.when(iv == n_v - 1)
+    def _finish():
+        lse = m_ref[:, 0] + jnp.log(l_ref[:, 0])
+        loss_ref[...] = (lse - g_ref[:, 0]).astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, block_t: int = 128,
+                 block_v: int = 2048, interpret: bool = True) -> jax.Array:
+    """logits (T, V), labels (T,) int32 -> per-token loss (T,) f32."""
+    t, v = logits.shape
+    assert t % block_t == 0 and v % block_v == 0
+    n_v = v // block_v
+    return pl.pallas_call(
+        functools.partial(_xent_kernel, block_v=block_v, n_v=n_v),
+        grid=(t // block_t, n_v),
+        in_specs=[
+            pl.BlockSpec((block_t, block_v), lambda it, iv: (it, iv)),
+            pl.BlockSpec((block_t,), lambda it, iv: (it,)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda it, iv: (it,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_t, _LANES), jnp.float32),
+            pltpu.VMEM((block_t, _LANES), jnp.float32),
+            pltpu.VMEM((block_t, _LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(logits, labels)

@@ -1,0 +1,186 @@
+"""Dry-run cell machinery (mesh-parameterized lower+compile+roofline).
+
+Imported by launch/dryrun.py (which owns the 512-device XLA flag) and by
+tests (which use a debug mesh). Original doc: Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh).
+
+For each cell this lowers the REAL step function (train_step including the
+optimizer update, prefill_step, or decode_step) with production shardings on
+the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, compiles it on the
+forced-512-device host platform, and records:
+
+  * ``compiled.memory_analysis()``  — bytes/device (proves the cell fits)
+  * ``compiled.cost_analysis()``    — per-device FLOPs / bytes (§Roofline)
+  * collective bytes parsed from the optimized HLO
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh, mesh_desc
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.roofline import roofline_report
+from repro.sharding import make_rules, resolve_axes, set_rules, spec_tree
+from repro.train.trainer import TrainConfig, make_train_step
+
+DTYPE = jnp.bfloat16
+
+# Per-(arch, shape) overrides tuned during §Perf iterations.
+OVERRIDES: dict = {}
+
+
+def _named(mesh, axes, shapes, rules):
+    return jax.tree.map(
+        lambda ax, sds: jax.sharding.NamedSharding(
+            mesh, resolve_axes(ax, rules, tuple(sds.shape))),
+        axes, shapes, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def _abstract_opt_state(params_abs, logical, cfg: AdamWConfig):
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    state = {"mu": jax.tree.map(f32, params_abs),
+             "nu": jax.tree.map(f32, params_abs),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"mu": logical, "nu": logical, "step": ()}
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(f32, params_abs)
+        axes["master"] = logical
+    return state, axes
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               microbatches: int = 1):
+    """Lower + compile one cell. Returns (compiled, lowered, aux dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    model = build_model(cfg, tp_size=tp)
+    rules = make_rules(mesh)
+    params_abs = model.abstract_params(DTYPE)
+    logical = model.logical_specs()
+    params_sh = spec_tree(logical, rules, params_abs)
+    in_specs = model.input_specs(shape, DTYPE)
+    in_axes = model.input_logical_axes(shape)
+    in_sh = _named(mesh, in_axes, in_specs, rules)
+
+    with set_rules(rules):
+        if shape.kind == "train":
+            tc = TrainConfig(impl="xla", remat=True, microbatches=microbatches,
+                             adamw=AdamWConfig())
+            step = make_train_step(model, tc)
+            opt_abs, opt_axes = _abstract_opt_state(params_abs, logical,
+                                                    tc.adamw)
+            opt_sh = _named(mesh, opt_axes, opt_abs, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, in_sh),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, in_specs)
+        elif shape.kind == "prefill":
+            extra_name = {"encdec": "frames", "vlm": "vision"}.get(cfg.family)
+
+            if extra_name:
+                def prefill(params, tokens, extra):
+                    return model.prefill_fn(params, tokens, impl="xla",
+                                            **{extra_name: extra})
+                lowered = jax.jit(
+                    prefill,
+                    in_shardings=(params_sh, in_sh["tokens"],
+                                  in_sh[extra_name]),
+                ).lower(params_abs, in_specs["tokens"],
+                        in_specs[extra_name])
+            else:
+                def prefill(params, tokens):
+                    return model.prefill_fn(params, tokens, impl="xla")
+                lowered = jax.jit(
+                    prefill, in_shardings=(params_sh, in_sh["tokens"]),
+                ).lower(params_abs, in_specs["tokens"])
+        else:  # decode
+            cache_abs, cache_axes = model.abstract_cache(
+                shape.global_batch, shape.seq_len, DTYPE)
+            cache_sh = _named(mesh, cache_axes, cache_abs, rules)
+
+            def decode(params, cache, tokens, lengths):
+                return model.decode_fn(params, cache, tokens, lengths,
+                                       impl="xla")
+
+            lowered = jax.jit(
+                decode,
+                in_shardings=(params_sh, cache_sh, in_sh["tokens"],
+                              in_sh["lengths"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, in_specs["tokens"],
+                    in_specs["lengths"])
+        compiled = lowered.compile()
+    return compiled, lowered, {"cfg": cfg, "shape": shape, "model": model}
+
+
+def model_flops_total(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir=None):
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    cell = f"{arch} × {shape_name} × {'2x16x16' if multi_pod else '16x16'}"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return {"cell": cell, "status": "skip",
+                "reason": "encoder-only arch has no decode step"}
+    if shape.subquadratic_only and not cfg.subquadratic:
+        return {"cell": cell, "status": "skip",
+                "reason": "full-attention arch; long_500k needs sub-quadratic"}
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mb = OVERRIDES.get((arch, shape_name), {}).get("microbatches", 1)
+    try:
+        compiled, lowered, aux = lower_cell(arch, shape_name, mesh,
+                                            microbatches=mb)
+    except Exception as exc:  # noqa: BLE001
+        return {"cell": cell, "status": "FAIL",
+                "error": f"{type(exc).__name__}: {exc}",
+                "trace": traceback.format_exc()[-2000:]}
+    compile_s = time.monotonic() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    rep = roofline_report(
+        arch=arch, shape=shape_name, mesh_desc=mesh_desc(mesh), chips=chips,
+        cost=cost, hlo_text=hlo,
+        model_flops_total=model_flops_total(cfg, shape),
+        bytes_per_device=getattr(mem, "temp_size_in_bytes", None))
+    record = {
+        "cell": cell, "status": "ok", "compile_s": round(compile_s, 1),
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)},
+        "roofline": rep.to_dict(),
+    }
+    if out_dir:
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}.json"
+        (out_dir / name).write_text(json.dumps(record, indent=2))
+    return record
+
+

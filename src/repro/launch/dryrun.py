@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run entrypoint. The two lines above MUST run before any jax
+# import (jax locks the device count on first init); all machinery lives in
+# launch/cells.py so tests can import it without the 512-device side effect.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh both
+#   python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+import argparse  # noqa: E402
+
+from repro.configs import get_config, list_archs  # noqa: E402
+from repro.launch.cells import (  # noqa: E402,F401  (re-exported for compat)
+    OVERRIDES, lower_cell, model_flops_total, run_cell,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in cfg.shapes()]
+                  + [s.name for s, _ in cfg.skipped_shapes()])
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, out_dir=args.out)
+                status = rec["status"]
+                line = f"[{status:4s}] {rec['cell']}"
+                if status == "ok":
+                    r = rec["roofline"]
+                    line += (f"  compile={rec['compile_s']}s"
+                             f"  dom={r['dominant']}"
+                             f"  step≈{r['step_time_s']*1e3:.1f}ms"
+                             f"  roofline={r['roofline_fraction']:.2%}")
+                elif status == "skip":
+                    line += f"  ({rec['reason']})"
+                else:
+                    failures += 1
+                    line += f"  {rec['error']}"
+                print(line, flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run overrides the host
+platform device count to 512 before any jax import; smoke tests and
+benchmarks see the real single device.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> "jax.sharding.Mesh":
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices, have {len(devices)} — the dry-run must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    devs = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> "jax.sharding.Mesh":
+    """Tiny mesh over available devices for tests."""
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

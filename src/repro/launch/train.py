@@ -1,0 +1,76 @@
+"""Training launcher.
+
+Single-host debug runs execute real steps on the local device(s); with
+``--dryrun`` it delegates to launch/dryrun.py semantics (lower+compile only).
+On a real TPU fleet this same entrypoint runs under
+``jax.distributed.initialize()`` with one process per host.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b \
+      --reduced --steps 20 --seq-len 128 --global-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.train import Trainer, TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    tc = TrainConfig(
+        peak_lr=args.peak_lr, total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 10),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    pipe = TokenPipeline(DataConfig(
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        vocab_size=cfg.vocab_size, seed=args.seed))
+    trainer = Trainer(model, tc, rng=jax.random.PRNGKey(args.seed))
+    if trainer.restore_if_available(pipe):
+        print(f"restored from step {trainer.step_num}")
+
+    t0 = time.monotonic()
+    for metrics in trainer.fit(pipe, args.steps):
+        if trainer.step_num % args.log_every == 0 or \
+                trainer.step_num == args.steps:
+            tok_s = (args.global_batch * args.seq_len
+                     / max(metrics["step_time_s"], 1e-9))
+            print(f"step {trainer.step_num:5d} loss={metrics['loss']:.4f} "
+                  f"gnorm={metrics['grad_norm']:.2f} "
+                  f"tok/s={tok_s:,.0f}", flush=True)
+    wall = time.monotonic() - t0
+    print(json.dumps({"steps": trainer.step_num, "wall_s": round(wall, 1),
+                      "final_loss": trainer.history[-1]["loss"]}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Unified model API: build_model(cfg) -> Model facade used by trainer,
+serving engine, launcher, and the dry-run."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import dense, encdec, hybrid, moe, param_util, rwkv
+
+_FAMILY = {
+    "dense": dense,
+    "vlm": dense,
+    "moe": moe,
+    "ssm": rwkv,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mod: Any
+    tp_size: int = 1
+
+    # -- parameters ---------------------------------------------------------
+    def defs(self):
+        return self.mod.make_defs(self.cfg, self.tp_size)
+
+    def init(self, rng, dtype=jnp.float32):
+        return param_util.init_params(self.defs(), rng, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return param_util.abstract_params(self.defs(), dtype)
+
+    def logical_specs(self):
+        return param_util.logical_specs(self.defs())
+
+    def param_bytes(self, dtype=jnp.bfloat16):
+        return param_util.param_bytes(self.defs(), dtype)
+
+    # -- steps --------------------------------------------------------------
+    def loss_fn(self, params, batch, *, impl="xla", remat=True):
+        return self.mod.loss_fn(params, batch, self.cfg, impl=impl,
+                                remat=remat)
+
+    def prefill_fn(self, params, tokens, *, impl="xla", **kw):
+        return self.mod.prefill_fn(params, tokens, self.cfg, impl=impl, **kw)
+
+    def decode_fn(self, params, cache, tokens, lengths, *, impl="xla"):
+        return self.mod.decode_fn(params, cache, tokens, lengths, self.cfg,
+                                  impl=impl)
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        return self.mod.init_cache(self.cfg, batch, seq, dtype)
+
+    def abstract_cache(self, batch, seq, dtype=jnp.bfloat16):
+        return self.mod.abstract_cache(self.cfg, batch, seq, dtype)
+
+    # -- inputs -------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.family == "vlm":
+                specs["vision"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.num_positions, cfg.d_model), dtype)
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.num_positions, cfg.encoder.d_model), dtype)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.num_positions, cfg.encoder.d_model), dtype)
+            if cfg.family == "vlm":
+                specs["vision"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.num_positions, cfg.d_model), dtype)
+            return specs
+        # decode: one token vs a cache of seq_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "lengths": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+    def input_logical_axes(self, shape: ShapeConfig) -> Dict[str, tuple]:
+        cfg = self.cfg
+        if shape.kind == "train":
+            axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+            if cfg.family == "vlm":
+                axes["vision"] = ("batch", None, None)
+            if cfg.family == "encdec":
+                axes["frames"] = ("batch", None, None)
+            return axes
+        if shape.kind == "prefill":
+            axes = {"tokens": ("batch", None)}
+            if cfg.family == "vlm":
+                axes["vision"] = ("batch", None, None)
+            if cfg.family == "encdec":
+                axes["frames"] = ("batch", None, None)
+            return axes
+        return {"tokens": ("batch", None), "lengths": ("batch",)}
+
+    def make_batch(self, rng, shape: ShapeConfig, dtype=jnp.float32):
+        """Concrete random batch for smoke tests / examples."""
+        cfg = self.cfg
+        specs = self.input_specs(shape, dtype)
+        keys = jax.random.split(rng, len(specs))
+        out = {}
+        for key, (name, sds) in zip(keys, sorted(specs.items())):
+            if jnp.issubdtype(sds.dtype, jnp.integer):
+                if name == "lengths":
+                    out[name] = jnp.full(sds.shape, shape.seq_len // 2,
+                                         jnp.int32)
+                else:
+                    out[name] = jax.random.randint(key, sds.shape, 0,
+                                                   cfg.vocab_size, jnp.int32)
+            else:
+                out[name] = (jax.random.normal(key, sds.shape, jnp.float32)
+                             .astype(sds.dtype))
+        return out
+
+
+def build_model(cfg: ModelConfig, tp_size: int = 1) -> Model:
+    if cfg.family not in _FAMILY:
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg=cfg, mod=_FAMILY[cfg.family], tp_size=tp_size)

@@ -1,0 +1,232 @@
+"""Shared transformer building blocks (functional; params are dicts).
+
+Conventions:
+  activations x: (B, S, D) in the model compute dtype (bf16 in production)
+  einsums accumulate in f32 (``preferred_element_type``) then cast back
+  residual stream is sequence-parallel: constrained to ('batch','seq_sp',None)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+RESID = ("batch", "seq_sp", None)
+GATHERED = ("batch", None, None)
+ACT_HEADS = ("batch", None, "tp", None)
+ACT_FF = ("batch", None, "tp")
+
+# Accumulation dtype policy for activation einsums. "native" keeps the XLA
+# graph in the param dtype (bf16): cross-device partial-sum reductions and
+# backward dx collectives stay bf16 (half the ICI bytes; the MXU still
+# accumulates f32 within a tile). "f32" forces f32 graph dtype (2× collective
+# bytes — measured in EXPERIMENTS.md §Perf iteration A1).
+ACCUM = "native"
+GATHER_EXPLICIT = False
+
+
+def _einsum(eq, *xs, out_dtype=None):
+    if ACCUM == "native":
+        out = jnp.einsum(eq, *xs)
+    else:
+        out = jnp.einsum(eq, *xs, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or xs[0].dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param tables
+# ---------------------------------------------------------------------------
+
+
+def attention_defs(cfg, stack: int = 0, d_model: Optional[int] = None,
+                   num_heads: Optional[int] = None,
+                   num_kv: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = d_model or cfg.d_model
+    h = num_heads or cfg.num_heads
+    kv = num_kv or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim if d_model is None else d // h
+    lead = (stack,) if stack else ()
+    lax = ("layers",) if stack else ()
+    return {
+        "wq": ParamDef(lead + (d, h, hd), lax + ("fsdp", "tp", None)),
+        "wk": ParamDef(lead + (d, kv, hd), lax + ("fsdp", "tp", None)),
+        "wv": ParamDef(lead + (d, kv, hd), lax + ("fsdp", "tp", None)),
+        "wo": ParamDef(lead + (h, hd, d), lax + ("tp", None, "fsdp")),
+    }
+
+
+def mlp_defs(cfg, stack: int = 0, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    lead = (stack,) if stack else ()
+    lax = ("layers",) if stack else ()
+    return {
+        "wg": ParamDef(lead + (d, f), lax + ("fsdp", "tp")),
+        "wu": ParamDef(lead + (d, f), lax + ("fsdp", "tp")),
+        "wd": ParamDef(lead + (f, d), lax + ("tp", "fsdp")),
+    }
+
+
+def norm_def(cfg, stack: int = 0, d_model: Optional[int] = None) -> ParamDef:
+    d = d_model or cfg.d_model
+    if stack:
+        return ParamDef((stack, d), ("layers", None), init="ones")
+    return ParamDef((d,), (None,), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps, impl):
+    if impl == "pallas":
+        return ops.rmsnorm(x, gamma, eps=eps, impl="pallas")
+    if x.dtype == jnp.bfloat16:
+        # Stats in f32, but never materialize an f32 (B,S,D) tensor: the
+        # SPMD partitioner otherwise moves the sequence-parallel all-gather
+        # (and the FSDP param gathers feeding the next dot) in f32 — 2× the
+        # ICI bytes (EXPERIMENTS.md §Perf iterations A2/A3).
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * gamma.astype(x.dtype)
+    return ref.rmsnorm(x, gamma, eps)
+
+
+def _gather_sp(h):
+    """Gather the sequence-parallel residual post-norm, in the model dtype."""
+    if GATHER_EXPLICIT:
+        return constrain(h, GATHERED)
+    return h
+
+
+def attention_sublayer(p, x, positions, cfg, *, impl: str = "xla",
+                       causal: bool = True, kv_override=None,
+                       rope_theta: Optional[float] = None,
+                       return_kv: bool = False):
+    """Pre-norm GQA attention. Returns residual delta.
+
+    ``kv_override``: (k, v) to attend over instead of self-derived KV
+    (cross-attention). ``p`` needs keys ln, wq, wk, wv, wo.
+    ``return_kv``: also return the (post-RoPE) K/V for cache priming.
+    """
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    h = rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    h = _gather_sp(h)
+    q = _einsum("bsd,dhk->bshk", h, p["wq"])
+    if kv_override is None:
+        k = _einsum("bsd,dhk->bshk", h, p["wk"])
+        v = _einsum("bsd,dhk->bshk", h, p["wv"])
+    else:
+        k, v = kv_override
+    if theta:
+        q = ops.rope(q, positions, theta=theta, impl=impl)
+        if kv_override is None:
+            k = ops.rope(k, positions, theta=theta, impl=impl)
+    q = constrain(q, ACT_HEADS)
+    k = constrain(k, ACT_HEADS)
+    v = constrain(v, ACT_HEADS)
+    o = ops.attention(q, k, v, causal=causal, impl=impl)
+    out = _einsum("bshk,hkd->bsd", o, p["wo"])
+    out = constrain(out, RESID)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def mlp_sublayer(p, x, cfg, *, impl: str = "xla"):
+    """Pre-norm SwiGLU MLP. Returns residual delta."""
+    h = rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    h = _gather_sp(h)
+    g = _einsum("bsd,df->bsf", h, p["wg"])
+    u = _einsum("bsd,df->bsf", h, p["wu"])
+    g = constrain(g, ACT_FF)
+    u = constrain(u, ACT_FF)
+    if impl == "pallas":
+        a = ops.swiglu_act(g, u, impl="pallas")
+    else:
+        a = (ref.swish(g.astype(jnp.float32)) *
+             u.astype(jnp.float32)).astype(x.dtype)
+    out = _einsum("bsf,fd->bsd", a, p["wd"])
+    return constrain(out, RESID)
+
+
+def decode_attention_sublayer(p, x, cache_k, cache_v, lengths, cfg, *,
+                              impl: str = "xla", rope_theta=None):
+    """One-token attention step. x (B,1,D); caches (B,S,KV,Dh) pre-update.
+
+    Returns (delta, new_k_token, new_v_token); caller owns the cache insert.
+    """
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    h = rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    q = _einsum("bsd,dhk->bshk", h, p["wq"])
+    k = _einsum("bsd,dhk->bshk", h, p["wk"])
+    v = _einsum("bsd,dhk->bshk", h, p["wv"])
+    if theta:
+        pos = lengths[:, None]
+        q = ref.rope(q, pos, theta)
+        k = ref.rope(k, pos, theta)
+    cache_k = insert_kv(cache_k, k, lengths)
+    cache_v = insert_kv(cache_v, v, lengths)
+    o = ops.decode_attention(q, cache_k, cache_v, lengths + 1, impl=impl)
+    out = _einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache_k, cache_v
+
+
+def insert_kv(cache, token_kv, lengths):
+    """cache (B,S,KV,Dh); token_kv (B,1,KV,Dh); write at position lengths[b]."""
+    def one(c, t, l):
+        return jax.lax.dynamic_update_slice(c, t, (l, 0, 0))
+    return jax.vmap(one)(cache, token_kv, lengths)
+
+
+def scan_layers(stacked_params, x, body, *, remat: bool = True, extra=None):
+    """Run ``body(layer_params, x, extra) -> x`` over stacked layer params.
+
+    ``remat`` checkpoints each layer (saves only the carried residual), which
+    with sequence-parallel residuals bounds activation memory at
+    L × |residual| / TP.
+    """
+    def step(carry, layer_p):
+        return body(layer_p, carry, extra), None
+
+    if remat:
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, _ = jax.lax.scan(step, x, stacked_params)
+    return x
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)
+    return sinusoidal_at(pos, d, dtype)
+
+
+def sinusoidal_at(positions, d: int, dtype=jnp.float32):
+    """Sinusoidal embedding at arbitrary positions. positions (...,) -> (..., d)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros(positions.shape + (d,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+def lm_loss(x, labels, ln_f, w_vocab, cfg, *, impl: str = "xla",
+            chunk_s: int = 512):
+    """Final-norm + sequence-chunked LM cross-entropy. x (B,S,D); labels (B,S)."""
+    h = rmsnorm(x, ln_f, cfg.norm_eps, impl)
+
+    def logits_fn(xs, w):
+        return _einsum("bsd,dv->bsv", xs, w, out_dtype=jnp.float32)
+
+    total, count = ops.xla_chunked_xent(logits_fn, h, labels, w_vocab,
+                                        chunk_s=chunk_s)
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,131 @@
+"""Dense GQA transformer LM (llama-family): deepseek-67b, yi-34b,
+phi3-medium-14b, starcoder2-7b — and the VLM variant (internvl2-2b) whose
+vision tower is a stub providing precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import common as cm
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+
+def make_defs(cfg, tp_size: int = 1) -> Dict:
+    l, d, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    del tp_size
+    blocks = {
+        "attn": dict(cm.attention_defs(cfg, stack=l),
+                     ln=cm.norm_def(cfg, stack=l)),
+        "mlp": dict(cm.mlp_defs(cfg, stack=l), ln=cm.norm_def(cfg, stack=l)),
+    }
+    defs = {
+        "embed": ParamDef((v, d), ("tp", "fsdp")),
+        "blocks": blocks,
+        "ln_f": cm.norm_def(cfg),
+        "lm_head": ParamDef((d, v), ("fsdp", "tp")),
+    }
+    if cfg.family == "vlm":
+        defs["vision_proj"] = ParamDef((d, d), ("fsdp", "tp"))
+    return defs
+
+
+def _embed(params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _block(layer_p, x, extra, cfg, impl):
+    positions = extra
+    x = x + cm.attention_sublayer(layer_p["attn"], x, positions, cfg,
+                                  impl=impl)
+    x = x + cm.mlp_sublayer(layer_p["mlp"], x, cfg, impl=impl)
+    return constrain(x, cm.RESID)
+
+
+def loss_fn(params, batch, cfg, *, impl: str = "xla", remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = _embed(params, tokens)
+    if cfg.family == "vlm":
+        vis = jnp.einsum("bpd,de->bpe", batch["vision"], params["vision_proj"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full((b, vis.shape[1]), -1, labels.dtype), labels], axis=1)
+        s = x.shape[1]
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = cm.scan_layers(params["blocks"], x,
+                       lambda p, y, e: _block(p, y, e, cfg, impl),
+                       remat=remat, extra=positions)
+    loss = cm.lm_loss(x, labels, params["ln_f"], params["lm_head"], cfg,
+                      impl=impl)
+    return loss, {"loss": loss}
+
+
+def prefill_fn(params, tokens, cfg, *, impl: str = "xla", vision=None):
+    """Prompt pass. Returns (next-token logits (B,V), cache, lengths)."""
+    b, s = tokens.shape
+    x = _embed(params, tokens)
+    if cfg.family == "vlm" and vision is not None:
+        vis = jnp.einsum("bpd,de->bpe", vision, params["vision_proj"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        s = x.shape[1]
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_p):
+        y = carry
+        out, kv = cm.attention_sublayer(layer_p["attn"], y, positions, cfg,
+                                        impl=impl, return_kv=True)
+        y = y + out
+        y = y + cm.mlp_sublayer(layer_p["mlp"], y, cfg, impl=impl)
+        return constrain(y, cm.RESID), kv
+
+    x, (ck, cv) = jax.lax.scan(body, x, params["blocks"])
+    h = cm.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    lengths = jnp.full((b,), s, jnp.int32)
+    return logits, {"k": ck, "v": cv}, lengths
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    l, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (l, batch, seq, kv, hd)
+    axes = ("layers", "batch", "seq_kv", None, None)
+    return ({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+            {"k": axes, "v": axes})
+
+
+def abstract_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    l, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct((l, batch, seq, kv, hd), dtype)
+    axes = ("layers", "batch", "seq_kv", None, None)
+    return {"k": sds, "v": sds}, {"k": axes, "v": axes}
+
+
+def decode_fn(params, cache, tokens, lengths, cfg, *, impl: str = "xla"):
+    """One decode step. tokens (B,1); lengths (B,). Returns (logits, cache)."""
+    x = _embed(params, tokens)
+
+    def body(carry, xs):
+        y = carry
+        layer_p, ck, cv = xs
+        delta, ck, cv = cm.decode_attention_sublayer(
+            layer_p["attn"], y, ck, cv, lengths, cfg, impl=impl)
+        y = y + delta
+        y = y + cm.mlp_sublayer(layer_p["mlp"], y, cfg, impl=impl)
+        return y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = cm.rmsnorm(x, params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,276 @@
+"""whisper-base: encoder-decoder transformer.
+
+The mel/conv frontend is a STUB per the assignment — ``input_specs()``
+provides precomputed frame embeddings (B, 1500, d_model) as encoder input.
+Positions are sinusoidal (computed, not learned — documented deviation),
+norms are LayerNorm with bias, MLPs are GELU, attention is MHA (kv = heads).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models import common as cm
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+
+def _enc_cfg(cfg):
+    return cfg.encoder
+
+
+def _ln_defs(l, d):
+    return {
+        "g": ParamDef((l, d), ("layers", None), init="ones"),
+        "b": ParamDef((l, d), ("layers", None), init="zeros"),
+    }
+
+
+def _attn_defs(l, d, h):
+    hd = d // h
+    la = ("layers",)
+    return {
+        "wq": ParamDef((l, d, h, hd), la + ("fsdp", "tp", None)),
+        "wk": ParamDef((l, d, h, hd), la + ("fsdp", "tp", None)),
+        "wv": ParamDef((l, d, h, hd), la + ("fsdp", "tp", None)),
+        "wo": ParamDef((l, h, hd, d), la + ("tp", None, "fsdp")),
+    }
+
+
+def _mlp_defs(l, d, f):
+    la = ("layers",)
+    return {
+        "w1": ParamDef((l, d, f), la + ("fsdp", "tp")),
+        "b1": ParamDef((l, f), la + ("tp",), init="zeros"),
+        "w2": ParamDef((l, f, d), la + ("tp", "fsdp")),
+        "b2": ParamDef((l, d), la + (None,), init="zeros"),
+    }
+
+
+def make_defs(cfg, tp_size: int = 1) -> Dict:
+    del tp_size
+    e = _enc_cfg(cfg)
+    ld, dd, fd = cfg.num_layers, cfg.d_model, cfg.d_ff
+    v, hd_ = cfg.vocab_size, cfg.num_heads
+    enc = {
+        "ln1": _ln_defs(e.num_layers, e.d_model),
+        "attn": _attn_defs(e.num_layers, e.d_model, e.num_heads),
+        "ln2": _ln_defs(e.num_layers, e.d_model),
+        "mlp": _mlp_defs(e.num_layers, e.d_model, e.d_ff),
+    }
+    dec = {
+        "ln1": _ln_defs(ld, dd),
+        "self_attn": _attn_defs(ld, dd, hd_),
+        "ln2": _ln_defs(ld, dd),
+        "cross_attn": _attn_defs(ld, dd, hd_),
+        "ln3": _ln_defs(ld, dd),
+        "mlp": _mlp_defs(ld, dd, fd),
+    }
+    return {
+        "embed": ParamDef((v, dd), ("tp", "fsdp")),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "ln_enc": {"g": ParamDef((e.d_model,), (None,), init="ones"),
+                   "b": ParamDef((e.d_model,), (None,), init="zeros")},
+        "ln_f": {"g": ParamDef((dd,), (None,), init="ones"),
+                 "b": ParamDef((dd,), (None,), init="zeros")},
+        "lm_head": ParamDef((dd, v), ("fsdp", "tp")),
+    }
+
+
+def _ln(x, p, eps):
+    return ref.layernorm(x, p["g"].astype(jnp.float32),
+                         p["b"].astype(jnp.float32), eps)
+
+
+def _mha(p, xq, xkv, *, causal, impl, return_kv=False, kv_override=None):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"],
+                   preferred_element_type=jnp.float32).astype(xq.dtype)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"],
+                       preferred_element_type=jnp.float32).astype(xq.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"],
+                       preferred_element_type=jnp.float32).astype(xq.dtype)
+    else:
+        k, v = kv_override
+    q = constrain(q, cm.ACT_HEADS)
+    o = ops.attention(q, k, v, causal=causal, impl=impl)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=jnp.float32).astype(xq.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _gelu_mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"],
+                   preferred_element_type=jnp.float32) + p["b1"][None, None]
+    h = jax.nn.gelu(h).astype(x.dtype)
+    h = constrain(h, cm.ACT_FF)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w2"],
+                     preferred_element_type=jnp.float32) \
+        + p["b2"][None, None].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def encode(params, frames, cfg, *, impl: str = "xla", remat: bool = True):
+    """frames (B, P, D_enc) precomputed embeddings (frontend stub)."""
+    e = _enc_cfg(cfg)
+    x = frames + cm.sinusoidal_positions(frames.shape[1], e.d_model,
+                                         frames.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+
+    def body(layer_p, y, _):
+        y = y + _mha(layer_p["attn"], _ln(y, layer_p["ln1"], cfg.norm_eps),
+                     _ln(y, layer_p["ln1"], cfg.norm_eps), causal=False,
+                     impl=impl)
+        y = y + _gelu_mlp(layer_p["mlp"], _ln(y, layer_p["ln2"], cfg.norm_eps))
+        return y
+
+    x = cm.scan_layers(params["enc_blocks"], x, body, remat=remat)
+    return _ln(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder(params, tokens, enc_out, cfg, impl, remat):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + cm.sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+
+    def body(layer_p, y, enc):
+        y = y + _mha(layer_p["self_attn"], _ln(y, layer_p["ln1"], cfg.norm_eps),
+                     _ln(y, layer_p["ln1"], cfg.norm_eps), causal=True,
+                     impl=impl)
+        kq = _ln(y, layer_p["ln2"], cfg.norm_eps)
+        k = jnp.einsum("bsd,dhk->bshk", enc, layer_p["cross_attn"]["wk"],
+                       preferred_element_type=jnp.float32).astype(y.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", enc, layer_p["cross_attn"]["wv"],
+                       preferred_element_type=jnp.float32).astype(y.dtype)
+        y = y + _mha(layer_p["cross_attn"], kq, enc, causal=False, impl=impl,
+                     kv_override=(k, v))
+        y = y + _gelu_mlp(layer_p["mlp"], _ln(y, layer_p["ln3"], cfg.norm_eps))
+        return y
+
+    return cm.scan_layers(params["dec_blocks"], x, body, remat=remat,
+                          extra=enc_out)
+
+
+def loss_fn(params, batch, cfg, *, impl: str = "xla", remat: bool = True):
+    enc_out = encode(params, batch["frames"], cfg, impl=impl, remat=remat)
+    x = _decoder(params, batch["tokens"], enc_out, cfg, impl, remat)
+    h = _ln(x, params["ln_f"], cfg.norm_eps)
+    total, count = ops.xla_chunked_xent(
+        lambda xs, w: jnp.einsum("bsd,dv->bsv", xs, w,
+                                 preferred_element_type=jnp.float32),
+        h, batch["labels"], params["lm_head"])
+    loss = total / jnp.maximum(count, 1.0)
+    return loss, {"loss": loss}
+
+
+def _state_shapes(cfg, batch, seq, dtype):
+    e = _enc_cfg(cfg)
+    l, h, hd = cfg.num_layers, cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "k": ((l, batch, seq, h, hd), dtype),
+        "v": ((l, batch, seq, h, hd), dtype),
+        "cross_k": ((l, batch, e.num_positions, h, hd), dtype),
+        "cross_v": ((l, batch, e.num_positions, h, hd), dtype),
+    }
+
+
+_CACHE_AXES = {
+    "k": ("layers", "batch", "seq_kv", None, None),
+    "v": ("layers", "batch", "seq_kv", None, None),
+    "cross_k": ("layers", "batch", None, "tp", None),
+    "cross_v": ("layers", "batch", None, "tp", None),
+}
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shapes = _state_shapes(cfg, batch, seq, dtype)
+    return ({k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()},
+            dict(_CACHE_AXES))
+
+
+def abstract_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shapes = _state_shapes(cfg, batch, seq, dtype)
+    return ({k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()},
+            dict(_CACHE_AXES))
+
+
+def prefill_fn(params, tokens, cfg, *, impl: str = "xla", frames=None):
+    """Encode frames + run decoder prompt, building self & cross caches."""
+    b, s = tokens.shape
+    if frames is None:
+        e = _enc_cfg(cfg)
+        frames = jnp.zeros((b, e.num_positions, e.d_model), jnp.bfloat16)
+    enc_out = encode(params, frames, cfg, impl=impl, remat=False)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + cm.sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+
+    def body(carry, layer_p):
+        y = carry
+        out, kv = _mha(layer_p["self_attn"],
+                       _ln(y, layer_p["ln1"], cfg.norm_eps),
+                       _ln(y, layer_p["ln1"], cfg.norm_eps), causal=True,
+                       impl=impl, return_kv=True)
+        y = y + out
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross_attn"]["wk"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["cross_attn"]["wv"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        y = y + _mha(layer_p["cross_attn"], _ln(y, layer_p["ln2"], cfg.norm_eps),
+                     enc_out, causal=False, impl=impl, kv_override=(ck, cv))
+        y = y + _gelu_mlp(layer_p["mlp"], _ln(y, layer_p["ln3"], cfg.norm_eps))
+        return y, (kv[0], kv[1], ck, cv)
+
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_blocks"])
+    h = _ln(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    cache = {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+    return logits, cache, jnp.full((b,), s, jnp.int32)
+
+
+def decode_fn(params, cache, tokens, lengths, cfg, *, impl: str = "xla"):
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    # sinusoidal position embedding at each sequence's current position
+    x = x + cm.sinusoidal_at(lengths, cfg.d_model, x.dtype)[:, None]
+    e = _enc_cfg(cfg)
+
+    def body(carry, xs):
+        y = carry
+        layer_p, k, v, ck, cv = xs
+        h1 = _ln(y, layer_p["ln1"], cfg.norm_eps)
+        qn = jnp.einsum("bsd,dhk->bshk", h1, layer_p["self_attn"]["wq"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        kn = jnp.einsum("bsd,dhk->bshk", h1, layer_p["self_attn"]["wk"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        vn = jnp.einsum("bsd,dhk->bshk", h1, layer_p["self_attn"]["wv"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        k = cm.insert_kv(k, kn, lengths)
+        v = cm.insert_kv(v, vn, lengths)
+        o = ops.decode_attention(qn, k, v, lengths + 1, impl=impl)
+        y = y + jnp.einsum("bshk,hkd->bsd", o, layer_p["self_attn"]["wo"],
+                           preferred_element_type=jnp.float32).astype(y.dtype)
+        h2 = _ln(y, layer_p["ln2"], cfg.norm_eps)
+        q2 = jnp.einsum("bsd,dhk->bshk", h2, layer_p["cross_attn"]["wq"],
+                        preferred_element_type=jnp.float32).astype(y.dtype)
+        full = jnp.full((b,), e.num_positions, jnp.int32)
+        o2 = ops.decode_attention(q2, ck, cv, full, impl=impl)
+        y = y + jnp.einsum("bshk,hkd->bsd", o2, layer_p["cross_attn"]["wo"],
+                           preferred_element_type=jnp.float32).astype(y.dtype)
+        y = y + _gelu_mlp(layer_p["mlp"], _ln(y, layer_p["ln3"], cfg.norm_eps))
+        return y, (k, v)
+
+    x, (k, v) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    h = _ln(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, dict(cache, k=k, v=v)

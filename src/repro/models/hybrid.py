@@ -1,0 +1,358 @@
+"""zamba2-7b: Mamba2 backbone + a single weight-shared attention(+MLP) block
+applied after every ``attn_period`` Mamba2 layers (13 applications for 81
+layers, plus a 3-layer tail), Zamba-style.
+
+Mamba2 blocks follow the SSD formulation: in-proj to (x, z, B, C, dt),
+causal depthwise conv + SiLU on x/B/C, per-head scalar decay
+a_t = exp(-exp(A_log)·dt_t), recurrence via kernels/mamba2.py (TPU) or a
+chunk-rematerialized scan (training backward saves O(T/chunk) states).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models import common as cm
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+_P = 64  # mamba2 head dim
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    dinner = cfg.ssm.expand * d
+    n_heads = dinner // _P
+    return d, dinner, n_heads, cfg.ssm.state_dim, cfg.ssm.conv_width
+
+
+def make_defs(cfg, tp_size: int = 1) -> Dict:
+    del tp_size
+    l, v = cfg.num_layers, cfg.vocab_size
+    d, dinner, hm, n, w = _dims(cfg)
+    la = ("layers",)
+    mamba = {
+        "ln": cm.norm_def(cfg, stack=l),
+        "w_x": ParamDef((l, d, dinner), la + ("fsdp", "tp")),
+        "w_z": ParamDef((l, d, dinner), la + ("fsdp", "tp")),
+        "w_b": ParamDef((l, d, n), la + ("fsdp", None)),
+        "w_c": ParamDef((l, d, n), la + ("fsdp", None)),
+        "w_dt": ParamDef((l, d, hm), la + ("fsdp", "tp")),
+        "dt_bias": ParamDef((l, hm), la + (None,), init="zeros"),
+        "a_log": ParamDef((l, hm), la + (None,), init="zeros"),
+        "conv_x": ParamDef((l, w, dinner), la + (None, "tp"), scale=0.1),
+        "conv_b": ParamDef((l, w, n), la + (None, None), scale=0.1),
+        "conv_c": ParamDef((l, w, n), la + (None, None), scale=0.1),
+        "d_skip": ParamDef((l, hm), la + (None,), init="ones"),
+        "w_out": ParamDef((l, dinner, d), la + ("tp", "fsdp")),
+    }
+    shared = {
+        "attn": dict(cm.attention_defs(cfg), ln=cm.norm_def(cfg)),
+        "mlp": dict(cm.mlp_defs(cfg), ln=cm.norm_def(cfg)),
+    }
+    return {
+        "embed": ParamDef((v, d), ("tp", "fsdp")),
+        "mamba": mamba,
+        "shared": shared,
+        "ln_f": cm.norm_def(cfg),
+        "lm_head": ParamDef((d, v), ("fsdp", "tp")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x (B,S,C); w (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    s = x.shape[1]
+    for i in range(width):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * w[i][None, None]
+    return out.astype(x.dtype)
+
+
+def ssd_train(x, a, b, c, *, chunk: int = 256, impl: str = "xla",
+              return_state: bool = False):
+    """Chunk-parallel SSD (matrix form). x (B,T,H,P); a (B,T,H); b/c (B,T,H,N).
+
+    §Perf iteration B1: the token-by-token recurrence (4096 sequential
+    (B,H,P,N) state updates per layer) made zamba2 train the worst cell of
+    the fleet (0.18% of roofline, memory-bound). The SSD matrix form does
+    per-chunk MXU matmuls + a 16-step inter-chunk scan instead.
+    """
+    if impl == "pallas" and not return_state:
+        return ops.ssd(x, a, b, c, impl="pallas", chunk=chunk)
+    ys, state = ops.ssd_matrix(x, a, b, c, chunk=chunk)
+    if return_state:
+        return ys, state
+    return ys
+
+
+def mamba_block(p, x, cfg, *, impl: str = "xla", state=None,
+                return_state: bool = False):
+    """Mamba2 sublayer. Train: state=None. Decode: state dict carried.
+
+    Returns (delta, new_state)."""
+    d, dinner, hm, n, width = _dims(cfg)
+    bsz, s, _ = x.shape
+    h = cm.rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    mm = lambda y, w: jnp.einsum("bsd,de->bse", y, w,
+                                 preferred_element_type=jnp.float32).astype(x.dtype)
+    xin = mm(h, p["w_x"])                     # (B,S,dinner)
+    z = mm(h, p["w_z"])
+    b_in = mm(h, p["w_b"])                    # (B,S,N)
+    c_in = mm(h, p["w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["w_dt"],
+                   preferred_element_type=jnp.float32)
+        + p["dt_bias"][None, None].astype(jnp.float32))        # (B,S,Hm)
+
+    decode = state is not None
+    if decode:
+        conv_win = jnp.concatenate([state["conv_x"], xin], axis=1)
+        xc = jnp.einsum("bwc,wc->bc", conv_win.astype(jnp.float32),
+                        p["conv_x"].astype(jnp.float32))[:, None]
+        bwin = jnp.concatenate([state["conv_b"], b_in], axis=1)
+        bc = jnp.einsum("bwc,wc->bc", bwin.astype(jnp.float32),
+                        p["conv_b"].astype(jnp.float32))[:, None]
+        cwin = jnp.concatenate([state["conv_c"], c_in], axis=1)
+        cc = jnp.einsum("bwc,wc->bc", cwin.astype(jnp.float32),
+                        p["conv_c"].astype(jnp.float32))[:, None]
+        new_conv = {"conv_x": conv_win[:, 1:], "conv_b": bwin[:, 1:],
+                    "conv_c": cwin[:, 1:]}
+    else:
+        xc = _causal_conv(xin, p["conv_x"])
+        bc = _causal_conv(b_in, p["conv_b"])
+        cc = _causal_conv(c_in, p["conv_c"])
+    xc = ref.swish(xc.astype(jnp.float32))
+    bc = ref.swish(bc.astype(jnp.float32))
+    cc = ref.swish(cc.astype(jnp.float32))
+
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None, None] * dt)
+    xh = xc.reshape(bsz, -1, hm, _P) * dt[..., None]
+
+    if decode:
+        bh = jnp.broadcast_to(bc[:, :, None, :], (bsz, 1, hm, n))
+        ch = jnp.broadcast_to(cc[:, :, None, :], (bsz, 1, hm, n))
+        y, ssm = ref.ssd_decode(xh[:, 0], a[:, 0], bh[:, 0], ch[:, 0],
+                                state["ssm"])
+        y = y[:, None]
+        new_state = dict(new_conv, ssm=ssm)
+    else:
+        # b/c stay (B,S,N): shared across heads, never broadcast (§Perf B2)
+        y = ssd_train(xh, a, bc, cc, chunk=cfg.ssm.chunk, impl=impl)
+        new_state = None
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xc.reshape(bsz, -1, hm, _P)
+    y = y.reshape(bsz, -1, dinner).astype(x.dtype)
+    y = y * ref.swish(z.astype(jnp.float32)).astype(x.dtype)
+    delta = jnp.einsum("bse,ed->bsd", y, p["w_out"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return constrain(delta, cm.RESID), new_state
+
+
+def _shared_block(p, x, positions, cfg, impl):
+    x = x + cm.attention_sublayer(p["attn"], x, positions, cfg, impl=impl)
+    x = x + cm.mlp_sublayer(p["mlp"], x, cfg, impl=impl)
+    return constrain(x, cm.RESID)
+
+
+def _group_split(cfg):
+    period = cfg.attn_period
+    n_groups = cfg.num_layers // period
+    tail = cfg.num_layers - n_groups * period
+    return period, n_groups, tail
+
+
+def _split_params(params, cfg):
+    period, n_groups, tail = _group_split(cfg)
+    head = jax.tree.map(
+        lambda a: a[: n_groups * period].reshape(
+            (n_groups, period) + a.shape[1:]), params["mamba"])
+    tail_p = jax.tree.map(lambda a: a[n_groups * period:], params["mamba"])
+    return head, tail_p, n_groups, tail
+
+
+def loss_fn(params, batch, cfg, *, impl: str = "xla", remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    bsz, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    head, tail_p, n_groups, tail = _split_params(params, cfg)
+
+    def mamba_step(carry, layer_p):
+        delta, _ = mamba_block(layer_p, carry, cfg, impl=impl)
+        return constrain(carry + delta, cm.RESID), None
+
+    def group_body(carry, group_p):
+        y, _ = jax.lax.scan(mamba_step, carry, group_p)
+        y = _shared_block(params["shared"], y, positions, cfg, impl)
+        return y, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+        mamba_tail = jax.checkpoint(mamba_step, prevent_cse=False)
+    else:
+        mamba_tail = mamba_step
+    x, _ = jax.lax.scan(group_body, x, head)
+    if tail:
+        x, _ = jax.lax.scan(mamba_tail, x, tail_p)
+    loss = cm.lm_loss(x, labels, params["ln_f"], params["lm_head"], cfg,
+                      impl=impl)
+    return loss, {"loss": loss}
+
+
+def _state_shapes(cfg, batch: int, seq: int, dtype):
+    d, dinner, hm, n, width = _dims(cfg)
+    period, n_groups, tail = _group_split(cfg)
+    l = cfg.num_layers
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "conv_x": ((l, batch, width - 1, dinner), dtype),
+        "conv_b": ((l, batch, width - 1, n), dtype),
+        "conv_c": ((l, batch, width - 1, n), dtype),
+        "ssm": ((l, batch, hm, _P, n), jnp.float32),
+        "attn_k": ((n_groups, batch, seq, kv, hd), dtype),
+        "attn_v": ((n_groups, batch, seq, kv, hd), dtype),
+    }
+
+
+_CACHE_AXES = {
+    "conv_x": ("layers", "batch", None, "tp"),
+    "conv_b": ("layers", "batch", None, None),
+    "conv_c": ("layers", "batch", None, None),
+    "ssm": ("layers", "batch", "tp", None, None),
+    "attn_k": ("layers", "batch", "seq_kv", None, None),
+    "attn_v": ("layers", "batch", "seq_kv", None, None),
+}
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shapes = _state_shapes(cfg, batch, seq, dtype)
+    return ({k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()},
+            dict(_CACHE_AXES))
+
+
+def abstract_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shapes = _state_shapes(cfg, batch, seq, dtype)
+    return ({k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()},
+            dict(_CACHE_AXES))
+
+
+def prefill_fn(params, tokens, cfg, *, impl: str = "xla"):
+    """Prefill: run all blocks over the prompt, collecting final states."""
+    bsz, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    d, dinner, hm, n, width = _dims(cfg)
+    period, n_groups, tail = _group_split(cfg)
+
+    def mamba_prefill(carry, layer_p):
+        y = carry
+        h = cm.rmsnorm(y, layer_p["ln"], cfg.norm_eps, impl)
+        xin = jnp.einsum("bsd,de->bse", h, layer_p["w_x"],
+                         preferred_element_type=jnp.float32).astype(y.dtype)
+        b_in = jnp.einsum("bsd,de->bse", h, layer_p["w_b"],
+                          preferred_element_type=jnp.float32).astype(y.dtype)
+        c_in = jnp.einsum("bsd,de->bse", h, layer_p["w_c"],
+                          preferred_element_type=jnp.float32).astype(y.dtype)
+        delta, _ = mamba_block(layer_p, y, cfg, impl=impl)
+        # conv windows = last (width-1) pre-conv activations
+        conv = (xin[:, s - width + 1:], b_in[:, s - width + 1:],
+                c_in[:, s - width + 1:])
+        # final ssm state via return_state replay of the decay recurrence
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", h, layer_p["w_dt"],
+                       preferred_element_type=jnp.float32)
+            + layer_p["dt_bias"][None, None].astype(jnp.float32))
+        xc = ref.swish(_causal_conv(xin, layer_p["conv_x"]).astype(jnp.float32))
+        bc = ref.swish(_causal_conv(b_in, layer_p["conv_b"]).astype(jnp.float32))
+        cc = ref.swish(_causal_conv(c_in, layer_p["conv_c"]).astype(jnp.float32))
+        a = jnp.exp(-jnp.exp(layer_p["a_log"].astype(jnp.float32))[None, None]
+                    * dt)
+        xh = xc.reshape(bsz, s, hm, _P) * dt[..., None]
+        _, ssm = ssd_train(xh, a, bc, cc, chunk=cfg.ssm.chunk, impl="xla",
+                           return_state=True)
+        return constrain(y + delta, cm.RESID), (conv, ssm)
+
+    def group_body(carry, group_p):
+        y, states = jax.lax.scan(mamba_prefill, carry, group_p)
+        out, kv = cm.attention_sublayer(params["shared"]["attn"], y,
+                                        positions, cfg, impl=impl,
+                                        return_kv=True)
+        y = y + out
+        y = y + cm.mlp_sublayer(params["shared"]["mlp"], y, cfg, impl=impl)
+        return constrain(y, cm.RESID), (states, kv)
+
+    head, tail_p, n_groups, tail = _split_params(params, cfg)
+    x, (head_states, (ck, cv)) = jax.lax.scan(group_body, x, head)
+    states_list = [jax.tree.map(
+        lambda a: a.reshape((n_groups * period,) + a.shape[2:]), head_states)]
+    if tail:
+        x, tail_states = jax.lax.scan(mamba_prefill, x, tail_p)
+        states_list.append(tail_states)
+    merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                          *states_list) if tail else states_list[0]
+    (conv_x, conv_b, conv_c), ssm = merged
+    cache = {"conv_x": conv_x.astype(x.dtype), "conv_b": conv_b.astype(x.dtype),
+             "conv_c": conv_c.astype(x.dtype), "ssm": ssm,
+             "attn_k": ck, "attn_v": cv}
+    h = cm.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, cache, jnp.full((bsz,), s, jnp.int32)
+
+
+def decode_fn(params, cache, tokens, lengths, cfg, *, impl: str = "xla"):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    period, n_groups, tail = _group_split(cfg)
+
+    def split_head_tail(tree, n_head):
+        head = jax.tree.map(
+            lambda a: a[:n_head].reshape((n_groups, period) + a.shape[1:]),
+            tree)
+        tl = jax.tree.map(lambda a: a[n_head:], tree)
+        return head, tl
+
+    mamba_cache = {k: cache[k] for k in ("conv_x", "conv_b", "conv_c", "ssm")}
+    head_p, tail_p, _, _ = _split_params(params, cfg)
+    head_c, tail_c = jax.tree.map(
+        lambda t: t, split_head_tail(mamba_cache, n_groups * period))
+
+    def mamba_step(carry, xs):
+        y = carry
+        layer_p, st = xs
+        delta, new_st = mamba_block(layer_p, y, cfg, impl=impl, state=st)
+        return y + delta, new_st
+
+    def group_body(carry, xs):
+        y = carry
+        group_p, group_c, ck, cv = xs
+        y, new_c = jax.lax.scan(mamba_step, y, (group_p, group_c))
+        p = params["shared"]["attn"]
+        delta, ck, cv = cm.decode_attention_sublayer(p, y, ck, cv, lengths,
+                                                     cfg, impl=impl)
+        y = y + delta
+        y = y + cm.mlp_sublayer(params["shared"]["mlp"], y, cfg, impl=impl)
+        return y, (new_c, ck, cv)
+
+    x, (head_new, ck, cv) = jax.lax.scan(
+        group_body, x, (head_p, head_c, cache["attn_k"], cache["attn_v"]))
+    head_new = jax.tree.map(
+        lambda a: a.reshape((n_groups * period,) + a.shape[2:]), head_new)
+    if tail:
+        x, tail_new = jax.lax.scan(mamba_step, x, (tail_p, tail_c))
+        merged = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                              head_new, tail_new)
+    else:
+        merged = head_new
+    new_cache = dict(merged, attn_k=ck, attn_v=cv)
+    h = cm.rmsnorm(x, params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,222 @@
+"""Mixture-of-Experts transformer (moonshot-v1-16b-a3b, qwen2-moe-a2.7b).
+
+Routing is top-k with capacity; dispatch is *sort-based* (MegaBlocks-style
+argsort into a dense (E, C, D) buffer) rather than one-hot einsum, so the
+dispatch tensors stay O(T·k) instead of O(T·E·C). Expert weights carry the
+'expert' logical axis (EP over the TP mesh axis when E divides |model|,
+otherwise TP over d_ff — qwen's 60 experts don't divide 16).
+
+Shared experts (both assigned MoEs have them) run as a dense SwiGLU branch.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+EXPERT_BUF = ("batch", "expert", None, None)
+
+
+def make_defs(cfg, tp_size: int = 1) -> Dict:
+    l, d, v = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    m = cfg.moe
+    ep_ok = tp_size <= 1 or m.num_experts % tp_size == 0
+    # EP when experts divide the TP axis; otherwise shard expert d_ff on TP.
+    e_axes = ("layers", "expert", "fsdp", None) if ep_ok \
+        else ("layers", None, "fsdp", "tp")
+    e_axes_dn = ("layers", "expert", None, "fsdp") if ep_ok \
+        else ("layers", None, "tp", "fsdp")
+    moe_block = {
+        "router": ParamDef((l, d, m.num_experts), ("layers", "fsdp", None)),
+        "wg": ParamDef((l, m.num_experts, d, m.expert_d_ff), e_axes),
+        "wu": ParamDef((l, m.num_experts, d, m.expert_d_ff), e_axes),
+        "wd": ParamDef((l, m.num_experts, m.expert_d_ff, d), e_axes_dn),
+        "ln": cm.norm_def(cfg, stack=l),
+    }
+    if m.num_shared_experts:
+        f_sh = m.shared_d_ff * m.num_shared_experts
+        moe_block["shared"] = cm.mlp_defs(cfg, stack=l, d_ff=f_sh)
+    blocks = {
+        "attn": dict(cm.attention_defs(cfg, stack=l),
+                     ln=cm.norm_def(cfg, stack=l)),
+        "moe": moe_block,
+    }
+    return {
+        "embed": ParamDef((v, d), ("tp", "fsdp")),
+        "blocks": blocks,
+        "ln_f": cm.norm_def(cfg),
+        "lm_head": ParamDef((d, v), ("fsdp", "tp")),
+    }
+
+
+def _capacity(group_size: int, k: int, e: int, cf: float) -> int:
+    c = int(group_size * k / e * cf) + 1
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def _dispatch_one_group(x, logits, *, k: int, e: int, c: int):
+    """x (T,D); logits (T,E). Returns (buf (E,C,D), combine meta)."""
+    t = x.shape[0]
+    w, idx = ref.topk_router(logits, k)          # (T,k)
+    flat_e = idx.reshape(-1)                     # (T*k,)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - seg_start[sorted_e]
+    valid = pos_in_e < c
+    slot = jnp.where(valid, sorted_e * c + pos_in_e, e * c)  # OOB -> dropped
+    token_id = order // k
+    buf = jnp.zeros((e * c, x.shape[1]), x.dtype).at[slot].set(
+        x[token_id], mode="drop")
+    meta = (slot, token_id, flat_w[order], valid)
+    return buf.reshape(e, c, -1), meta
+
+
+def _combine_one_group(y_buf, meta, t: int, d: int):
+    """y_buf (E,C,D) expert outputs -> (T,D) weighted combine."""
+    slot, token_id, w_sorted, valid = meta
+    y_flat = y_buf.reshape(-1, d)
+    picked = y_flat.at[slot].get(mode="fill", fill_value=0)  # OOB -> 0
+    picked = picked * (w_sorted * valid.astype(jnp.float32)
+                       )[:, None].astype(y_buf.dtype)
+    return jnp.zeros((t, d), y_buf.dtype).at[token_id].add(
+        picked.astype(y_buf.dtype))
+
+
+def moe_sublayer(p, x, cfg, *, impl: str = "xla"):
+    """Pre-norm MoE MLP. x (B,S,D). Returns (delta, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    h = cm.rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    # gather the sequence-parallel residual BEFORE dispatch: row-gathers from
+    # a seq-sharded tensor lower to cross-shard select+all-reduce chains
+    # (§Perf C2 — was ~1 TB/step of f32/u32 collectives at moonshot scale)
+    h = constrain(h, cm.GATHERED)
+    logits = jnp.einsum("bsd,de->bse", h, p["router"],
+                        preferred_element_type=jnp.float32)
+    c = _capacity(s, m.top_k, m.num_experts, m.capacity_factor)
+
+    buf, meta = jax.vmap(
+        lambda xx, ll: _dispatch_one_group(xx, ll, k=m.top_k,
+                                           e=m.num_experts, c=c))(h, logits)
+    buf = constrain(buf, EXPERT_BUF)
+    # ZeRO gather made explicit (§Perf C1): expert weights are stored
+    # FSDP-sharded on D; without the constraint the SPMD partitioner keeps
+    # them sharded and ALL-REDUCES the (B,E,C,F) activations over the data
+    # axis instead (~10× the bytes of gathering the weights). Only worth it
+    # when the token volume amortizes the gather — decode steps (B tokens)
+    # keep the sharded weights.
+    if b * s >= 4096:
+        wg = constrain(p["wg"], ("expert", None, None))
+        wu = constrain(p["wu"], ("expert", None, None))
+        wd = constrain(p["wd"], ("expert", None, None))
+    else:
+        wg, wu, wd = p["wg"], p["wu"], p["wd"]
+    # expert SwiGLU: (B,E,C,D) x (E,D,F)
+    g = jnp.einsum("becd,edf->becf", buf, wg)
+    u = jnp.einsum("becd,edf->becf", buf, wu)
+    a = (ref.swish(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    y_buf = jnp.einsum("becf,efd->becd", a, wd).astype(x.dtype)
+    y_buf = constrain(y_buf, EXPERT_BUF)
+    y = jax.vmap(lambda yy, mm: _combine_one_group(yy, mm, s, d))(y_buf, meta)
+
+    if m.num_shared_experts:
+        y = y + cm.mlp_sublayer(dict(p["shared"], ln=p["ln"]), x, cfg,
+                                impl=impl)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    probs = ref.softmax(logits, axis=-1)                      # (B,S,E)
+    _, top_idx = jax.lax.top_k(logits, m.top_k)
+    sel = jax.nn.one_hot(top_idx, m.num_experts, dtype=jnp.float32)
+    f = jnp.mean(jnp.sum(sel, axis=2), axis=(0, 1))           # fraction routed
+    pbar = jnp.mean(probs, axis=(0, 1))
+    aux = m.num_experts * jnp.sum(f * pbar) / m.top_k
+    return constrain(y, cm.RESID), aux
+
+
+def _block(layer_p, carry, extra, cfg, impl):
+    x, aux = carry
+    positions = extra
+    x = x + cm.attention_sublayer(layer_p["attn"], x, positions, cfg,
+                                  impl=impl)
+    delta, a = moe_sublayer(layer_p["moe"], x, cfg, impl=impl)
+    x = constrain(x + delta, cm.RESID)
+    return (x, aux + a)
+
+
+def loss_fn(params, batch, cfg, *, impl: str = "xla", remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_p):
+        return _block(layer_p, carry, positions, cfg, impl), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    ce = cm.lm_loss(x, labels, params["ln_f"], params["lm_head"], cfg,
+                    impl=impl)
+    loss = ce + cfg.moe.router_aux_weight * aux / cfg.num_layers
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill_fn(params, tokens, cfg, *, impl: str = "xla"):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, layer_p):
+        y = carry
+        out, kv = cm.attention_sublayer(layer_p["attn"], y, positions, cfg,
+                                        impl=impl, return_kv=True)
+        y = y + out
+        delta, _ = moe_sublayer(layer_p["moe"], y, cfg, impl=impl)
+        y = constrain(y + delta, cm.RESID)
+        return y, kv
+
+    x, (ck, cv) = jax.lax.scan(body, x, params["blocks"])
+    h = cm.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"k": ck, "v": cv}, jnp.full((b,), s, jnp.int32)
+
+
+init_cache = dense.init_cache
+abstract_cache = dense.abstract_cache
+
+
+def decode_fn(params, cache, tokens, lengths, cfg, *, impl: str = "xla"):
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(carry, xs):
+        y = carry
+        layer_p, ck, cv = xs
+        delta, ck, cv = cm.decode_attention_sublayer(
+            layer_p["attn"], y, ck, cv, lengths, cfg, impl=impl)
+        y = y + delta
+        md, _ = moe_sublayer(layer_p["moe"], y, cfg, impl=impl)
+        y = y + md
+        return y, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = cm.rmsnorm(x, params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"k": ck, "v": cv}

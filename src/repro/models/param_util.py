@@ -1,0 +1,65 @@
+"""Spec-first parameter definitions.
+
+Each model describes its parameters once as a pytree of :class:`ParamDef`
+(shape + logical sharding axes + initializer). Real initialization (smoke
+tests, training), abstract ShapeDtypeStructs (dry-run), and logical sharding
+specs (launcher) all derive from the same table, so they can never drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Optional[jnp.dtype] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, rng: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for r, d in zip(rngs, leaves):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            out.append((jax.random.normal(r, d.shape, jnp.float32)
+                        * d.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype), defs,
+        is_leaf=_is_def)
+
+
+def logical_specs(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def param_bytes(defs, dtype=jnp.bfloat16) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=_is_def):
+        itemsize = jnp.dtype(d.dtype or dtype).itemsize
+        total += int(np.prod(d.shape)) * itemsize
+    return total

@@ -1,0 +1,242 @@
+"""RWKV6 "Finch" LM (rwkv6-7b): attention-free, data-dependent decay.
+
+Time-mix uses token-shift lerps and a low-rank (LoRA) data-dependent decay
+w_t = exp(-exp(w0 + tanh(x̄ A) B)); the WKV recurrence runs through
+kernels/rwkv6.py on TPU and the chunk-parallel matrix form
+(ops.wkv6_matrix) under XLA training.
+
+Channel-mix is the RWKV squared-ReLU MLP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models import common as cm
+from repro.models.param_util import ParamDef
+from repro.sharding import constrain
+
+_LORA = 64
+
+
+def make_defs(cfg, tp_size: int = 1) -> Dict:
+    del tp_size
+    l, d, v, f = cfg.num_layers, cfg.d_model, cfg.vocab_size, cfg.d_ff
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    la = ("layers",)
+
+    def vec(init="normal", scale=0.02):
+        return ParamDef((l, d), la + (None,), init=init, scale=scale)
+
+    tm = {
+        "ln": cm.norm_def(cfg, stack=l),
+        "mu_r": vec("zeros"), "mu_k": vec("zeros"), "mu_v": vec("zeros"),
+        "mu_w": vec("zeros"), "mu_g": vec("zeros"),
+        "wr": ParamDef((l, d, d), la + ("fsdp", "tp")),
+        "wk": ParamDef((l, d, d), la + ("fsdp", "tp")),
+        "wv": ParamDef((l, d, d), la + ("fsdp", "tp")),
+        "wg": ParamDef((l, d, d), la + ("fsdp", "tp")),
+        "w_lora_a": ParamDef((l, d, _LORA), la + ("fsdp", None)),
+        "w_lora_b": ParamDef((l, _LORA, d), la + (None, "tp")),
+        "w0": vec("zeros"),
+        "u": ParamDef((l, h, hd), la + ("tp", None)),
+        "ln_x": cm.norm_def(cfg, stack=l),
+        "wo": ParamDef((l, d, d), la + ("tp", "fsdp")),
+    }
+    cmix = {
+        "ln": cm.norm_def(cfg, stack=l),
+        "mu": vec("zeros"),
+        "wk": ParamDef((l, d, f), la + ("fsdp", "tp")),
+        "wv": ParamDef((l, f, d), la + ("tp", "fsdp")),
+    }
+    return {
+        "embed": ParamDef((v, d), ("tp", "fsdp")),
+        "blocks": {"tm": tm, "cm": cmix},
+        "ln_f": cm.norm_def(cfg),
+        "lm_head": ParamDef((d, v), ("fsdp", "tp")),
+    }
+
+
+def _token_shift(x):
+    """x (B,S,D) -> previous token (zeros at position 0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * jax.nn.sigmoid(mu)
+
+
+def wkv6_train(r, k, v, w, u, *, chunk: int = 32, impl: str = "xla",
+               return_state: bool = False):
+    """Chunk-parallel WKV6 (matrix form) for training. r/k/v/w (B,T,H,D).
+
+    §Perf (beyond the three hillclimb cells): replaces the 4096-step token
+    recurrence (rank-1 (B,H,D,D) state updates — memory-bound) with
+    per-chunk masked matmuls + a T/chunk-step inter-chunk scan; exact for
+    arbitrary per-channel data-dependent decay (see ops.wkv6_matrix).
+    """
+    if impl == "pallas" and not return_state:
+        return ops.wkv6(r, k, v, w, u, impl="pallas", chunk=max(chunk, 128))
+    outs, state = ops.wkv6_matrix(r, k, v, w, u, chunk=chunk)
+    if return_state:
+        return outs, state
+    return outs
+
+
+def time_mix(p, x, cfg, *, impl: str = "xla", state=None, x_prev=None,
+             return_state: bool = False):
+    """RWKV6 time-mix. Train: full sequence. Decode: state/x_prev carried.
+
+    Returns (delta, new_state, new_x_prev) — latter two None in train mode
+    unless ``return_state`` (prefill) is set.
+    """
+    h_, hd = cfg.num_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    hx = cm.rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    decode = state is not None
+    prev = x_prev[:, None, :] if decode else _token_shift(hx)
+
+    def mix(mu):
+        return _lerp(hx, prev, mu)
+
+    mm = lambda y, w: jnp.einsum("bsd,de->bse", y, w,
+                                 preferred_element_type=jnp.float32)
+    r = mm(mix(p["mu_r"]), p["wr"])
+    k = mm(mix(p["mu_k"]), p["wk"])
+    v = mm(mix(p["mu_v"]), p["wv"])
+    g = mm(mix(p["mu_g"]), p["wg"])
+    xw = mix(p["mu_w"])
+    logw = p["w0"][None, None] + jnp.einsum(
+        "bsl,le->bse", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])),
+        p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))          # (B,S,D) in (0,1)
+
+    per_head = lambda y: y.reshape(b, -1, h_, hd)
+    r4, k4, v4, w4 = per_head(r), per_head(k), per_head(v), per_head(w)
+    if decode:
+        out, state = ref.wkv6_decode(r4[:, 0], k4[:, 0], v4[:, 0], w4[:, 0],
+                                     p["u"], state)
+        out = out[:, None]
+        new_prev = hx[:, -1]
+    elif return_state:
+        out, state = wkv6_train(r4, k4, v4, w4, p["u"],
+                                chunk=cfg.ssm.chunk if cfg.ssm else 128,
+                                impl=impl, return_state=True)
+        new_prev = hx[:, -1]
+    else:
+        out = wkv6_train(r4, k4, v4, w4, p["u"],
+                         chunk=cfg.ssm.chunk if cfg.ssm else 128, impl=impl)
+        state, new_prev = None, None
+    out = out.reshape(b, -1, h_ * hd)
+    out = cm.rmsnorm(out.astype(x.dtype), p["ln_x"], cfg.norm_eps, impl)
+    out = out * ref.swish(g).astype(x.dtype)
+    delta = jnp.einsum("bse,ed->bsd", out, p["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return constrain(delta, cm.RESID), state, new_prev
+
+
+def channel_mix(p, x, cfg, *, impl: str = "xla", x_prev=None):
+    hx = cm.rmsnorm(x, p["ln"], cfg.norm_eps, impl)
+    decode = x_prev is not None
+    prev = x_prev[:, None, :] if decode else _token_shift(hx)
+    xk = _lerp(hx, prev, p["mu"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"],
+                   preferred_element_type=jnp.float32)
+    k = constrain(jnp.square(jax.nn.relu(k)).astype(x.dtype), cm.ACT_FF)
+    delta = jnp.einsum("bsf,fd->bsd", k, p["wv"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    new_prev = hx[:, -1] if decode else None
+    return constrain(delta, cm.RESID), new_prev
+
+
+def loss_fn(params, batch, cfg, *, impl: str = "xla", remat: bool = True):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+
+    def body(layer_p, y, _extra):
+        d1, _, _ = time_mix(layer_p["tm"], y, cfg, impl=impl)
+        y = y + d1
+        d2, _ = channel_mix(layer_p["cm"], y, cfg, impl=impl)
+        return constrain(y + d2, cm.RESID)
+
+    x = cm.scan_layers(params["blocks"], x, body, remat=remat)
+    loss = cm.lm_loss(x, labels, params["ln_f"], params["lm_head"], cfg,
+                      impl=impl)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    del seq  # O(1) state — this is the point of long_500k for this arch
+    l, d = cfg.num_layers, cfg.d_model
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    cache = {
+        "wkv": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((l, batch, d), dtype),
+        "x_cm": jnp.zeros((l, batch, d), dtype),
+    }
+    axes = {
+        "wkv": ("layers", "batch", "tp", None, None),
+        "x_tm": ("layers", "batch", None),
+        "x_cm": ("layers", "batch", None),
+    }
+    return cache, axes
+
+
+def abstract_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    cache, axes = init_cache(cfg, batch, seq, dtype)
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        cache), axes
+
+
+def prefill_fn(params, tokens, cfg, *, impl: str = "xla"):
+    """Prefill = run the recurrence over the prompt, keeping final states."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, cm.RESID)
+
+    def body(carry, layer_p):
+        y = carry
+        d1, wkv_s, x_tm = time_mix(layer_p["tm"], y, cfg, impl=impl,
+                                   return_state=True)
+        y = y + d1
+        hx2 = cm.rmsnorm(y, layer_p["cm"]["ln"], cfg.norm_eps, impl)
+        x_cm = hx2[:, -1]
+        d2, _ = channel_mix(layer_p["cm"], y, cfg, impl=impl)
+        y = constrain(y + d2, cm.RESID)
+        return y, (wkv_s, x_tm, x_cm)
+
+    x, (wkv, x_tm, x_cm) = jax.lax.scan(body, x, params["blocks"])
+    cache = {"wkv": wkv, "x_tm": x_tm.astype(x.dtype),
+             "x_cm": x_cm.astype(x.dtype)}
+    h = cm.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, cache, jnp.full((b,), s, jnp.int32)
+
+
+def decode_fn(params, cache, tokens, lengths, cfg, *, impl: str = "xla"):
+    del lengths  # state-based; no positional bookkeeping needed
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(carry, xs):
+        y = carry
+        layer_p, wkv_s, x_tm, x_cm = xs
+        d1, wkv_s, x_tm = time_mix(layer_p["tm"], y, cfg, impl=impl,
+                                   state=wkv_s, x_prev=x_tm)
+        y = y + d1
+        d2, x_cm = channel_mix(layer_p["cm"], y, cfg, impl=impl, x_prev=x_cm)
+        y = y + d2
+        return y, (wkv_s, x_tm, x_cm)
+
+    x, (wkv, x_tm, x_cm) = jax.lax.scan(
+        body, x, (params["blocks"], cache["wkv"], cache["x_tm"],
+                  cache["x_cm"]))
+    h = cm.rmsnorm(x, params["ln_f"], cfg.norm_eps, impl)
+    logits = jnp.einsum("btd,dv->btv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)[:, 0]
+    return logits, {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    CompressionState, compress_int8, decompress_int8, ef_compress_grads,
+    compression_init,
+)

@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback (1000+-node DP reduce trick).
+
+int8 per-tensor-scaled quantization with an error-feedback residual buffer:
+the quantization error of step t is added back to the gradient of step t+1,
+so the *accumulated* update is unbiased and convergence matches fp32 (Seide
+et al. / Karimireddy et al.). On a real multi-pod deployment the quantized
+tensor is what crosses the DCN between pods (8× fewer bytes on the slowest
+link); in-pod reduction stays bf16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    error: Any  # pytree of f32 residuals, mirrors grads
+
+
+def compression_init(params) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32 -> (int8 values, f32 scale). Symmetric per-tensor scaling."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, state: CompressionState
+                      ) -> Tuple[Any, CompressionState]:
+    """Apply error-feedback int8 compression to a gradient pytree.
+
+    Returns (decompressed grads as seen post-reduce, new residual state).
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        deq = decompress_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = tdef.unflatten([o[0] for o in outs])
+    new_e = tdef.unflatten([o[1] for o in outs])
+    return new_g, CompressionState(error=new_e)

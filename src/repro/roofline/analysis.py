@@ -1,0 +1,175 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` is post-SPMD, i.e. per-device, so the
+chips-denominator in the assignment formula is already applied.
+Collective bytes are not in cost_analysis — we parse the optimized HLO and
+sum result-shape bytes of every collective op.
+
+This module doubles as the "profiler" whose output the KForge
+performance-analysis agent G interprets (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e, per chip.
+HW_V5E = {
+    "peak_flops": 197e12,    # bf16 FLOP/s
+    "hbm_bw": 819e9,         # B/s
+    "ici_bw": 50e9,          # B/s per link
+    "hbm_bytes": 16e9,
+    "vmem_bytes": 128 * 2 ** 20,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# e.g.  "%ar = bf16[16,2048]{1,0} all-reduce(...)" or tuple shapes
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    per_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    total = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        matched = None
+        for c in _COLLECTIVES:
+            # fusion/computation labels can mention names; require call syntax
+            if f" {c}(" in stripped or f"{c}-start(" in stripped:
+                matched = c
+                break
+        if not matched:
+            continue
+        # result shape(s) = everything left of the '=' sign
+        lhs_rhs = stripped.split("=", 1)
+        if len(lhs_rhs) != 2:
+            continue
+        rhs = lhs_rhs[1]
+        # take shapes up to the op name (the result type annotation)
+        head = rhs.split(matched)[0]
+        size = sum(_shape_bytes(dt, dims)
+                   for dt, dims in _SHAPE_RE.findall(head))
+        per_op[matched] += size
+        total += size
+    return total, {k: v for k, v in per_op.items() if v}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    bytes_per_device: Optional[float] = None  # from memory_analysis
+    # TPU-wire estimate: CPU legalizes bf16 dots to f32 pre-SPMD, inflating
+    # dot-adjacent collectives 2×; this term halves the f32 subset.
+    collective_s_tpu_wire: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time bound = max of the three overlappable terms
+        (raw/conservative collective accounting)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_tpu_s(self) -> float:
+        """Step-time bound with the TPU-wire collective estimate."""
+        return max(self.compute_s, self.memory_s,
+                   self.collective_s_tpu_wire or self.collective_s)
+
+    @property
+    def roofline_fraction_tpu(self) -> float:
+        denom = self.chips * HW_V5E["peak_flops"] * self.step_time_tpu_s
+        return self.model_flops_total / denom if denom else 0.0
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste."""
+        hw_total = self.hlo_flops_per_device * self.chips
+        return self.model_flops_total / hw_total if hw_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Model MFU bound: useful FLOPs / (chips × peak × step_time)."""
+        denom = self.chips * HW_V5E["peak_flops"] * self.step_time_s
+        return self.model_flops_total / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 roofline_fraction=self.roofline_fraction,
+                 step_time_tpu_s=self.step_time_tpu_s,
+                 roofline_fraction_tpu=self.roofline_fraction_tpu)
+        return d
+
+
+def roofline_report(*, arch: str, shape: str, mesh_desc: str, chips: int,
+                    cost: Dict, hlo_text: str, model_flops_total: float,
+                    bytes_per_device: Optional[float] = None,
+                    hw: Dict = HW_V5E) -> RooflineReport:
+    """Build the three-term report.
+
+    ``compiled.cost_analysis()`` counts while-loop bodies once (verified —
+    EXPERIMENTS.md §Roofline), so the terms use the loop-aware analyzer in
+    :mod:`repro.roofline.hlo_cost`; the raw cost_analysis numbers are kept
+    in the record for reference.
+    """
+    from repro.roofline import hlo_cost as _hc
+    res = _hc.analyze(hlo_text)
+    flops = res.flops or float(cost.get("flops", 0.0))
+    byts = res.bytes or float(cost.get("bytes accessed", 0.0))
+    cbytes = res.collective_bytes
+    breakdown = {k: int(v) for k, v in res.collective_breakdown.items()}
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=byts,
+        collective_bytes_per_device=float(cbytes),
+        collective_breakdown=breakdown,
+        compute_s=flops / hw["peak_flops"],
+        memory_s=byts / hw["hbm_bw"],
+        collective_s=cbytes / hw["ici_bw"],
+        model_flops_total=model_flops_total,
+        bytes_per_device=bytes_per_device,
+        collective_s_tpu_wire=res.collective_bytes_tpu_wire / hw["ici_bw"],
+    )

@@ -1,0 +1,327 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE regardless of
+trip count, which under-counts scan-over-layers models by ~num_layers×
+(verified empirically — see EXPERIMENTS.md §Roofline). This module parses
+the post-SPMD HLO, builds the computation call graph, extracts loop trip
+counts from loop-condition constants, and accumulates:
+
+  * FLOPs        — from dot ops (2 · |result| · K, K = contracted extent)
+  * HBM bytes    — per top-level op ≈ one kernel: operand + result bytes
+                   (fusions count their boundary, matching real HBM traffic)
+  * collective bytes — result bytes of all-reduce / all-gather /
+                   reduce-scatter / all-to-all / collective-permute,
+                   multiplied by enclosing loop trip counts
+
+All numbers are per-device (the HLO is the post-partitioning module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "  %name = <type> opcode(...), attrs" | "  ROOT %name = ..."
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:to_apply|calls|body|condition|branch_computations)="
+                        r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id"}
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attrs
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    symbols: Dict[str, str]  # op name -> result type string
+
+
+def parse_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and "{" in line:
+                cur = _Computation(m.group(1), [], {})
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            op = _Op(name, type_str.strip(), opcode, rest)
+            cur.ops.append(op)
+            cur.symbols[name] = op.type_str
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands come first, before `)`, as %name tokens
+    head = rest.split(")")[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    result = _shapes_of(op.type_str)
+    if not result:
+        return 0.0
+    n_result = 1
+    for d in result[0][1]:
+        n_result *= d
+    # contracted extent from lhs shape + lhs_contracting_dims
+    ops_ = _operand_names(op.rest)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if m and ops_:
+        lhs_type = comp.symbols.get(ops_[0], "")
+        lhs_shapes = _shapes_of(lhs_type)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for i in (int(x) for x in m.group(1).split(",") if x):
+                if i < len(dims):
+                    k *= dims[i]
+    return 2.0 * n_result * k
+
+
+def _trip_count(cond: _Computation) -> int:
+    """jax loops compare the induction var against a constant with LT."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.opcode + "(" + op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.rest:
+            for name in _operand_names(op.rest):
+                if name in consts:
+                    return consts[name]
+    # fallback: any constant in the cond
+    return max(consts.values(), default=1)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_f32: float = 0.0   # subset moved as f32 on the wire
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_bytes_f32 += other.collective_bytes_f32 * mult
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = (
+                self.collective_breakdown.get(k, 0.0) + v * mult)
+
+    @property
+    def collective_bytes_tpu_wire(self) -> float:
+        """TPU-wire estimate: the host (CPU) backend legalizes every bf16 dot
+        to f32 BEFORE SPMD partitioning (verified — EXPERIMENTS.md §Perf A3),
+        so f32 collectives of bf16-model tensors are 2× inflated. On TPU the
+        same collectives move bf16: halve the f32 subset."""
+        return self.collective_bytes - self.collective_bytes_f32 / 2
+
+
+def _fusion_operand_bytes(op: _Op, comp: _Computation,
+                          callee: Optional[_Computation]) -> int:
+    """Sum of fusion operand traffic. XLA fuses dynamic-slice into
+    consumers, so an operand only consumed through slicing ops inside the
+    fused computation is charged at the slice size, not the full tensor
+    (per-layer parameter fetches from scan-stacked weights)."""
+    names = _operand_names(op.rest)
+    if callee is None:
+        return sum(_nbytes(comp.symbols.get(n, "")) for n in names)
+    # map parameter number -> counted bytes inside the fused computation
+    param_cost: Dict[int, int] = {}
+    param_name_to_idx: Dict[str, int] = {}
+    for o in callee.ops:
+        if o.opcode == "parameter":
+            m = re.match(r"(\d+)", o.rest)
+            if m:
+                param_name_to_idx[o.name] = int(m.group(1))
+                param_cost[int(m.group(1))] = _nbytes(o.type_str)
+    slicing = ("dynamic-slice", "slice", "gather")
+    for pname, idx in param_name_to_idx.items():
+        consumers = [o for o in callee.ops
+                     if pname in _operand_names(o.rest)]
+        if not consumers:
+            continue
+        if all(c.opcode in slicing and _operand_names(c.rest)
+               and _operand_names(c.rest)[0] == pname for c in consumers):
+            param_cost[idx] = max(_nbytes(c.type_str) for c in consumers)
+        elif all(c.opcode == "dynamic-update-slice"
+                 and _operand_names(c.rest)
+                 and _operand_names(c.rest)[0] == pname for c in consumers):
+            # in-place update destination: aliased, only the update region
+            # is touched (charged via the fusion result adjustment below)
+            param_cost[idx] = 0
+    total = 0
+    for i, n in enumerate(names):
+        full = _nbytes(comp.symbols.get(n, ""))
+        total += min(full, param_cost.get(i, full)) if i in param_cost \
+            else full
+    return total
+
+
+def _cost_of(comp_name: str, comps: Dict[str, _Computation],
+             cache: Dict[str, HloCost], *,
+             fused: bool = False) -> HloCost:
+    if comp_name in cache:
+        return cache[comp_name]
+    comp = comps.get(comp_name)
+    total = HloCost()
+    if comp is None:
+        cache[comp_name] = total
+        return total
+    cache[comp_name] = total  # break cycles defensively
+    for op in comp.ops:
+        oc = op.opcode
+        if oc in _FREE_OPS:
+            continue
+        if oc == "while":
+            callees = re.search(r"condition=%?([\w.\-]+)", op.rest)
+            body = re.search(r"body=%?([\w.\-]+)", op.rest)
+            known = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+            if known:
+                trip = int(known.group(1))
+            elif callees and callees.group(1) in comps:
+                trip = _trip_count(comps[callees.group(1)])
+            else:
+                trip = 1
+            if body:
+                total.add(_cost_of(body.group(1), comps, cache), trip)
+            if callees:
+                total.add(_cost_of(callees.group(1), comps, cache), trip)
+            continue
+        if oc == "conditional":
+            for m in re.finditer(r"%([\w.\-]+)", op.rest.split(")", 1)[-1]):
+                if m.group(1) in comps:
+                    total.add(_cost_of(m.group(1), comps, cache))
+            continue
+        if oc in ("fusion", "call", "custom-call", "reduce", "sort", "map",
+                  "scatter", "select-and-scatter", "reduce-window"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.rest)
+            if m and m.group(1) in comps:
+                inner = _cost_of(m.group(1), comps, cache, fused=True)
+                # fused computations: count FLOPs from inside, but HBM
+                # traffic only at the fusion boundary (below)
+                total.flops += inner.flops
+                total.collective_bytes += inner.collective_bytes
+                for k, v in inner.collective_breakdown.items():
+                    total.collective_breakdown[k] = (
+                        total.collective_breakdown.get(k, 0.0) + v)
+        if oc == "dot":
+            total.flops += _dot_flops(op, comp)
+        # HBM traffic: result + operands (the fusion boundary is the kernel
+        # boundary). Inside fused computations only dots/collectives count.
+        # Slicing ops only touch the slice, not the full operand; in-place
+        # update ops (aliased) touch ~2× the update region.
+        if not fused:
+            result_b = _nbytes(op.type_str)
+            if oc in ("dynamic-slice", "slice", "gather"):
+                nbytes = 2 * result_b
+            elif oc == "dynamic-update-slice":
+                names = _operand_names(op.rest)
+                upd = _nbytes(comp.symbols.get(names[1], "")) if \
+                    len(names) > 1 else result_b
+                nbytes = 2 * upd
+            elif oc == "scatter":
+                names = _operand_names(op.rest)
+                upd = _nbytes(comp.symbols.get(names[-1], "")) if names \
+                    else result_b
+                nbytes = 2 * upd
+            elif oc in ("broadcast", "iota", "concatenate", "reverse", "pad"):
+                nbytes = 2 * result_b
+            elif oc == "fusion":
+                m2 = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                callee = comps.get(m2.group(1)) if m2 else None
+                res_adj = result_b
+                if callee is not None and callee.ops:
+                    root = callee.ops[-1]
+                    if root.opcode == "dynamic-update-slice":
+                        names_r = _operand_names(root.rest)
+                        if len(names_r) > 1:
+                            # in-place DUS root: write only the update region
+                            res_adj = 2 * _nbytes(
+                                callee.symbols.get(names_r[1], ""))
+                nbytes = res_adj + _fusion_operand_bytes(op, comp, callee)
+            else:
+                nbytes = result_b
+                for name in _operand_names(op.rest):
+                    nbytes += _nbytes(comp.symbols.get(name, ""))
+            total.bytes += nbytes
+        for c in _COLLECTIVES:
+            if oc == c or oc == c + "-start":
+                cb = _nbytes(op.type_str)
+                total.collective_bytes += cb
+                if "f32[" in op.type_str:
+                    total.collective_bytes_f32 += cb
+                total.collective_breakdown[c] = (
+                    total.collective_breakdown.get(c, 0.0) + cb)
+    cache[comp_name] = total
+    return total
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back to the largest computation
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    cache: Dict[str, HloCost] = {}
+    return _cost_of(entry, comps, cache)

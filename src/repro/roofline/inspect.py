@@ -1,0 +1,110 @@
+"""Cell inspection: per-loop / per-op breakdown of the roofline terms.
+
+This is the 'profiler drill-down' used by the §Perf hypothesis loop (and the
+structured artifact the KForge analysis agent G reads for dry-run cells).
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline import hlo_cost as hc
+
+
+def contributions(hlo: str, top: int = 15):
+    """Returns (total HloCost, top (bytes, collective, flops) contributors).
+
+    Contributor key: (computation, opcode, op-name-prefix); values include
+    enclosing-loop multipliers.
+    """
+    comps = hc.parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = hc._COMP_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    byte_c: collections.Counter = collections.Counter()
+    coll_c: collections.Counter = collections.Counter()
+    flop_c: collections.Counter = collections.Counter()
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in hc._FREE_OPS:
+                continue
+            if oc == "while":
+                known = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                                  op.rest)
+                trip = int(known.group(1)) if known else 1
+                b = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if b:
+                    walk(b.group(1), mult * trip)
+                continue
+            key = (name.split("_spmd")[0][-40:], oc,
+                   re.sub(r"[.\d]+$", "", op.name))
+            result_b = hc._nbytes(op.type_str)
+            if oc in ("dynamic-slice", "slice", "gather"):
+                nb = 2 * result_b
+            elif oc == "dynamic-update-slice":
+                names = hc._operand_names(op.rest)
+                nb = 2 * (hc._nbytes(comp.symbols.get(names[1], ""))
+                          if len(names) > 1 else result_b)
+            elif oc == "scatter":
+                names = hc._operand_names(op.rest)
+                nb = 2 * (hc._nbytes(comp.symbols.get(names[-1], ""))
+                          if names else result_b)
+            elif oc in ("broadcast", "iota", "concatenate", "reverse", "pad"):
+                nb = 2 * result_b
+            elif oc == "fusion":
+                m2 = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                callee = comps.get(m2.group(1)) if m2 else None
+                res_adj = result_b
+                if callee is not None and callee.ops:
+                    root = callee.ops[-1]
+                    if root.opcode == "dynamic-update-slice":
+                        nr = hc._operand_names(root.rest)
+                        if len(nr) > 1:
+                            res_adj = 2 * hc._nbytes(
+                                callee.symbols.get(nr[1], ""))
+                nb = res_adj + hc._fusion_operand_bytes(op, comp, callee)
+                inner = hc._cost_of(m2.group(1), comps, {}, fused=True) \
+                    if m2 and m2.group(1) in comps else None
+                if inner:
+                    flop_c[key] += inner.flops * mult
+            else:
+                nb = result_b + sum(hc._nbytes(comp.symbols.get(n, ""))
+                                    for n in hc._operand_names(op.rest))
+            if oc == "dot":
+                flop_c[key] += hc._dot_flops(op, comp) * mult
+            byte_c[key] += nb * mult
+            for c in hc._COLLECTIVES:
+                if oc == c or oc == c + "-start":
+                    coll_c[(key[0], c, op.type_str[:48])] += result_b * mult
+    walk(entry, 1.0)
+    return {
+        "bytes": byte_c.most_common(top),
+        "collective": coll_c.most_common(top),
+        "flops": flop_c.most_common(top),
+    }
+
+
+def print_report(hlo: str, top: int = 12):
+    res = hc.analyze(hlo)
+    print(f"flops/dev={res.flops:.3e}  bytes/dev={res.bytes:.3e}  "
+          f"coll/dev={res.collective_bytes:.3e}")
+    c = contributions(hlo, top)
+    print("-- top HBM traffic --")
+    for (comp, oc, name), b in c["bytes"]:
+        print(f"  {b/1e9:9.1f} GB  {oc:22s} {name:40s} in {comp}")
+    print("-- top collectives --")
+    for (comp, oc, shape), b in c["collective"]:
+        print(f"  {b/1e9:9.1f} GB  {oc:18s} {shape:48s} in {comp}")
+    print("-- top flops --")
+    for (comp, oc, name), f in c["flops"]:
+        print(f"  {f/1e12:9.2f} TF  {oc:22s} {name:40s} in {comp}")

@@ -1,0 +1,137 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching over a fixed-shape KV cache (fixed shapes keep a single compiled
+executable alive — no recompilation when requests come and go).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    temperature: float = 0.0      # 0 = greedy
+    impl: str = "xla"
+    dtype: object = jnp.float32
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (prompt_len,)
+    max_new_tokens: int
+    generated: Optional[List[int]] = None
+
+
+class Engine:
+    """One decode step advances every active slot by one token."""
+
+    def __init__(self, model: Model, params, sc: ServeConfig):
+        self.model = model
+        self.params = params
+        self.sc = sc
+        self.cache, _ = model.init_cache(sc.max_batch, sc.max_seq, sc.dtype)
+        self.lengths = jnp.zeros((sc.max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((sc.max_batch, 1), jnp.int32)
+        self.active = np.zeros((sc.max_batch,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * sc.max_batch
+        self._decode = jax.jit(
+            lambda p, c, t, l: model.decode_fn(p, c, t, l, impl=sc.impl))
+        self._queue: List[Request] = []
+        self._finished: Dict[int, List[int]] = {}
+
+    # -- request management --------------------------------------------------
+    def submit(self, req: Request):
+        req.generated = []
+        self._queue.append(req)
+
+    def _admit(self):
+        """Fill free slots by prefilling queued requests one at a time."""
+        for slot in range(self.sc.max_batch):
+            if self.active[slot] or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            ptoks = jnp.asarray(req.prompt, jnp.int32)[None]
+            kw = {}
+            logits, pcache, plen = self.model.prefill_fn(
+                self.params, ptoks, impl=self.sc.impl, **kw)
+            # graft the single-request prefill cache into the engine cache
+            self.cache = jax.tree.map(
+                lambda full, part: self._graft(full, part, slot),
+                self.cache, pcache)
+            self.lengths = self.lengths.at[slot].set(int(plen[0]))
+            nxt = self._sample(logits)[0]
+            self.tokens = self.tokens.at[slot, 0].set(nxt)
+            req.generated.append(int(nxt))
+            self.active[slot] = True
+            self.slot_req[slot] = req
+
+    def _graft(self, full, part, slot):
+        """Insert request-0 of a prefill cache into engine slot ``slot``.
+
+        Caches are stacked (L, B, S, ...) or (L, B, ...); batch is dim 1.
+        """
+        part0 = jax.lax.slice_in_dim(part, 0, 1, axis=1)
+        if full.ndim >= 3 and part0.shape[2] != full.shape[2] \
+                and part0.ndim == full.ndim:
+            pad = [(0, 0)] * part0.ndim
+            pad[2] = (0, full.shape[2] - part0.shape[2])
+            part0 = jnp.pad(part0, pad)
+        idx = [0] * full.ndim
+        idx[1] = slot
+        return jax.lax.dynamic_update_slice(full, part0.astype(full.dtype),
+                                            tuple(idx))
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.sc.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        key = jax.random.PRNGKey(int(np.sum(np.asarray(self.lengths))))
+        return np.asarray(jax.random.categorical(
+            key, logits / self.sc.temperature))
+
+    # -- main loop -------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode step. Returns number of active slots."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.tokens, self.lengths)
+        nxt = self._sample(logits)
+        self.lengths = self.lengths + jnp.asarray(self.active, jnp.int32)
+        new_tokens = np.asarray(self.tokens).copy()
+        for slot in range(self.sc.max_batch):
+            if not self.active[slot]:
+                continue
+            req = self.slot_req[slot]
+            req.generated.append(int(nxt[slot]))
+            new_tokens[slot, 0] = int(nxt[slot])
+            done = (len(req.generated) >= req.max_new_tokens
+                    or int(self.lengths[slot]) >= self.sc.max_seq - 1)
+            if done:
+                self.active[slot] = False
+                self.slot_req[slot] = None
+                self._finished[req.rid] = req.generated
+        self.tokens = jnp.asarray(new_tokens)
+        return int(self.active.sum())
+
+    def run(self, max_steps: int = 1_000) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self._queue:
+                break
+        done = dict(self._finished)
+        self._finished.clear()
+        for r in self.slot_req:  # still-active (hit max_steps)
+            if r is not None:
+                done[r.rid] = r.generated
+        return done

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules, constrain, resolve_axes, set_rules, current_rules,
+    make_rules, spec_tree,
+)

@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / SP / EP / pod).
+
+Models annotate parameters and activations with *logical* axis names
+(('fsdp', 'tp'), ('batch', 'seq_sp', None), …). The launcher installs a
+:class:`ShardingRules` mapping logical → physical mesh axes; outside a rules
+context every constraint is a no-op, so smoke tests and the KForge loop run
+unsharded without touching device state.
+
+Physical mesh axes are ('pod', 'data', 'model') multi-pod or
+('data', 'model') single-pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+Physical = Union[None, str, Tuple[str, ...]]
+
+# Default logical -> physical mapping (single-pod). `make_rules` extends the
+# data-parallel axes with 'pod' for multi-pod meshes.
+DEFAULT_LOGICAL: Dict[str, Physical] = {
+    "batch": ("data",),       # DP over examples
+    "fsdp": ("data",),        # ZeRO-3 param/optimizer shard
+    "tp": "model",            # tensor parallel (heads / d_ff / vocab / experts)
+    "seq_sp": "model",        # sequence-parallel residual stream
+    "seq_kv": "model",        # flash-decode: KV cache sequence shard
+    "expert": "model",        # expert parallel
+    "layers": None,           # stacked-layer leading dim
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Optional[jax.sharding.Mesh]
+    logical: Dict[str, Physical]
+
+    def axis_size(self, physical: Physical) -> int:
+        if self.mesh is None or physical is None:
+            return 1
+        names = (physical,) if isinstance(physical, str) else physical
+        size = 1
+        for n in names:
+            size *= self.mesh.shape.get(n, 1)
+        return size
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def set_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def make_rules(mesh: jax.sharding.Mesh,
+               overrides: Optional[Dict[str, Physical]] = None) -> ShardingRules:
+    logical = dict(DEFAULT_LOGICAL)
+    if "pod" in mesh.shape:
+        logical["batch"] = ("pod", "data")
+        logical["fsdp"] = ("pod", "data")
+    if overrides:
+        logical.update(overrides)
+    return ShardingRules(mesh=mesh, logical=logical)
+
+
+def resolve_axes(axes: Sequence[Optional[str]],
+                 rules: ShardingRules,
+                 shape: Optional[Tuple[int, ...]] = None) -> PS:
+    """Logical axes tuple -> PartitionSpec, dropping non-divisible entries."""
+    out = []
+    for i, ax in enumerate(axes):
+        phys = rules.logical.get(ax) if ax else None
+        if phys is not None and shape is not None:
+            if shape[i] % rules.axis_size(phys) != 0:
+                phys = None  # replicate instead of failing
+        out.append(phys)
+    return PS(*out)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a rules ctx."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = resolve_axes(axes, rules, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))
+
+
+def spec_tree(logical_tree, rules: ShardingRules, shape_tree=None):
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    ``shape_tree`` (matching pytree of array-likes with .shape) enables the
+    divisibility fallback.
+    """
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: jax.sharding.NamedSharding(
+                rules.mesh, resolve_axes(axes, rules)),
+            logical_tree, is_leaf=lambda t: isinstance(t, tuple))
+    return jax.tree.map(
+        lambda axes, arr: jax.sharding.NamedSharding(
+            rules.mesh, resolve_axes(axes, rules, tuple(arr.shape))),
+        logical_tree, shape_tree, is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,83 @@
+"""Fault tolerance: step watchdog, retry-with-restore, straggler mitigation.
+
+On a 1000+-node fleet the failure modes are (a) hard node loss — surfaces as
+a collective timeout / RPC error, (b) stragglers — healthy but slow hosts,
+(c) data-dependent NaN blowups. The hooks here implement the single-process
+control logic; the distributed runtime (jax.distributed) surfaces (a) as
+exceptions from the step function which the retry loop catches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, List, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    # step wall-time above median × factor counts as a straggler event
+    straggler_factor: float = 2.5
+    window: int = 32
+    # consecutive straggler steps before we recommend re-layout
+    trigger: int = 8
+
+
+class StepWatchdog:
+    """Tracks per-step wall time; flags stragglers and recommends action.
+
+    With single-controller JAX a straggling host slows the whole step, so
+    wall-time inflation *is* the straggler signal. Mitigation on a real
+    fleet: evict the slow host and restore onto the remaining mesh
+    (elastic restore path in checkpoint.py).
+    """
+
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig()):
+        self.cfg = cfg
+        self.times: List[float] = []
+        self.consecutive = 0
+
+    def record(self, seconds: float) -> Optional[str]:
+        self.times.append(seconds)
+        window = self.times[-self.cfg.window:]
+        if len(window) < 8:
+            return None
+        med = sorted(window)[len(window) // 2]
+        if seconds > med * self.cfg.straggler_factor:
+            self.consecutive += 1
+            if self.consecutive >= self.cfg.trigger:
+                self.consecutive = 0
+                return "relayout"  # evict straggler + elastic restore
+            return "straggler"
+        self.consecutive = 0
+        return None
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 1.0
+
+
+def run_with_retry(step_fn: Callable, restore_fn: Callable,
+                   policy: RetryPolicy = RetryPolicy()):
+    """Run ``step_fn()``; on failure call ``restore_fn()`` and retry.
+
+    Models the node-failure → checkpoint-restart path. ``restore_fn``
+    must return fresh step inputs (state restored from the last
+    checkpoint, possibly on a smaller mesh).
+    """
+    attempt = 0
+    while True:
+        try:
+            return step_fn()
+        except Exception as exc:  # noqa: BLE001 — any device/runtime failure
+            attempt += 1
+            if attempt > policy.max_retries:
+                raise
+            log.warning("step failed (%s); restore+retry %d/%d", exc,
+                        attempt, policy.max_retries)
+            time.sleep(policy.backoff_s * attempt)
+            step_fn = restore_fn()

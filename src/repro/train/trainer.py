@@ -1,0 +1,172 @@
+"""Training loop: pjit'd train step with microbatch gradient accumulation,
+clipping, LR schedule, optional error-feedback gradient compression,
+checkpointing, and fault hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compression_init, cosine_schedule, ef_compress_grads)
+from repro.train import checkpoint as ckpt
+from repro.train.fault import StepWatchdog, WatchdogConfig
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1          # gradient accumulation factor
+    grad_compression: bool = False
+    remat: bool = True
+    impl: str = "xla"
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    async_ckpt: bool = False     # save on a background thread (device_get
+    # happens synchronously; serialization/IO overlaps the next steps)
+
+
+def make_train_step(model: Model, tc: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch[, comp_state]) pure fn."""
+
+    def loss_of(params, batch):
+        loss, metrics = model.loss_fn(params, batch, impl=tc.impl,
+                                      remat=tc.remat)
+        return loss, metrics
+
+    def compute_grads(params, batch):
+        if tc.microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        n = tc.microbatches
+        micro = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(acc, mb):
+            loss_acc, grads_acc = acc
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                            micro)
+        loss = loss_sum / n
+        grads = jax.tree.map(lambda g: g / n, grads)
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state, batch, comp_state=None):
+        loss, metrics, grads = compute_grads(params, batch)
+        if tc.grad_compression and comp_state is not None:
+            grads, comp_state = ef_compress_grads(grads, comp_state)
+        lr = cosine_schedule(opt_state["step"], tc.peak_lr, tc.warmup_steps,
+                             tc.total_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tc.adamw, lr)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        if tc.grad_compression:
+            return params, opt_state, comp_state, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Single-controller trainer; mesh-aware when given shardings."""
+
+    def __init__(self, model: Model, tc: TrainConfig, *, rng=None,
+                 params=None, donate: bool = True):
+        self.model = model
+        self.tc = tc
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else model.init(rng)
+        self.opt_state = adamw_init(self.params, tc.adamw)
+        self.comp_state = (compression_init(self.params)
+                           if tc.grad_compression else None)
+        step_fn = make_train_step(model, tc)
+        donate_argnums = (0, 1, 3) if tc.grad_compression else (0, 1)
+        self._step = jax.jit(
+            step_fn, donate_argnums=donate_argnums if donate else ())
+        self.watchdog = StepWatchdog(WatchdogConfig())
+        self.step_num = 0
+        self.history: list = []
+        self._ckpt_thread: Optional[threading.Thread] = None
+
+    def restore_if_available(self, data_pipeline=None):
+        if not self.tc.ckpt_dir:
+            return False
+        last = ckpt.latest_step(self.tc.ckpt_dir)
+        if last is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        restored = ckpt.restore_checkpoint(self.tc.ckpt_dir, last, state)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.step_num = last
+        if data_pipeline is not None:
+            data_pipeline.load_state_dict({"step": last})
+        return True
+
+    def save(self):
+        if not self.tc.ckpt_dir:
+            return None
+        state = {"params": self.params, "opt": self.opt_state}
+        if not self.tc.async_ckpt:
+            return ckpt.save_checkpoint(self.tc.ckpt_dir, self.step_num,
+                                        state)
+        # snapshot to host synchronously (donation-safe: the live buffers may
+        # be donated by the next step), then serialize+publish off-thread
+        self.wait_for_checkpoint()
+        import numpy as np  # local to keep trainer import light
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                state)
+        step = self.step_num
+        self._ckpt_thread = threading.Thread(
+            target=ckpt.save_checkpoint,
+            args=(self.tc.ckpt_dir, step, snapshot), daemon=True)
+        self._ckpt_thread.start()
+        return None
+
+    def wait_for_checkpoint(self):
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+            self._ckpt_thread = None
+
+    def train_step(self, batch) -> Dict[str, Any]:
+        t0 = time.monotonic()
+        batch = jax.tree.map(jnp.asarray, batch)
+        if self.tc.grad_compression:
+            (self.params, self.opt_state, self.comp_state,
+             metrics) = self._step(self.params, self.opt_state, batch,
+                                   self.comp_state)
+        else:
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.monotonic() - t0
+        flag = self.watchdog.record(dt)
+        if flag:
+            metrics["fault_flag"] = flag
+        metrics["step_time_s"] = dt
+        self.step_num += 1
+        self.history.append(metrics)
+        if self.tc.ckpt_dir and self.step_num % self.tc.ckpt_every == 0:
+            self.save()
+        return metrics
+
+    def fit(self, pipeline, steps: int):
+        for _ in range(steps):
+            batch = next(pipeline)
+            yield self.train_step(batch)

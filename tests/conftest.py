@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benchmarks must see the single real device; only
+# launch/dryrun.py forces 512 placeholder devices.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

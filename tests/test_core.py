@@ -1,0 +1,182 @@
+"""KForge core behaviour: five states, refinement dynamics, reference
+transfer, analysis agent, fast_p metric, anti-cheat verification."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Candidate, EvalResult, ExecutionState, LLMBackend,
+                        LoopConfig, Recommendation, RuleBasedAnalyzer,
+                        TemplateSearchBackend, fast_p, fast_p_curve,
+                        initial_candidate, kernelbench, run_workload,
+                        state_histogram, verify)
+from repro.core.oneshot import VECTOR_ADD_PALLAS
+from repro.core.states import ExecutionState as ES
+
+
+# ---------------------------------------------------------------------------
+# Verification: five execution states
+# ---------------------------------------------------------------------------
+
+def test_state_correct():
+    wl = kernelbench.by_name("L1/swish")
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    res = verify(cand, wl, seed=0)
+    assert res.state is ES.CORRECT
+    assert res.speedup is not None and res.speedup > 0
+
+
+def test_state_compilation_failure_on_misaligned_blocks():
+    wl = kernelbench.by_name("L1/swish")  # 2048x2048 input
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 2048 + 512})
+    res = verify(cand, wl, seed=0)
+    assert res.state is ES.COMPILATION_FAILURE
+
+
+def test_state_numeric_mismatch_on_naive_softmax():
+    wl = kernelbench.by_name("L1/softmax")  # +-60 magnitude rows
+    cand = Candidate("softmax", {"block_rows": 8, "online": False})
+    res = verify(cand, wl, seed=0)
+    assert res.state is ES.NUMERIC_MISMATCH
+
+
+def test_state_runtime_error():
+    wl = kernelbench.by_name("L1/swish")
+
+    def exploding(x):
+        raise RuntimeError("device abort")
+
+    # bypass trace-time detection by raising from a callback-free wrapper
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    res = verify(cand, wl, seed=0, fn=exploding)
+    assert res.state in (ES.COMPILATION_FAILURE, ES.RUNTIME_ERROR)
+
+
+def test_state_generation_failure_offline_llm():
+    backend = LLMBackend(complete=None)
+    wl = kernelbench.by_name("L1/swish")
+    gen = backend.generate(wl)
+    assert gen.failure is not None
+
+
+def test_anti_cheat_constant_output_flagged():
+    """Paper §7.3: constant-output programs must not verify as correct."""
+    wl = kernelbench.by_name("L1/swish")
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    cheat = lambda x: jnp.zeros_like(x)
+    res = verify(cand, wl, seed=123, fn=cheat)
+    assert res.state is ES.NUMERIC_MISMATCH
+
+
+# ---------------------------------------------------------------------------
+# Refinement dynamics (paper Fig. 1 / Tables 4-5 qualitative behaviour)
+# ---------------------------------------------------------------------------
+
+def test_iterative_fixes_numerics():
+    wl = kernelbench.by_name("L1/softmax")
+    single = run_workload(wl, LoopConfig(single_shot=True)).final
+    iterative = run_workload(wl, LoopConfig(num_iterations=3)).final
+    assert single.state is ES.NUMERIC_MISMATCH
+    assert iterative.state is ES.CORRECT
+
+
+def test_reference_improves_single_shot():
+    wl = kernelbench.by_name("L1/softmax")
+    base = run_workload(wl, LoopConfig(single_shot=True)).final
+    with_ref = run_workload(
+        wl, LoopConfig(single_shot=True, use_reference=True)).final
+    assert not base.correct and with_ref.correct
+
+
+def test_profiling_does_not_hurt_and_logs_recommendations():
+    wl = kernelbench.by_name("L1/rmsnorm")
+    plain = run_workload(wl, LoopConfig(num_iterations=4))
+    prof = run_workload(wl, LoopConfig(num_iterations=4, use_profiling=True))
+    assert prof.final.correct
+    assert prof.final.model_time_s <= plain.final.model_time_s * 1.05
+    assert any(l.recommendation for l in prof.logs)
+
+
+def test_convergence_breaks_early():
+    wl = kernelbench.by_name("L1/swish")
+    out = run_workload(wl, LoopConfig(num_iterations=5, use_profiling=True))
+    assert len(out.logs) <= 5
+    assert out.final.correct
+
+
+# ---------------------------------------------------------------------------
+# Agents
+# ---------------------------------------------------------------------------
+
+def test_analyzer_recommends_mxu_alignment():
+    an = RuleBasedAnalyzer()
+    rec = an.analyze({
+        "op": "matmul", "params": {"block_m": 64, "block_n": 64,
+                                   "block_k": 512},
+        "shapes": {"a": (1024, 1024), "b": (1024, 1024)},
+        "model_time_s": 1e-3, "flops": 2 * 1024 ** 3})
+    assert rec.param in ("block_m", "block_n")
+    assert rec.value == 128
+
+
+def test_recommendation_apply_respects_space():
+    cand = initial_candidate("matmul", use_reference=False)
+    rec = Recommendation(text="x", param="nonexistent", value=1)
+    assert rec.apply(cand).params == cand.params
+
+
+def test_reference_hints_transfer_strategy():
+    naive = initial_candidate("attention", use_reference=False)
+    ref = initial_candidate("attention", use_reference=True)
+    assert not naive.params["online"] and ref.params["online"]
+
+
+def test_llm_backend_prompt_contains_paper_fields():
+    backend = LLMBackend()
+    wl = kernelbench.by_name("L2/attention_gqa")
+    p = backend.build_prompt(wl, prev=None, prev_result=None,
+                             recommendation=None, use_reference=True)
+    assert "pallas_call" in p and wl.name in p
+    assert "reference" in p.lower()
+
+
+def test_llm_backend_executes_canned_completion():
+    reply = f"```python\n{VECTOR_ADD_PALLAS}\n```"
+    backend = LLMBackend(complete=lambda prompt: reply)
+    wl = kernelbench.by_name("L1/swish")
+    gen = backend.generate(wl)
+    assert gen.callable_fn is not None and gen.failure is None
+
+
+# ---------------------------------------------------------------------------
+# Metric
+# ---------------------------------------------------------------------------
+
+def _mk(state, speedup=None):
+    return EvalResult(state, model_time_s=1.0,
+                      baseline_model_time_s=speedup if speedup else None)
+
+
+def test_fast_p():
+    results = [_mk(ES.CORRECT, 2.0), _mk(ES.CORRECT, 0.5),
+               _mk(ES.NUMERIC_MISMATCH), _mk(ES.COMPILATION_FAILURE)]
+    assert fast_p(results, 0.0) == 0.5
+    assert fast_p(results, 1.0) == 0.25
+    assert fast_p(results, 3.0) == 0.0
+    curve = fast_p_curve(results)
+    assert curve[0.0] >= curve[1.0] >= curve[2.0]
+
+
+def test_state_histogram():
+    results = [_mk(ES.CORRECT, 2.0), _mk(ES.NUMERIC_MISMATCH)]
+    h = state_histogram(results)
+    assert h == {"correct": 1, "numeric_mismatch": 1}
+
+
+def test_agent_discovers_ssd_matrix_form():
+    """The optimization pass must rediscover the recurrence->matrix
+    transformation that §Perf iteration B1 applied by hand (L2/ssd_scan)."""
+    wl = kernelbench.by_name("L2/ssd_scan", small=True)
+    out = run_workload(wl, LoopConfig(num_iterations=5, use_profiling=True))
+    assert out.final.correct
+    assert out.best_candidate.params["form"] == "matrix"
+    assert out.final.speedup > 10

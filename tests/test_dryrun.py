@@ -1,0 +1,33 @@
+"""Dry-run machinery integration (debug mesh — the 512-device production
+meshes are exercised by ``python -m repro.launch.dryrun``, which must own
+the XLA device-count flag)."""
+import jax
+import pytest
+
+from repro.launch.cells import lower_cell, model_flops_total
+from repro.launch.mesh import make_debug_mesh
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline import roofline_report
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_lower_cell_whisper_debug_mesh(shape):
+    mesh = make_debug_mesh(1, 1)
+    compiled, lowered, aux = lower_cell("whisper-base", shape, mesh)
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    cfg = get_config("whisper-base")
+    rep = roofline_report(
+        arch="whisper-base", shape=shape, mesh_desc="debug", chips=1,
+        cost=compiled.cost_analysis(), hlo_text=compiled.as_text(),
+        model_flops_total=model_flops_total(cfg, SHAPES[shape]))
+    assert rep.compute_s > 0 and rep.hlo_bytes_per_device > 0
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert 0 < rep.useful_flops_fraction
+
+
+def test_mesh_requires_device_count():
+    from repro.launch.mesh import make_production_mesh
+    with pytest.raises(RuntimeError):
+        make_production_mesh()  # only 1 real device in tests

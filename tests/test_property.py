@@ -1,0 +1,156 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.candidates import (SPACES, Candidate, baseline_time,
+                                   model_time, mutations)
+from repro.core.metrics import fast_p
+from repro.core.states import EvalResult, ExecutionState
+from repro.kernels import ref
+from repro.optim import compress_int8, decompress_int8
+from repro.roofline.analysis import collective_bytes
+from repro.roofline import hlo_cost
+
+F32 = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(F32, min_size=4, max_size=4), min_size=2,
+                max_size=8))
+def test_softmax_rows_sum_to_one(rows):
+    x = jnp.asarray(np.array(rows, np.float32))
+    s = ref.softmax(x)
+    np.testing.assert_allclose(np.sum(np.asarray(s), -1), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_attention_probabilities_convex(seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 8, 2, 8)), jnp.float32)
+    vmax = rng.standard_normal((1, 8, 2, 8)).astype(np.float32)
+    v = jnp.asarray(vmax)
+    out = np.asarray(ref.attention(q, k, v, causal=True))
+    # attention output is a convex combination of values
+    assert out.max() <= vmax.max() + 1e-4
+    assert out.min() >= vmax.min() - 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 1e3))
+def test_int8_compression_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * scale, jnp.float32)
+    q, s = compress_int8(x)
+    back = decompress_int8(q, s)
+    # error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_accumulates_unbiased(seed):
+    """Sum of (transmitted + residual) equals sum of true gradients."""
+    from repro.optim import CompressionState, ef_compress_grads
+    rng = np.random.default_rng(seed)
+    grads = {"w": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+    state = CompressionState(error={"w": jnp.zeros(32)})
+    sent_total = jnp.zeros(32)
+    true_total = jnp.zeros(32)
+    for _ in range(4):
+        g = {"w": jnp.asarray(rng.standard_normal(32), jnp.float32)}
+        true_total = true_total + g["w"]
+        sent, state = ef_compress_grads(g, state)
+        sent_total = sent_total + sent["w"]
+    # residual closes the gap exactly
+    np.testing.assert_allclose(np.asarray(sent_total + state.error["w"]),
+                               np.asarray(true_total), rtol=1e-4, atol=1e-4)
+
+
+_OPS = sorted(SPACES)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(_OPS), st.integers(0, 10 ** 9))
+def test_model_time_positive_and_mutation_closed(op, seed):
+    rng = np.random.default_rng(seed)
+    params = {k: rng.choice(v).item() for k, v in SPACES[op].items()}
+    cand = Candidate(op, params)
+    shapes = {
+        "swish": {"x": (2048, 2048)},
+        "softmax": {"x": (1024, 4096)},
+        "rmsnorm": {"x": (2048, 4096)},
+        "matmul": {"a": (1024, 1024), "b": (1024, 1024)},
+        "swiglu": {"gate": (4096, 2048), "up": (4096, 2048)},
+        "attention": {"q": (2, 1024, 8, 64), "k": (2, 1024, 2, 64),
+                      "v": (2, 1024, 2, 64)},
+        "xent": {"logits": (512, 32768), "labels": (512,)},
+        "ssd": {"x": (2, 1024, 4, 64), "a": (2, 1024, 4),
+                "b": (2, 1024, 4, 16), "c": (2, 1024, 4, 16)},
+    }[op]
+    t = model_time(cand, shapes)
+    assert t > 0
+    for mut in mutations(cand).values():
+        assert mut.op == op
+        assert set(mut.params) == set(params)
+        assert model_time(mut, shapes) > 0
+    # baseline is a fixed member of the space
+    assert baseline_time(op, shapes) > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.floats(0.1, 10)), min_size=1,
+                max_size=20), st.floats(0, 3))
+def test_fast_p_monotone_in_p(items, p):
+    results = [EvalResult(ExecutionState.CORRECT if ok
+                          else ExecutionState.NUMERIC_MISMATCH,
+                          model_time_s=1.0, baseline_model_time_s=sp)
+               for ok, sp in items]
+    assert 0.0 <= fast_p(results, p + 0.5) <= fast_p(results, p) <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 64), st.integers(1, 64),
+       st.sampled_from(["f32", "bf16", "s32"]))
+def test_collective_bytes_parser(n_ops, d0, d1, dtype):
+    bytes_per = {"f32": 4, "bf16": 2, "s32": 4}[dtype] * d0 * d1
+    lines = ["ENTRY %main () -> f32[] {"]
+    for i in range(n_ops):
+        lines.append(f"  %ar.{i} = {dtype}[{d0},{d1}]{{1,0}} "
+                     f"all-reduce(%x.{i}), replica_groups={{}}")
+    lines.append("}")
+    total, breakdown = collective_bytes("\n".join(lines))
+    assert total == n_ops * bytes_per
+    assert breakdown == {"all-reduce": n_ops * bytes_per}
+
+
+def test_hlo_cost_while_multiplier():
+    """Loop-aware analyzer multiplies body cost by known trip count."""
+    hlo = """
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %g = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %c = s32[] constant(1)
+  %i = s32[] get-tuple-element(%p), index=0
+  %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tu = (s32[], f32[8,8]) tuple(%c0, %x)
+  %w = (s32[], f32[8,8]) while(%tu), condition=%cond, body=%body
+  %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    res = hlo_cost.analyze(hlo)
+    assert res.flops == 7 * 2 * 8 * 8 * 8

@@ -1,0 +1,257 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing,
+trainer (learning + restart), fault tolerance, serving engine."""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, linear_warmup)
+from repro.serve import Engine, ServeConfig
+from repro.serve.engine import Request
+from repro.train import (Trainer, TrainConfig, latest_step,
+                         restore_checkpoint, save_checkpoint)
+from repro.train.fault import (RetryPolicy, StepWatchdog, WatchdogConfig,
+                               run_with_retry)
+
+
+def _patterned(step, batch=4, seq=32, vocab=64):
+    t = (np.arange(seq + 1)[None] + step) % vocab
+    return {"tokens": np.tile(t[:, :-1], (batch, 1)).astype(np.int32),
+            "labels": np.tile(t[:, 1:], (batch, 1)).astype(np.int32)}
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("starcoder2-7b"))
+    return cfg, build_model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    cfg = AdamWConfig(weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg,
+                                        jnp.asarray(0.05))
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_grad_clipping_caps_norm():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    _, _, metrics = adamw_update(params, {"w": jnp.full(4, 100.0)}, state,
+                                 cfg, jnp.asarray(1e-3))
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedules():
+    s = jnp.asarray(0)
+    assert float(linear_warmup(s, 1.0, 10)) == pytest.approx(0.1)
+    end = float(cosine_schedule(jnp.asarray(999), 1.0, 10, 1000))
+    assert 0.09 < end < 0.12  # decays to ~min_ratio
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    dc = DataConfig(seq_len=16, global_batch=4, vocab_size=100, seed=7)
+    p1 = TokenPipeline(dc)
+    batches = [next(p1) for _ in range(5)]
+    p2 = TokenPipeline(dc)
+    p2.load_state_dict({"step": 3})
+    np.testing.assert_array_equal(next(p2)["tokens"], batches[3]["tokens"])
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    full = TokenPipeline(DataConfig(seq_len=8, global_batch=4, vocab_size=50,
+                                    num_hosts=1, host_id=0)).batch_at(0)
+    parts = [TokenPipeline(DataConfig(seq_len=8, global_batch=4,
+                                      vocab_size=50, num_hosts=2, host_id=h)
+                           ).batch_at(0) for h in range(2)]
+    assert parts[0]["tokens"].shape == (2, 8)
+    assert full["tokens"].shape == (4, 8)
+    # different hosts generate different examples
+    assert not np.array_equal(parts[0]["tokens"], parts[1]["tokens"])
+
+
+def test_pipeline_memmap_source(tmp_path):
+    tokens = (np.arange(1000) % 97).astype(np.uint16)
+    f = tmp_path / "toks.bin"
+    tokens.tofile(f)
+    p = TokenPipeline(DataConfig(seq_len=8, global_batch=2, vocab_size=97,
+                                 source="memmap", path=str(f)))
+    b = next(p)
+    assert b["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.asarray(9)}
+    save_checkpoint(tmp_path, 9, state)
+    assert latest_step(tmp_path) == 9
+    restored = restore_checkpoint(tmp_path, 9, state)
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+    assert not list(Path(tmp_path).glob(".tmp*"))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, 1, {"w": jnp.zeros((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+def test_trainer_learns_and_restores(small_model, tmp_path):
+    cfg, model = small_model
+    tc = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40,
+                     microbatches=2, ckpt_dir=str(tmp_path), ckpt_every=5)
+    tr = Trainer(model, tc)
+    losses = [tr.train_step(_patterned(i, vocab=cfg.vocab_size))["loss"]
+              for i in range(10)]
+    assert losses[-1] < losses[0] * 0.8
+    tr2 = Trainer(model, tc)
+    assert tr2.restore_if_available()
+    assert tr2.step_num == 10
+    m = tr2.train_step(_patterned(10, vocab=cfg.vocab_size))
+    assert m["loss"] < losses[0]
+
+
+def test_trainer_grad_compression_still_learns(small_model):
+    cfg, model = small_model
+    tc = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40,
+                     grad_compression=True)
+    tr = Trainer(model, tc)
+    losses = [tr.train_step(_patterned(i, vocab=cfg.vocab_size))["loss"]
+              for i in range(8)]
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_equivalence(small_model):
+    """ga=2 over 2x batch == single step over the same concatenated batch."""
+    cfg, model = small_model
+    from repro.train.trainer import make_train_step
+    from repro.optim import adamw_init
+    batch = _patterned(0, batch=4, vocab=cfg.vocab_size)
+    params = model.init(jax.random.PRNGKey(0))
+    tc1 = TrainConfig(microbatches=1)
+    tc2 = TrainConfig(microbatches=2)
+    s1 = make_train_step(model, tc1)
+    s2 = make_train_step(model, tc2)
+    p1, _, m1 = jax.jit(s1)(params, adamw_init(params, tc1.adamw), batch)
+    p2, _, m2 = jax.jit(s2)(params, adamw_init(params, tc2.adamw), batch)
+    # same data -> same loss and nearly identical update
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-5
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(WatchdogConfig(straggler_factor=2.0, window=16,
+                                     trigger=3))
+    for _ in range(10):
+        assert wd.record(1.0) is None
+    assert wd.record(5.0) == "straggler"
+    assert wd.record(5.0) == "straggler"
+    assert wd.record(5.0) == "relayout"
+
+
+def test_run_with_retry_restores():
+    calls = {"n": 0}
+
+    def failing_step():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("node lost")
+        return "ok"
+
+    def restore():
+        return failing_step
+
+    out = run_with_retry(failing_step, restore,
+                         RetryPolicy(max_retries=5, backoff_s=0.0))
+    assert out == "ok" and calls["n"] == 3
+
+
+def test_run_with_retry_exhausts():
+    def always_fail():
+        raise RuntimeError("dead")
+
+    with pytest.raises(RuntimeError):
+        run_with_retry(always_fail, lambda: always_fail,
+                       RetryPolicy(max_retries=2, backoff_s=0.0))
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_continuous_batching(small_model):
+    cfg, model = small_model
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(max_batch=2, max_seq=64))
+    rng = np.random.default_rng(0)
+    for rid in range(4):  # more requests than slots
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab_size, 5),
+                           max_new_tokens=3 + rid))
+    out = eng.run()
+    assert set(out) == {0, 1, 2, 3}
+    for rid in out:
+        assert len(out[rid]) == 3 + rid
+
+
+def test_engine_greedy_matches_prefill(small_model):
+    """First generated token == argmax of prefill logits."""
+    cfg, model = small_model
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.arange(6)
+    logits, _, _ = model.prefill_fn(params,
+                                    jnp.asarray(prompt, jnp.int32)[None])
+    expected = int(jnp.argmax(logits[0]))
+    eng = Engine(model, params, ServeConfig(max_batch=1, max_seq=32))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    out = eng.run()
+    assert out[0][0] == expected
+
+
+def test_async_checkpoint(small_model, tmp_path):
+    cfg, model = small_model
+    tc = TrainConfig(peak_lr=1e-3, warmup_steps=1, total_steps=10,
+                     ckpt_dir=str(tmp_path), ckpt_every=2, async_ckpt=True)
+    tr = Trainer(model, tc)
+    for i in range(4):
+        tr.train_step(_patterned(i, vocab=cfg.vocab_size))
+    tr.wait_for_checkpoint()
+    assert latest_step(tmp_path) == 4
+    tr2 = Trainer(model, tc)
+    assert tr2.restore_if_available()
+    assert tr2.step_num == 4

@@ -2,11 +2,16 @@
 
 Rows: fastp/<config>/L<level>/p<threshold>, value = fast_p fraction
 (us_per_call column carries the mean best model-time in µs for the level).
+
+Runs on the campaign runner: one verification cache is shared across both
+configs and all levels, so candidates the single-shot and iterative configs
+both visit (e.g. every iteration-0 initial candidate) verify exactly once.
 """
 from __future__ import annotations
 
-from repro.core import (LoopConfig, fast_p, kernelbench, run_suite)
-from benchmarks.common import Row
+from repro.campaign import VerificationCache, run_campaign
+from repro.core import LoopConfig, fast_p, kernelbench
+from benchmarks.common import Row, CAMPAIGN_WORKERS, campaign_finals
 
 
 CONFIGS = {
@@ -18,11 +23,13 @@ THRESHOLDS = (0.0, 1.0, 1.5, 2.0)
 
 def run(small: bool = True):
     rows: list[Row] = []
+    cache = VerificationCache()
     for cname, cfg in CONFIGS.items():
         for level in (1, 2, 3):
             wls = kernelbench.suite(level, small=small)
-            outs = run_suite(wls, cfg)
-            finals = [o.final for o in outs]
+            result = run_campaign(wls, cfg, cache=cache,
+                                  max_workers=CAMPAIGN_WORKERS)
+            finals = campaign_finals(result)
             times = [r.model_time_s for r in finals
                      if r.correct and r.model_time_s]
             mean_us = (sum(times) / len(times) * 1e6) if times else 0.0

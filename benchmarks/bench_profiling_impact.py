@@ -1,19 +1,25 @@
 """Paper Fig. 3 / Table 5 — impact of the performance-analysis agent:
-iterative+reference vs iterative+reference+profiling at fast_1.0 / fast_1.5."""
+iterative+reference vs iterative+reference+profiling at fast_1.0 / fast_1.5.
+Campaign-runner based; both configs share one verification cache, so only
+the iterations where agent G's recommendation actually diverges from the
+blind mutation search cost new verifications."""
 from __future__ import annotations
 
-from repro.core import LoopConfig, fast_p, kernelbench, run_suite
-from benchmarks.common import Row
+from repro.campaign import VerificationCache, run_campaign
+from repro.core import LoopConfig, fast_p, kernelbench
+from benchmarks.common import Row, CAMPAIGN_WORKERS, campaign_finals
 
 
 def run(small: bool = True):
     rows: list[Row] = []
+    cache = VerificationCache()
     for cname, prof in (("ref", False), ("ref+prof", True)):
         cfg = LoopConfig(num_iterations=5, use_reference=True,
                          use_profiling=prof)
         for level in (1, 2, 3):
-            outs = run_suite(kernelbench.suite(level, small=small), cfg)
-            finals = [o.final for o in outs]
+            result = run_campaign(kernelbench.suite(level, small=small), cfg,
+                                  cache=cache, max_workers=CAMPAIGN_WORKERS)
+            finals = campaign_finals(result)
             for p in (1.0, 1.5):
                 rows.append((f"profiling/{cname}/L{level}/p{p}", 0.0,
                              f"{fast_p(finals, p):.3f}"))

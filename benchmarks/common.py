@@ -6,6 +6,21 @@ from typing import Iterable, List, Tuple
 
 Row = Tuple[str, float, str]  # name, us_per_call, derived
 
+# Worker-pool width for campaign-runner benches. Modest by default: CI boxes
+# are small, and interpret-mode verification only partially releases the GIL.
+CAMPAIGN_WORKERS = 4
+
+
+def campaign_finals(result):
+    """Terminal EvalResults for a bench's campaign, failing loudly if any
+    workload died in the scheduler — a crashed worker must abort the bench
+    (as the old serial loop did), not silently depress its fast_p rows."""
+    if result.n_failed:
+        errors = "; ".join(f"{r.workload}: {r.error}"
+                           for r in result.runs if r.error)
+        raise RuntimeError(f"campaign workload failures: {errors}")
+    return result.finals()
+
 
 def emit(rows: Iterable[Row]):
     for name, us, derived in rows:

@@ -8,6 +8,14 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_batch_sizes        Table 6 / §7.1 (batch-size generalization)
   bench_roofline           assignment §Roofline (reads experiments/dryrun)
   bench_kernels_wall       measured CPU wall-clock of reference ops
+
+Campaign runner (repro.campaign)
+  The suite-sweep benches (fastp_levels, correctness, profiling_impact) run
+  on the concurrent campaign runner instead of a serial loop: workloads fan
+  out over a thread pool (benchmarks.common.CAMPAIGN_WORKERS) and all
+  configs/levels of a bench share one content-addressed VerificationCache,
+  so re-visited candidates never re-verify. For ad-hoc sweeps with JSONL
+  logging, resume, and a fast_p report, use ``python -m repro.campaign``.
 """
 from __future__ import annotations
 

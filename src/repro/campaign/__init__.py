@@ -1,0 +1,21 @@
+"""Concurrent synthesis-campaign runner (the KForge "fleet" substrate).
+
+``run_suite`` evaluates workloads one by one in-process; a *campaign* runs
+the same refinement loops concurrently over a worker pool, memoizes every
+verification in a content-addressed cache, journals every iteration to a
+JSONL event log, and can resume an interrupted run from that log. See
+``python -m repro.campaign --help`` for the CLI.
+"""
+from repro.campaign.cache import VerificationCache  # noqa: F401
+from repro.campaign.events import (  # noqa: F401
+    EventLog, completed_workloads, iteration_event, result_from_dict,
+    result_to_dict, warm_cache,
+)
+from repro.campaign.report import (  # noqa: F401
+    FAST_P_THRESHOLDS, distinct_loop_configs, format_report,
+    report_from_events,
+)
+from repro.campaign.runner import (  # noqa: F401
+    Campaign, CampaignConfig, CampaignResult, WorkloadRun, run_campaign,
+)
+from repro.campaign.scheduler import JobResult, Scheduler  # noqa: F401

@@ -1,0 +1,102 @@
+"""``python -m repro.campaign`` — run a synthesis campaign over KernelBench
+and print the fast_p report aggregated from its JSONL event log.
+
+Examples::
+
+  python -m repro.campaign --suite small
+  python -m repro.campaign --suite small --level 2 --workers 8 --iters 5
+  python -m repro.campaign --log runs/c1.jsonl           # resumable
+  python -m repro.campaign --log runs/c1.jsonl --report-only
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.campaign.events import EventLog
+from repro.campaign.report import (distinct_loop_configs, format_report,
+                                   report_from_events)
+from repro.campaign.runner import Campaign, CampaignConfig
+from repro.core import kernelbench
+from repro.core.refinement import LoopConfig
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.campaign",
+        description="concurrent, cached, resumable KForge synthesis campaign")
+    ap.add_argument("--suite", choices=("small", "full"), default="small",
+                    help="KernelBench-JAX suite size (default: small)")
+    ap.add_argument("--level", type=int, choices=(1, 2, 3), default=None,
+                    help="restrict to one KernelBench level")
+    ap.add_argument("--iters", type=int, default=5,
+                    help="refinement iterations per workload (default: 5)")
+    ap.add_argument("--single-shot", action="store_true",
+                    help="one generation per workload, no refinement")
+    ap.add_argument("--reference", action="store_true",
+                    help="cross-platform reference configuration (§6.2)")
+    ap.add_argument("--profiling", action="store_true",
+                    help="enable the performance-analysis agent (§5.2)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=4,
+                    help="worker threads (default: 4)")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-workload timeout in seconds")
+    ap.add_argument("--log", default=None,
+                    help="JSONL event log path (default: "
+                         "campaign-<suite>.jsonl)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore terminal events in an existing log")
+    ap.add_argument("--report-only", action="store_true",
+                    help="skip running; aggregate the existing log")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    log_path = args.log or f"campaign-{args.suite}.jsonl"
+
+    if args.report_only:
+        events = EventLog(log_path).events()
+        if not events:
+            print(f"no events in {log_path}", file=sys.stderr)
+            return 1
+        loops = distinct_loop_configs(events)
+        if len(loops) <= 1:
+            print(format_report(report_from_events(events)))
+        else:
+            # the log interleaves runs of several configs: report each
+            # separately rather than blending them into one fast_p curve
+            for loop in loops:
+                desc = " ".join(f"{k}={v}" for k, v in sorted(loop.items()))
+                print(f"--- loop config: {desc}")
+                print(format_report(report_from_events(events, loop=loop)))
+                print()
+        return 0
+
+    workloads = kernelbench.suite(args.level, small=args.suite == "small")
+    loop = LoopConfig(num_iterations=args.iters,
+                      single_shot=args.single_shot,
+                      use_reference=args.reference,
+                      use_profiling=args.profiling, seed=args.seed)
+    cfg = CampaignConfig(loop=loop, max_workers=args.workers,
+                         timeout_s=args.timeout, log_path=log_path,
+                         resume=not args.no_resume)
+    campaign = Campaign(workloads, cfg)
+    result = campaign.run()
+
+    done = sum(1 for r in result.runs if r.error is None and not r.skipped)
+    print(f"campaign: {len(result.runs)} workloads "
+          f"({result.n_skipped} resumed, {result.n_failed} failed, "
+          f"{done} ran ok) -> {result.log_path}")
+    stats = result.cache.stats()
+    print(f"verification cache: {stats['hits']} hits / "
+          f"{stats['misses']} misses ({stats['entries']} entries)")
+    print()
+    print(campaign.report_text())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Content-addressed verification cache.
+
+Keys are produced by :func:`repro.core.verification.cache_key` — a sha256
+over (op, sorted candidate params, kernel input shapes/dtypes, tolerance,
+seed) — so equal keys imply byte-identical verification work. The cache is
+shared by every worker of a campaign (and, in the benchmark harness, across
+configs and levels), so a candidate the search revisits is verified exactly
+once per input seed.
+
+Thread-safe; hit/miss counters are the campaign's cache-effectiveness
+telemetry and what the resume/acceptance tests assert on.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from repro.core.states import EvalResult
+
+
+class VerificationCache:
+    """In-memory EvalResult memo keyed by verification content address."""
+
+    def __init__(self) -> None:
+        self._store: Dict[str, EvalResult] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[EvalResult]:
+        with self._lock:
+            result = self._store.get(key)
+            if result is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return result
+
+    def put(self, key: str, result: EvalResult) -> None:
+        with self._lock:
+            self._store[key] = result
+
+    def warm(self, key: str, result: EvalResult) -> None:
+        """Pre-load an entry (e.g. from a JSONL event log) without touching
+        the hit/miss counters."""
+        with self._lock:
+            self._store.setdefault(key, result)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._store
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}

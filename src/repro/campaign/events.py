@@ -1,0 +1,128 @@
+"""JSONL campaign event log — the durable record that makes campaigns
+resumable (paper §3.3: "we save detailed logs for each workload").
+
+One JSON object per line. Event kinds:
+
+  campaign_start   {suite, n_workloads, loop: {...}}
+  iteration        one per refinement iteration, mirroring ``IterationLog``
+                   (workload, iteration, phase, candidate, state, timing,
+                   cache_key, recommendation)
+  workload_done    terminal per-workload record with the serialized final
+                   EvalResult — resume skips these workloads
+  workload_error   scheduler-isolated failure (exception or timeout)
+
+On restart the runner replays the log: ``workload_done``/``workload_error``
+names are skipped, and every ``iteration`` event carrying a cache key
+pre-warms the verification cache, so even interrupted workloads resume
+without re-verifying the iterations they already paid for.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Union
+
+from repro.core.refinement import IterationLog
+from repro.core.states import EvalResult, ExecutionState
+
+
+def result_to_dict(r: EvalResult) -> Dict[str, Any]:
+    return {
+        "state": r.state.value,
+        "error": r.error,
+        "wall_time_s": r.wall_time_s,
+        "model_time_s": r.model_time_s,
+        "baseline_model_time_s": r.baseline_model_time_s,
+        "max_abs_err": r.max_abs_err,
+        "profile": r.profile,
+        "cache_key": r.cache_key,
+    }
+
+
+def result_from_dict(d: Dict[str, Any]) -> EvalResult:
+    return EvalResult(
+        state=ExecutionState(d["state"]),
+        error=d.get("error"),
+        wall_time_s=d.get("wall_time_s"),
+        model_time_s=d.get("model_time_s"),
+        baseline_model_time_s=d.get("baseline_model_time_s"),
+        max_abs_err=d.get("max_abs_err"),
+        profile=d.get("profile"),
+        cache_key=d.get("cache_key"),
+    )
+
+
+def iteration_event(workload: str, level: int, log: IterationLog
+                    ) -> Dict[str, Any]:
+    return {
+        "event": "iteration",
+        "workload": workload,
+        "level": level,
+        "iteration": log.iteration,
+        "phase": log.phase,
+        "candidate": log.candidate_desc,
+        "params": dict(log.candidate.params) if log.candidate else None,
+        "seed": log.seed,
+        "recommendation": log.recommendation,
+        "result": result_to_dict(log.result),
+    }
+
+
+class EventLog:
+    """Append-only, thread-safe JSONL writer/reader.
+
+    Each ``append`` is one ``write`` of a full line on a line-buffered
+    handle, so concurrent workers interleave whole events, never bytes; a
+    truncated final line from a killed process is tolerated on read.
+    """
+
+    def __init__(self, path: Union[str, Path]) -> None:
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def append(self, event: Dict[str, Any]) -> None:
+        line = json.dumps(event, sort_keys=True, default=str)
+        with self._lock:
+            with self.path.open("a") as fh:
+                fh.write(line + "\n")
+
+    def events(self) -> List[Dict[str, Any]]:
+        if not self.path.exists():
+            return []
+        out: List[Dict[str, Any]] = []
+        with self.path.open() as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue  # torn tail write from a killed run
+        return out
+
+
+def completed_workloads(events: Iterable[Dict[str, Any]]) -> Dict[str, Dict]:
+    """name -> terminal event, for every workload the log already finished."""
+    done: Dict[str, Dict] = {}
+    for ev in events:
+        if ev.get("event") in ("workload_done", "workload_error"):
+            done[ev["workload"]] = ev
+    return done
+
+
+def warm_cache(cache, events: Iterable[Dict[str, Any]]) -> int:
+    """Pre-load a VerificationCache from logged iteration events; returns the
+    number of entries loaded."""
+    n = 0
+    for ev in events:
+        if ev.get("event") != "iteration":
+            continue
+        key: Optional[str] = (ev.get("result") or {}).get("cache_key")
+        if not key:
+            continue
+        cache.warm(key, result_from_dict(ev["result"]))
+        n += 1
+    return n

@@ -1,0 +1,114 @@
+"""Campaign report: fast_p curves and execution-state histograms per level,
+aggregated from the JSONL event log (so a report never requires re-running
+anything — ``python -m repro.campaign --report-only`` works on any log).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.campaign.events import result_from_dict
+from repro.core.metrics import fast_p_curve, state_histogram
+from repro.core.states import EvalResult, ExecutionState
+
+FAST_P_THRESHOLDS = (0.0, 1.0, 1.5, 2.0)
+
+
+def distinct_loop_configs(events: Iterable[Dict[str, Any]]
+                          ) -> List[Dict[str, Any]]:
+    """The distinct loop configs that produced terminal events in a log."""
+    seen: Dict[str, Dict[str, Any]] = {}
+    for ev in events:
+        if ev.get("event") in ("workload_done", "workload_error") \
+                and ev.get("loop") is not None:
+            seen.setdefault(json.dumps(ev["loop"], sort_keys=True),
+                            ev["loop"])
+    return list(seen.values())
+
+
+def report_from_events(events: Iterable[Dict[str, Any]],
+                       thresholds=FAST_P_THRESHOLDS,
+                       loop: Optional[Dict[str, Any]] = None
+                       ) -> Dict[str, Any]:
+    """Aggregate the terminal per-workload results by KernelBench level.
+
+    A resumed/retried log can hold several terminal events for one workload
+    (e.g. ``workload_error`` in run 1, ``workload_done`` after the retry);
+    only the latest one counts, so fast_p denominators stay per-problem.
+
+    ``loop`` (optional) restricts ``workload_done`` events to those written
+    under that loop config, so a log that interleaves runs of several
+    configurations is never blended into one fast_p curve — pass
+    :func:`distinct_loop_configs` output to report each separately.
+    """
+    terminal: Dict[str, Dict[str, Any]] = {}
+    cache_stats = None
+    for ev in events:
+        if ev.get("event") in ("workload_done", "workload_error"):
+            if loop is None or ev.get("loop") == loop:
+                terminal[ev["workload"]] = ev
+        elif ev.get("event") == "campaign_done":
+            cache_stats = ev.get("cache")
+    finals: Dict[int, List[EvalResult]] = {}
+    names: Dict[int, List[str]] = {}
+    for name, ev in terminal.items():
+        level = int(ev.get("level", 0))
+        if ev["event"] == "workload_done":
+            result = result_from_dict(ev["final"])
+        else:
+            result = EvalResult(state=ExecutionState.GENERATION_FAILURE,
+                                error=ev.get("error"))
+        finals.setdefault(level, []).append(result)
+        names.setdefault(level, []).append(name)
+    levels = {}
+    for level in sorted(finals):
+        rs = finals[level]
+        levels[level] = {
+            "n": len(rs),
+            "workloads": names[level],
+            "fast_p": {f"{p:g}": v
+                       for p, v in fast_p_curve(rs, thresholds).items()},
+            "states": state_histogram(rs),
+            "mean_best_model_time_us": _mean_time_us(rs),
+        }
+    all_rs = [r for rs in finals.values() for r in rs]
+    return {
+        "levels": levels,
+        "total": {
+            "n": len(all_rs),
+            "fast_p": {f"{p:g}": v
+                       for p, v in fast_p_curve(all_rs, thresholds).items()},
+            "states": state_histogram(all_rs),
+        },
+        "cache": cache_stats,
+    }
+
+
+def _mean_time_us(results: List[EvalResult]) -> float:
+    times = [r.model_time_s for r in results if r.correct and r.model_time_s]
+    return sum(times) / len(times) * 1e6 if times else 0.0
+
+
+def format_report(report: Dict[str, Any]) -> str:
+    """Human-readable rendering of :func:`report_from_events`."""
+    lines = ["campaign report", "==============="]
+    for level, stats in sorted(report["levels"].items()):
+        lines.append(f"level {level}  (n={stats['n']})")
+        fp = "  ".join(f"fast_{p}={v:.3f}"
+                       for p, v in stats["fast_p"].items())
+        lines.append(f"  {fp}")
+        st = ", ".join(f"{k}={v}" for k, v in stats["states"].items())
+        lines.append(f"  states: {st}")
+        if stats["mean_best_model_time_us"]:
+            lines.append("  mean best model time: "
+                         f"{stats['mean_best_model_time_us']:.2f} us")
+    tot = report["total"]
+    fp = "  ".join(f"fast_{p}={v:.3f}" for p, v in tot["fast_p"].items())
+    lines.append(f"total  (n={tot['n']})")
+    lines.append(f"  {fp}")
+    if report.get("cache"):
+        c = report["cache"]
+        lines.append(f"  cache: {c.get('hits', 0)} hits / "
+                     f"{c.get('misses', 0)} misses "
+                     f"({c.get('entries', 0)} entries)")
+    return "\n".join(lines)

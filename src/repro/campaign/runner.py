@@ -1,0 +1,254 @@
+"""Concurrent, cached, resumable synthesis campaigns.
+
+A campaign = one refinement loop per workload, fanned out over a
+:class:`Scheduler` worker pool, every verification memoized in a shared
+:class:`VerificationCache`, and every iteration appended to a JSONL
+:class:`EventLog`. Restarting a campaign with the same log path skips
+workloads that already reached a terminal event and pre-warms the cache
+from the logged iterations, so only unfinished work runs — and what runs
+re-verifies nothing the previous run already paid for.
+
+This is the substrate the benchmark harness (bench_fastp_levels,
+bench_correctness, bench_profiling_impact) runs on, and what future
+multi-backend / LLM-backend sweeps should extend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+from repro.campaign import events as ev_mod
+from repro.campaign.cache import VerificationCache
+from repro.campaign.events import EventLog
+from repro.campaign.report import format_report, report_from_events
+from repro.campaign.scheduler import JobResult, Scheduler
+from repro.core import verification as verif_mod
+from repro.core.analysis import RuleBasedAnalyzer
+from repro.core.refinement import LoopConfig, RefinementOutcome, run_workload
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.synthesis import TemplateSearchBackend
+from repro.core.workload import Workload
+
+
+def _same_io(logged, current) -> bool:
+    """Compare a JSON-round-tripped io signature (lists) against a live one
+    (tuples). A log without an io stamp never matches — better to re-run a
+    workload than to pass foreign-shape results off as this campaign's."""
+    if logged is None:
+        return False
+    return json.dumps(logged) == json.dumps(current)
+
+
+@dataclasses.dataclass
+class CampaignConfig:
+    loop: LoopConfig = dataclasses.field(default_factory=LoopConfig)
+    max_workers: int = 4
+    timeout_s: Optional[float] = None      # per-workload
+    log_path: Optional[Union[str, Path]] = None
+    resume: bool = True
+    label: str = "campaign"
+
+
+@dataclasses.dataclass
+class WorkloadRun:
+    """Terminal record for one workload of the campaign."""
+    workload: str
+    level: int
+    outcome: Optional[RefinementOutcome] = None   # None on error/skip
+    final: Optional[EvalResult] = None
+    error: Optional[str] = None
+    skipped: bool = False                          # resumed from the log
+    duration_s: float = 0.0
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    runs: List[WorkloadRun]
+    cache: VerificationCache
+    log_path: Optional[Path] = None
+
+    def finals(self) -> List[EvalResult]:
+        """One terminal EvalResult per workload (errors/timeouts map to
+        GENERATION_FAILURE so fast_p keeps its per-problem denominator)."""
+        out = []
+        for run in self.runs:
+            if run.final is not None:
+                out.append(run.final)
+            else:
+                out.append(EvalResult(ExecutionState.GENERATION_FAILURE,
+                                      error=run.error or "no result"))
+        return out
+
+    @property
+    def n_skipped(self) -> int:
+        return sum(1 for r in self.runs if r.skipped)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.runs if r.error is not None)
+
+
+class Campaign:
+    """Coordinate one synthesis campaign over a set of workloads.
+
+    ``agent_factory`` / ``analyzer_factory`` build per-workload agents so
+    stateful backends (an LLM session, say) are never shared across worker
+    threads; the defaults are the stateless offline backends.
+    """
+
+    def __init__(self, workloads: Sequence[Workload], cfg: CampaignConfig,
+                 *, cache: Optional[VerificationCache] = None,
+                 agent_factory: Optional[Callable[[], Any]] = None,
+                 analyzer_factory: Optional[Callable[[], Any]] = None):
+        self.workloads = list(workloads)
+        self.cfg = cfg
+        self.cache = cache if cache is not None else VerificationCache()
+        self.agent_factory = agent_factory or TemplateSearchBackend
+        self.analyzer_factory = analyzer_factory or RuleBasedAnalyzer
+        self.log = EventLog(cfg.log_path) if cfg.log_path else None
+
+    # -- resume ------------------------------------------------------------
+
+    def _load_previous(self) -> Dict[str, Dict]:
+        """Replay the log: returns terminal events by workload name and
+        pre-warms the verification cache from logged iterations.
+
+        Each terminal event carries the loop config it ran under and is only
+        honoured when that matches the current one (checked per event in
+        ``run`` — a log may interleave runs of several configs). The cache
+        is warmed unconditionally: its keys are config-independent
+        (candidate + workload io + seed).
+        """
+        if self.log is None or not self.cfg.resume:
+            return {}
+        events = self.log.events()
+        if not events:
+            return {}
+        ev_mod.warm_cache(self.cache, events)
+        return ev_mod.completed_workloads(events)
+
+    # -- one workload ------------------------------------------------------
+
+    def _run_one(self, wl: Workload) -> RefinementOutcome:
+        on_iteration = None
+        if self.log is not None:
+            # journal each iteration the moment it completes: a campaign
+            # killed mid-workload keeps the verifications it already paid
+            # for (resume pre-warms the cache from these events).
+            def on_iteration(it):
+                self.log.append(ev_mod.iteration_event(wl.name, wl.level, it))
+        return run_workload(
+            wl, self.cfg.loop, agent=self.agent_factory(),
+            analyzer=self.analyzer_factory(), cache=self.cache,
+            on_iteration=on_iteration)
+
+    # -- campaign ----------------------------------------------------------
+
+    def run(self) -> CampaignResult:
+        done = self._load_previous()
+        by_name = {wl.name: wl for wl in self.workloads}
+        runs: Dict[str, WorkloadRun] = {}
+
+        loop_dict = dataclasses.asdict(self.cfg.loop)
+        for name, ev in done.items():
+            # only cleanly-finished workloads are skipped; errored or
+            # timed-out ones are retried (their verified iterations replay
+            # from the pre-warmed cache, so retries are cheap). The event's
+            # own loop config and io signature must both match: a log may
+            # interleave runs of several configs, and the small/full suites
+            # share workload names — neither may masquerade as this
+            # campaign's results.
+            if name not in by_name or ev.get("event") != "workload_done":
+                continue
+            if ev.get("loop") != loop_dict:
+                continue
+            if not _same_io(ev.get("io"), verif_mod.io_signature(
+                    by_name[name])):
+                continue
+            runs[name] = WorkloadRun(
+                workload=name, level=by_name[name].level,
+                final=ev_mod.result_from_dict(ev["final"]), skipped=True)
+
+        todo = [wl for wl in self.workloads if wl.name not in runs]
+        if self.log is not None:
+            self.log.append({
+                "event": "campaign_start", "label": self.cfg.label,
+                "n_workloads": len(self.workloads), "n_skipped": len(runs),
+                "loop": dataclasses.asdict(self.cfg.loop),
+            })
+
+        def record(job: JobResult) -> None:
+            wl = by_name[job.name]
+            if job.ok:
+                outcome: RefinementOutcome = job.value
+                final = outcome.final
+                runs[job.name] = WorkloadRun(
+                    workload=job.name, level=wl.level, outcome=outcome,
+                    final=final, duration_s=job.duration_s)
+                if self.log is not None:
+                    self.log.append({
+                        "event": "workload_done", "workload": job.name,
+                        "level": wl.level, "duration_s": job.duration_s,
+                        "iterations": len(outcome.logs),
+                        "io": verif_mod.io_signature(wl),
+                        "loop": dataclasses.asdict(self.cfg.loop),
+                        "final": ev_mod.result_to_dict(final),
+                    })
+            else:
+                runs[job.name] = WorkloadRun(
+                    workload=job.name, level=wl.level, error=job.error,
+                    duration_s=job.duration_s)
+                if self.log is not None:
+                    self.log.append({
+                        "event": "workload_error", "workload": job.name,
+                        "level": wl.level, "error": job.error,
+                        "duration_s": job.duration_s,
+                        "loop": dataclasses.asdict(self.cfg.loop),
+                    })
+
+        if todo:
+            sched = Scheduler(max_workers=self.cfg.max_workers,
+                              timeout_s=self.cfg.timeout_s)
+            sched.run([(wl.name, (lambda wl=wl: self._run_one(wl)))
+                       for wl in todo], on_result=record)
+
+        if self.log is not None:
+            self.log.append({"event": "campaign_done",
+                             "cache": self.cache.stats()})
+        ordered = [runs[wl.name] for wl in self.workloads if wl.name in runs]
+        return CampaignResult(runs=ordered, cache=self.cache,
+                              log_path=self.log.path if self.log else None)
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        """Aggregate the JSONL log (this campaign must have a log path),
+        restricted to terminal events of this campaign's loop config."""
+        if self.log is None:
+            raise ValueError("campaign has no event log to report from")
+        return report_from_events(self.log.events(),
+                                  loop=dataclasses.asdict(self.cfg.loop))
+
+    def report_text(self) -> str:
+        return format_report(self.report())
+
+
+def run_campaign(workloads: Sequence[Workload],
+                 loop: Optional[LoopConfig] = None, *,
+                 cache: Optional[VerificationCache] = None,
+                 max_workers: int = 4,
+                 timeout_s: Optional[float] = None,
+                 log_path: Optional[Union[str, Path]] = None,
+                 resume: bool = True,
+                 agent_factory: Optional[Callable[[], Any]] = None,
+                 analyzer_factory: Optional[Callable[[], Any]] = None
+                 ) -> CampaignResult:
+    """One-call campaign: the concurrent, cached replacement for
+    ``run_suite`` that benchmarks and examples build on."""
+    cfg = CampaignConfig(loop=loop or LoopConfig(), max_workers=max_workers,
+                         timeout_s=timeout_s, log_path=log_path,
+                         resume=resume)
+    return Campaign(workloads, cfg, cache=cache, agent_factory=agent_factory,
+                    analyzer_factory=analyzer_factory).run()

@@ -1,0 +1,153 @@
+"""Worker-pool scheduler with per-job timeout and failure isolation.
+
+Threads are the right substrate here: verification time is dominated by jax
+trace/compile/execute, which release the GIL, and candidate programs close
+over unpicklable jax callables, so processes would buy latency, not
+throughput. The pool is hand-rolled on *daemon* threads rather than
+``ThreadPoolExecutor`` deliberately: the executor joins its non-daemon
+workers at interpreter shutdown, so one genuinely hung kernel would block
+process exit forever even after its timeout fired. Daemon workers let the
+process exit the moment the campaign is done.
+
+One exploding or hung job never takes down the campaign — its error (or a
+timeout marker) is recorded in its :class:`JobResult` and every other job
+completes normally. Timeouts are measured from when a job actually starts
+executing, not from when the coordinator happens to look at it, so K
+simultaneously hung jobs are all flagged ~timeout_s after they hang rather
+than serially K×timeout_s later. A timed-out job's thread cannot be
+force-killed; it is abandoned (and dies with the process), which is the
+standard thread trade-off and is documented in the result's error. A job
+starved of a worker slot because the whole pool is wedged on hung jobs is
+cancelled (it never runs) and reported as such.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class JobResult:
+    name: str
+    value: Any = None
+    error: Optional[str] = None
+    duration_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+class _Job:
+    """One unit of work plus its completion state."""
+
+    def __init__(self, name: str, fn: Callable[[], Any]) -> None:
+        self.name = name
+        self.fn = fn
+        self.done = threading.Event()
+        self.value: Any = None
+        self.error: Optional[str] = None
+        self.duration_s = 0.0
+        self.started_at: Optional[float] = None
+        self.cancelled = False
+        self._lock = threading.Lock()
+
+    def try_cancel(self) -> bool:
+        """Cancel iff the job has not started; a cancelled job never runs."""
+        with self._lock:
+            if self.started_at is None and not self.done.is_set():
+                self.cancelled = True
+                self.done.set()
+                return True
+            return False
+
+
+class Scheduler:
+    """Fan a list of named jobs out over a daemon-thread worker pool."""
+
+    def __init__(self, max_workers: int = 4,
+                 timeout_s: Optional[float] = None) -> None:
+        self.max_workers = max(1, int(max_workers))
+        self.timeout_s = timeout_s
+
+    def run(self, jobs: Sequence[Tuple[str, Callable[[], Any]]],
+            on_result: Optional[Callable[[JobResult], None]] = None
+            ) -> List[JobResult]:
+        """Execute all jobs; returns results in submission order.
+
+        ``on_result`` (optional) is invoked from the coordinating thread as
+        each job resolves — the campaign uses it for progress events.
+        """
+        progress = {"t": time.perf_counter()}   # last start or finish seen
+        work: "queue.SimpleQueue[Optional[_Job]]" = queue.SimpleQueue()
+        job_list = [_Job(name, fn) for name, fn in jobs]
+        for job in job_list:
+            work.put(job)
+        for _ in range(self.max_workers):
+            work.put(None)                      # one shutdown token each
+
+        def worker() -> None:
+            while True:
+                job = work.get()
+                if job is None:
+                    return
+                with job._lock:
+                    if job.cancelled:
+                        continue
+                    job.started_at = progress["t"] = time.perf_counter()
+                try:
+                    job.value = job.fn()
+                except BaseException as exc:  # noqa: BLE001 — isolate
+                    job.error = f"{type(exc).__name__}: {exc}"
+                now = progress["t"] = time.perf_counter()
+                job.duration_s = now - job.started_at
+                job.done.set()
+
+        for _ in range(min(self.max_workers, len(job_list))):
+            threading.Thread(target=worker, daemon=True).start()
+
+        results: List[JobResult] = []
+        for job in job_list:
+            res = self._await(job, progress)
+            results.append(res)
+            if on_result is not None:
+                on_result(res)
+        return results
+
+    def _await(self, job: _Job, progress: Dict[str, float]) -> JobResult:
+        if self.timeout_s is None:
+            job.done.wait()
+            return self._resolve(job)
+        while True:
+            started = job.started_at
+            if started is not None:
+                remaining = self.timeout_s - (time.perf_counter() - started)
+                if job.done.wait(timeout=max(0.0, remaining)):
+                    return self._resolve(job)
+                return JobResult(
+                    job.name,
+                    error=(f"timeout after {self.timeout_s:.0f}s "
+                           "(worker thread abandoned)"),
+                    duration_s=time.perf_counter() - started)
+            # queued: wait a quantum for a worker slot; give up only once
+            # the pool has shown no progress (no job starting or finishing)
+            # for a full timeout — i.e. every worker is wedged.
+            if job.done.wait(timeout=min(1.0, self.timeout_s)):
+                return self._resolve(job)
+            if job.started_at is None \
+                    and time.perf_counter() - progress["t"] >= self.timeout_s \
+                    and job.try_cancel():
+                return JobResult(
+                    job.name, error=(f"never started within "
+                                     f"{self.timeout_s:.0f}s of last pool "
+                                     "progress (workers wedged); cancelled"))
+
+    def _resolve(self, job: _Job) -> JobResult:
+        if job.error is not None:
+            return JobResult(job.name, error=job.error,
+                             duration_s=job.duration_s)
+        return JobResult(job.name, value=job.value,
+                         duration_s=job.duration_s)

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _add_kernel(a_ref, b_ref, out_ref):
     # one (block_rows, block_lanes) VMEM tile per grid step
@@ -28,7 +30,7 @@ def vector_add(a, b, *, block_rows=8, block_lanes=512):
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(a, b)
 

@@ -29,6 +29,8 @@ class IterationLog:
     candidate_desc: Optional[str]
     result: EvalResult
     recommendation: Optional[str] = None
+    candidate: Optional[cand_mod.Candidate] = None
+    seed: Optional[int] = None       # verification input seed (None: reused)
 
 
 @dataclasses.dataclass
@@ -53,10 +55,27 @@ class LoopConfig:
 
 
 def run_workload(wl: Workload, cfg: LoopConfig, *,
-                 agent=None, analyzer=None) -> RefinementOutcome:
+                 agent=None, analyzer=None, cache=None,
+                 on_iteration=None) -> RefinementOutcome:
+    """Run the refinement loop for one workload.
+
+    ``cache`` (optional) is a verification cache (see
+    :func:`repro.core.verification.verify`): repeated candidate+seed pairs —
+    across configs or across whole campaign runs — skip re-verification.
+
+    ``on_iteration`` (optional) is called with each :class:`IterationLog`
+    as soon as it exists — the campaign runner journals iterations through
+    it, so a run killed mid-workload still persists the verifications it
+    already paid for.
+    """
     agent = agent or TemplateSearchBackend()
     analyzer = analyzer or RuleBasedAnalyzer()
     logs: List[IterationLog] = []
+
+    def record(entry: IterationLog) -> None:
+        logs.append(entry)
+        if on_iteration is not None:
+            on_iteration(entry)
     best: Optional[EvalResult] = None
     best_cand: Optional[cand_mod.Candidate] = None
 
@@ -75,18 +94,20 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
         if gen.failure or (gen.candidate is None and gen.callable_fn is None):
             result = EvalResult(ExecutionState.GENERATION_FAILURE,
                                 error=gen.failure or "no candidate")
-            logs.append(IterationLog(i, phase, None, result))
+            record(IterationLog(i, phase, None, result))
             prev, prev_result = gen, result
             continue
         key = (gen.candidate.op, tuple(sorted(gen.candidate.params.items()))) \
             if gen.candidate and gen.callable_fn is None else None
         if key is not None and key in seen:
             # converged: the agent proposes an already-evaluated candidate
-            logs.append(IterationLog(i, phase, gen.candidate.describe(),
-                                     seen[key], "converged"))
+            record(IterationLog(i, phase, gen.candidate.describe(),
+                                seen[key], "converged",
+                                candidate=gen.candidate))
             break
         result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
-                        wl, seed=cfg.seed + i, fn=gen.callable_fn)
+                        wl, seed=cfg.seed + i, fn=gen.callable_fn,
+                        cache=cache)
         if key is not None:
             seen[key] = result
         rec_text = None
@@ -95,9 +116,10 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
             rec_text = rec.text
         elif result.correct:
             rec = None
-        logs.append(IterationLog(i, phase,
-                                 gen.candidate.describe() if gen.candidate
-                                 else "llm-candidate", result, rec_text))
+        record(IterationLog(i, phase,
+                            gen.candidate.describe() if gen.candidate
+                            else "llm-candidate", result, rec_text,
+                            candidate=gen.candidate, seed=cfg.seed + i))
         if result.correct and (best is None or
                                (result.model_time_s or 1e9) <
                                (best.model_time_s or 1e9)):
@@ -109,4 +131,7 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
 
 
 def run_suite(workloads, cfg: LoopConfig, **kw) -> List[RefinementOutcome]:
+    """Serial in-process sweep. Prefer :mod:`repro.campaign` for anything
+    bigger than a handful of workloads: it fans out over a worker pool,
+    memoizes verifications, and is resumable from its JSONL event log."""
     return [run_workload(wl, cfg, **kw) for wl in workloads]

@@ -32,6 +32,7 @@ class EvalResult:
     baseline_model_time_s: Optional[float] = None
     max_abs_err: Optional[float] = None
     profile: Optional[Dict[str, Any]] = None   # fed to the analysis agent
+    cache_key: Optional[str] = None            # content address (campaign)
 
     @property
     def correct(self) -> bool:

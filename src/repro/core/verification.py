@@ -4,9 +4,18 @@ five execution states and measure its performance.
 Inputs are re-randomized on every call (fresh seed), so constant-output
 "cheating" candidates (paper §7.3) are caught as numeric mismatches instead
 of surviving evaluation.
+
+``verify`` optionally consults a verification cache (anything with
+``get(key) -> Optional[EvalResult]`` / ``put(key, result)``, e.g.
+:class:`repro.campaign.VerificationCache`): declarative candidates are
+content-addressed by :func:`cache_key` so a repeated (candidate, workload,
+seed) triple across iterations, configs, or whole campaigns is never
+re-verified.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 from typing import Callable, Optional
 
@@ -22,14 +31,73 @@ _TRACE_ERRORS = (TypeError, ValueError, AssertionError, KeyError,
                  IndexError, NotImplementedError)
 
 
+def io_signature(wl: Workload):
+    """Kernel-level input (name, shape, dtype) triples for a workload.
+
+    Shapes/dtypes are seed-independent, so the signature is memoized on the
+    workload instance itself (computing it generates one set of inputs; the
+    cache-hit path must stay free of input generation). ``_io_sig`` is not a
+    dataclass field, so ``dataclasses.replace`` clones — e.g. the shrunken
+    small-suite workloads — never inherit a stale signature.
+    """
+    sig = getattr(wl, "_io_sig", None)
+    if sig is None:
+        kernel_inputs = kb.workload_for_candidate_inputs(wl, wl.inputs(0))
+        sig = sorted((k, [int(d) for d in v.shape], str(v.dtype))
+                     for k, v in kernel_inputs.items())
+        wl._io_sig = sig
+    return sig
+
+
+def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int) -> str:
+    """Content address of one verification: op, sorted candidate params, the
+    kernel-level input shapes/dtypes, tolerance, and the input seed.
+
+    Two verify calls with equal keys see byte-identical inputs and an
+    identical candidate program, so their ``EvalResult`` is interchangeable.
+    """
+    sig = {
+        "workload": wl.name,
+        "op": candidate.op,
+        "params": sorted((k, repr(v)) for k, v in candidate.params.items()),
+        "io": io_signature(wl),
+        "tol": wl.tol,
+        "seed": int(seed),
+    }
+    blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def verify(candidate: cand_mod.Candidate, wl: Workload, *,
            seed: Optional[int] = None, measure_wall: bool = False,
-           fn: Optional[Callable] = None) -> EvalResult:
+           fn: Optional[Callable] = None, cache=None) -> EvalResult:
     """Run the verification pipeline for one candidate against one workload."""
     seed = int(time.time_ns() % (2 ** 31)) if seed is None else seed
+
+    # -- verification cache: only declarative candidates are addressable ----
+    key = None
+    if cache is not None and fn is None:
+        key = cache_key(candidate, wl, seed)
+        hit = cache.get(key)
+        # a hit recorded without wall-clock cannot satisfy a measure_wall
+        # request — fall through, re-verify, and upgrade the entry.
+        if hit is not None and (not measure_wall
+                                or hit.wall_time_s is not None):
+            return hit
+
     inputs = wl.inputs(seed)
     kernel_inputs = kb.workload_for_candidate_inputs(wl, inputs)
     shapes = {k: tuple(v.shape) for k, v in kernel_inputs.items()}
+    result = _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes,
+                              measure_wall=measure_wall, fn=fn)
+    result.cache_key = key
+    if key is not None:
+        cache.put(key, result)
+    return result
+
+
+def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
+                     measure_wall, fn) -> EvalResult:
 
     # -- generation state handled by the caller; here candidate exists -------
     if fn is None:

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
     ic = pl.program_id(2)
@@ -57,7 +59,7 @@ def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
                                lambda ib, ih, ic: (ib, ic, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, t, h, p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, a, b, c)

@@ -22,8 +22,23 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as _pltpu
 
-from repro.kernels import ref
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat constructor for Mosaic compiler params.
+
+    The class is ``pltpu.TPUCompilerParams`` up to jax 0.4.x and
+    ``pltpu.CompilerParams`` from 0.5 on; resolve whichever this jax
+    provides. Defined before the kernel imports below so the kernel
+    modules can import it without a circular-import failure.
+    """
+    cls = getattr(_pltpu, "CompilerParams", None) \
+        or getattr(_pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+from repro.kernels import ref  # noqa: E402
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba2 as _mamba2

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _rmsnorm_kernel(x_ref, g_ref, out_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -32,7 +34,7 @@ def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, g2)

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _rope_kernel(x_ref, pos_ref, out_ref, *, theta: float, half: int):
     x = x_ref[0, :, 0, :].astype(jnp.float32)             # (bs, d)
@@ -36,7 +38,7 @@ def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
         out_specs=pl.BlockSpec((1, block_s, 1, d),
                                lambda ib, ih, isq: (ib, isq, ih, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x, positions)

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _softmax_kernel(x_ref, out_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -28,7 +30,7 @@ def softmax(x: jax.Array, *, block_rows: int = 128,
         in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

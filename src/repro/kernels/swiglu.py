@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _swiglu_kernel(g_ref, u_ref, out_ref):
     g = g_ref[...].astype(jnp.float32)
@@ -34,7 +36,7 @@ def swiglu_act(gate: jax.Array, up: jax.Array, *, block_rows: int = 128,
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(gate.shape, gate.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(gate, up)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 
 def _swish_kernel(x_ref, out_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -34,7 +36,7 @@ def swish(x: jax.Array, *, block_rows: int = 8, block_lanes: int = 512,
         in_specs=[pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

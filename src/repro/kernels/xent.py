@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ops import tpu_compiler_params
+
 NEG_INF = -1e30
 _LANES = 128
 
@@ -69,7 +71,7 @@ def softmax_xent(logits: jax.Array, labels: jax.Array, *, block_t: int = 128,
             pltpu.VMEM((block_t, _LANES), jnp.float32),
             pltpu.VMEM((block_t, _LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits, labels)

@@ -5,6 +5,17 @@ import pytest
 # tests and benchmarks must see the single real device; only
 # launch/dryrun.py forces 512 placeholder devices.
 
+# Two lanes (documented in ROADMAP.md):
+#   fast lane:  python -m pytest -x -q -m "not slow"   (~seconds)
+#   full lane:  python -m pytest -x -q                 (everything)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight parametrization or end-to-end campaign; "
+        "excluded from the fast lane (-m \"not slow\")")
+
 
 @pytest.fixture
 def rng():

@@ -1,0 +1,525 @@
+"""Campaign runner: cache semantics, scheduler isolation, JSONL resume,
+refinement convergence, and the twice-run 100%-hit acceptance property."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import (Campaign, CampaignConfig, EventLog, JobResult,
+                            Scheduler, VerificationCache, result_from_dict,
+                            result_to_dict, run_campaign, warm_cache)
+from repro.campaign.report import format_report, report_from_events
+from repro.core import LoopConfig, kernelbench
+from repro.core import candidates as cand_mod
+from repro.core import verification as verif_mod
+from repro.core.refinement import run_workload
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.synthesis import Generation
+from repro.core.workload import Workload, randn
+
+
+def _tiny_workload(name="T1/swish", op="swish", rows=8, lanes=512):
+    from repro.kernels import ref
+    return Workload(
+        name=name, level=1, op=op,
+        ref_fn=lambda x: ref.swish(x),
+        input_fn=lambda rng: {"x": randn(rng, (rows, lanes))},
+        input_shapes={"x": (rows, lanes)})
+
+
+# ---------------------------------------------------------------------------
+# VerificationCache semantics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_returns_same_result_without_reverifying(monkeypatch):
+    wl = _tiny_workload()
+    cand = cand_mod.initial_candidate("swish", use_reference=False)
+    cache = VerificationCache()
+
+    calls = {"n": 0}
+    real_materialize = cand_mod.materialize
+
+    def counting_materialize(c, **kw):
+        calls["n"] += 1
+        return real_materialize(c, **kw)
+
+    monkeypatch.setattr(cand_mod, "materialize", counting_materialize)
+    r1 = verif_mod.verify(cand, wl, seed=0, cache=cache)
+    r2 = verif_mod.verify(cand, wl, seed=0, cache=cache)
+    assert r1.correct
+    assert r2 is r1                     # memoized object, not a re-run
+    assert calls["n"] == 1              # same candidate+seed verified once
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+
+
+def test_cache_key_separates_seed_params_and_workload():
+    wl_a = _tiny_workload()
+    wl_b = _tiny_workload(name="T1/swish-wide", lanes=2048)
+    c1 = cand_mod.Candidate("swish", {"block_rows": 1, "block_lanes": 128})
+    c2 = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 128})
+    base = verif_mod.cache_key(c1, wl_a, 0)
+    assert verif_mod.cache_key(c1, wl_a, 0) == base          # deterministic
+    assert verif_mod.cache_key(c1, wl_a, 1) != base          # seed
+    assert verif_mod.cache_key(c2, wl_a, 0) != base          # params
+    assert verif_mod.cache_key(c1, wl_b, 0) != base          # workload io
+
+
+def test_llm_callable_candidates_bypass_cache():
+    wl = _tiny_workload()
+    cand = cand_mod.initial_candidate("swish", use_reference=False)
+    cache = VerificationCache()
+    r = verif_mod.verify(cand, wl, seed=0, cache=cache,
+                         fn=lambda x: jnp.asarray(x) * 0)
+    assert r.cache_key is None
+    assert len(cache) == 0
+    assert cache.hits == 0 and cache.misses == 0
+
+
+# ---------------------------------------------------------------------------
+# Refinement convergence (previously untested)
+# ---------------------------------------------------------------------------
+
+
+class _StubbornAgent:
+    """Always proposes the same legal candidate."""
+
+    def __init__(self, cand):
+        self.cand = cand
+
+    def generate(self, wl, **kw):
+        return Generation(candidate=self.cand, source=self.cand.describe())
+
+
+def test_run_workload_converges_on_duplicate_candidate():
+    wl = _tiny_workload()
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    out = run_workload(wl, LoopConfig(num_iterations=5),
+                       agent=_StubbornAgent(cand))
+    # iteration 0 verifies; iteration 1 sees the duplicate, logs convergence
+    # and stops early instead of burning the remaining budget.
+    assert len(out.logs) == 2
+    assert out.logs[-1].recommendation == "converged"
+    assert out.logs[-1].result is out.logs[0].result
+    assert out.best is not None and out.best.correct
+
+
+def test_converged_iteration_reuses_result_not_verify(monkeypatch):
+    wl = _tiny_workload()
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    calls = {"n": 0}
+    real_verify = verif_mod.verify
+
+    def counting_verify(*a, **kw):
+        calls["n"] += 1
+        return real_verify(*a, **kw)
+
+    import repro.core.refinement as refinement_mod
+    monkeypatch.setattr(refinement_mod, "verify", counting_verify)
+    run_workload(wl, LoopConfig(num_iterations=5), agent=_StubbornAgent(cand))
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: failure isolation and timeout
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_isolates_exploding_job():
+    def boom():
+        raise RuntimeError("kernel exploded")
+
+    results = Scheduler(max_workers=2).run([
+        ("ok-1", lambda: 41), ("boom", boom), ("ok-2", lambda: 42)])
+    by_name = {r.name: r for r in results}
+    assert by_name["ok-1"].ok and by_name["ok-1"].value == 41
+    assert by_name["ok-2"].ok and by_name["ok-2"].value == 42
+    assert not by_name["boom"].ok
+    assert "RuntimeError: kernel exploded" in by_name["boom"].error
+
+
+def test_scheduler_timeout_marks_job_and_campaign_continues():
+    import threading
+    release = threading.Event()
+
+    def hang():
+        release.wait(10.0)
+        return "late"
+
+    results = Scheduler(max_workers=2, timeout_s=0.2).run([
+        ("hang", hang), ("ok", lambda: 1)])
+    release.set()
+    by_name = {r.name: r for r in results}
+    assert not by_name["hang"].ok and "timeout" in by_name["hang"].error
+    assert by_name["ok"].ok
+
+
+def test_campaign_isolates_exploding_workload(tmp_path):
+    good = _tiny_workload("T1/good")
+    bad = _tiny_workload("T1/bad")
+
+    class ExplodingAgent:
+        def generate(self, wl, **kw):
+            if wl.name == "T1/bad":
+                raise RuntimeError("agent crashed")
+            return Generation(
+                candidate=cand_mod.initial_candidate("swish",
+                                                     use_reference=False))
+
+    log = tmp_path / "c.jsonl"
+    cfg = CampaignConfig(loop=LoopConfig(num_iterations=2), max_workers=2,
+                         log_path=log)
+    result = Campaign([good, bad], cfg,
+                      agent_factory=ExplodingAgent).run()
+    by_name = {r.workload: r for r in result.runs}
+    assert by_name["T1/good"].error is None
+    assert by_name["T1/good"].final.correct
+    assert "agent crashed" in by_name["T1/bad"].error
+    # the error is journaled, and fast_p still counts the failed problem
+    events = EventLog(log).events()
+    assert any(e["event"] == "workload_error" and e["workload"] == "T1/bad"
+               for e in events)
+    finals = result.finals()
+    assert len(finals) == 2
+    assert sum(1 for f in finals if f.correct) == 1
+
+
+# ---------------------------------------------------------------------------
+# JSONL events: round-trip, resume, pre-warm
+# ---------------------------------------------------------------------------
+
+
+def test_eval_result_event_roundtrip():
+    r = EvalResult(ExecutionState.CORRECT, model_time_s=1.5e-6,
+                   baseline_model_time_s=3e-6, max_abs_err=1e-5,
+                   profile={"op": "swish"}, cache_key="abc")
+    back = result_from_dict(json.loads(json.dumps(result_to_dict(r))))
+    assert back.state is ExecutionState.CORRECT
+    assert back.speedup == pytest.approx(2.0)
+    assert back.cache_key == "abc"
+    assert back.profile == {"op": "swish"}
+
+
+def test_resume_skips_completed_workloads(tmp_path):
+    wls = [_tiny_workload("T1/a"), _tiny_workload("T1/b")]
+    log = tmp_path / "resume.jsonl"
+    cfg = CampaignConfig(loop=LoopConfig(num_iterations=3), max_workers=2,
+                         log_path=log)
+    first = Campaign(wls, cfg).run()
+    assert first.n_skipped == 0 and first.n_failed == 0
+
+    class MustNotRun:
+        def generate(self, wl, **kw):  # pragma: no cover - the assertion
+            raise AssertionError("resumed campaign re-ran a done workload")
+
+    second = Campaign(wls, cfg, agent_factory=MustNotRun).run()
+    assert second.n_skipped == 2
+    assert all(r.final is not None and r.final.correct for r in second.runs)
+    # the resumed result is report-ready without re-running anything
+    report = report_from_events(EventLog(log).events())
+    assert report["levels"][1]["n"] >= 2
+
+
+def test_resume_prewarms_cache_for_unfinished_workloads(tmp_path):
+    wl = _tiny_workload("T1/warm")
+    log = tmp_path / "warm.jsonl"
+    cfg = CampaignConfig(loop=LoopConfig(num_iterations=3), max_workers=1,
+                         log_path=log)
+    Campaign([wl], cfg).run()
+
+    # strip the terminal event: simulates a campaign killed mid-workload
+    events = EventLog(log).events()
+    iter_events = [e for e in events if e["event"] == "iteration"]
+    assert iter_events
+    truncated = tmp_path / "truncated.jsonl"
+    with truncated.open("w") as fh:
+        for ev in iter_events:
+            fh.write(json.dumps(ev) + "\n")
+
+    cache = VerificationCache()
+    n = warm_cache(cache, EventLog(truncated).events())
+    assert n == len([e for e in iter_events
+                     if e["result"].get("cache_key")])
+    cfg2 = CampaignConfig(loop=LoopConfig(num_iterations=3), max_workers=1,
+                          log_path=truncated)
+    result = Campaign([wl], cfg2, cache=cache).run()
+    assert result.n_skipped == 0          # not terminal -> re-run ...
+    assert cache.misses == 0              # ... entirely from cache
+    assert result.runs[0].final.correct
+
+
+def test_event_log_tolerates_torn_tail(tmp_path):
+    log = tmp_path / "torn.jsonl"
+    elog = EventLog(log)
+    elog.append({"event": "campaign_start"})
+    with log.open("a") as fh:
+        fh.write('{"event": "iteration", "trunc')   # killed mid-write
+    assert [e["event"] for e in elog.events()] == ["campaign_start"]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: small-suite campaign twice -> second run is 100% cache hits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_small_suite_campaign_second_run_all_cache_hits(tmp_path):
+    wls = kernelbench.suite(small=True)
+    cache = VerificationCache()
+    first = run_campaign(wls, LoopConfig(num_iterations=5), cache=cache,
+                         max_workers=4, log_path=tmp_path / "r1.jsonl")
+    assert first.n_failed == 0
+    assert cache.misses > 0 and cache.hits == 0
+
+    misses_before, hits_before = cache.misses, cache.hits
+    second = run_campaign(wls, LoopConfig(num_iterations=5), cache=cache,
+                          max_workers=4, log_path=tmp_path / "r2.jsonl")
+    assert second.n_failed == 0
+    assert cache.misses == misses_before          # 100% verification hits
+    assert cache.hits > hits_before
+    # both runs converge on identical terminal results
+    for a, b in zip(first.finals(), second.finals()):
+        assert a.state is b.state
+        assert a.model_time_s == b.model_time_s
+
+
+# ---------------------------------------------------------------------------
+# CLI + report
+# ---------------------------------------------------------------------------
+
+
+def test_cli_emits_fastp_report_from_jsonl(tmp_path, capsys):
+    from repro.campaign.__main__ import main
+    log = tmp_path / "cli.jsonl"
+    rc = main(["--suite", "small", "--level", "1", "--iters", "2",
+               "--workers", "2", "--log", str(log)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert log.exists()
+    assert "fast_0=" in out and "fast_1.5=" in out
+    assert "verification cache:" in out
+
+    # --report-only aggregates the same log without re-running
+    rc = main(["--report-only", "--log", str(log)])
+    out2 = capsys.readouterr().out
+    assert rc == 0
+    assert "campaign report" in out2
+
+
+def test_report_counts_errors_in_denominator():
+    events = [
+        {"event": "workload_done", "workload": "L1/a", "level": 1,
+         "final": result_to_dict(EvalResult(
+             ExecutionState.CORRECT, model_time_s=1e-6,
+             baseline_model_time_s=4e-6))},
+        {"event": "workload_error", "workload": "L1/b", "level": 1,
+         "error": "timeout"},
+        {"event": "campaign_done", "cache": {"hits": 3, "misses": 1,
+                                             "entries": 1}},
+    ]
+    report = report_from_events(events)
+    assert report["levels"][1]["n"] == 2
+    assert report["levels"][1]["fast_p"]["0"] == pytest.approx(0.5)
+    assert report["total"]["fast_p"]["2"] == pytest.approx(0.5)
+    text = format_report(report)
+    assert "generation_failure=1" in text
+    assert "cache: 3 hits / 1 misses" in text
+
+
+@pytest.mark.slow
+def test_hung_job_does_not_block_process_exit():
+    """Daemon workers: a wedged job must not stall interpreter shutdown
+    after its timeout fires (ThreadPoolExecutor would join it at exit)."""
+    import subprocess
+    import sys
+    import time as _time
+    code = (
+        "import time\n"
+        "from repro.campaign.scheduler import Scheduler\n"
+        "rs = Scheduler(max_workers=2, timeout_s=0.5).run([\n"
+        "    ('hang', lambda: time.sleep(120)), ('ok', lambda: 1)])\n"
+        "print([r.error is None for r in rs])\n")
+    t0 = _time.monotonic()
+    proc = subprocess.run([sys.executable, "-c", code], timeout=60,
+                          capture_output=True, text=True)
+    elapsed = _time.monotonic() - t0
+    assert proc.returncode == 0, proc.stderr
+    assert "[False, True]" in proc.stdout
+    assert elapsed < 45          # exited despite the 120s-hung worker
+
+
+def test_report_separates_interleaved_loop_configs():
+    from repro.campaign import distinct_loop_configs
+    loop_a = {"num_iterations": 1, "single_shot": True}
+    loop_b = {"num_iterations": 5, "single_shot": False}
+    ok = result_to_dict(EvalResult(ExecutionState.CORRECT, model_time_s=1e-6,
+                                   baseline_model_time_s=4e-6))
+    bad = result_to_dict(EvalResult(ExecutionState.NUMERIC_MISMATCH,
+                                    error="err"))
+    events = [
+        {"event": "workload_done", "workload": "L1/a", "level": 1,
+         "loop": loop_a, "final": bad},
+        {"event": "workload_done", "workload": "L1/b", "level": 1,
+         "loop": loop_a, "final": bad},
+        {"event": "workload_done", "workload": "L1/a", "level": 1,
+         "loop": loop_b, "final": ok},
+    ]
+    assert len(distinct_loop_configs(events)) == 2
+    rep_a = report_from_events(events, loop=loop_a)
+    rep_b = report_from_events(events, loop=loop_b)
+    assert rep_a["total"]["n"] == 2
+    assert rep_a["total"]["fast_p"]["0"] == pytest.approx(0.0)
+    assert rep_b["total"]["n"] == 1
+    assert rep_b["total"]["fast_p"]["0"] == pytest.approx(1.0)
+    # unfiltered, latest-per-workload blends configs — the CLI avoids this
+    # by reporting per distinct config
+    assert report_from_events(events)["total"]["n"] == 2
+
+
+def test_scheduler_jobresult_ok_property():
+    assert JobResult("x", value=1).ok
+    assert not JobResult("x", error="boom").ok
+
+
+def test_report_latest_terminal_event_wins():
+    done = {"event": "workload_done", "workload": "L1/a", "level": 1,
+            "final": result_to_dict(EvalResult(ExecutionState.CORRECT,
+                                               model_time_s=1e-6,
+                                               baseline_model_time_s=4e-6))}
+    err = {"event": "workload_error", "workload": "L1/a", "level": 1,
+           "error": "timeout"}
+    # error then retried-to-done: the retry wins and n stays 1
+    report = report_from_events([err, done])
+    assert report["levels"][1]["n"] == 1
+    assert report["levels"][1]["fast_p"]["0"] == pytest.approx(1.0)
+    # duplicate done events (--no-resume rerun on one log) don't double-count
+    report = report_from_events([done, done])
+    assert report["total"]["n"] == 1
+
+
+def test_scheduler_starved_jobs_cancelled_not_marked_timeout():
+    import threading
+    release = threading.Event()
+
+    def hang():
+        release.wait(10.0)
+        return "late"
+
+    ran = {"n": 0}
+
+    def queued():
+        ran["n"] += 1
+        return "ran"
+
+    # one worker: 'hang' occupies it, 'queued' never gets a slot
+    results = Scheduler(max_workers=1, timeout_s=0.2).run([
+        ("hang", hang), ("queued", queued)])
+    release.set()
+    by_name = {r.name: r for r in results}
+    assert "timeout" in by_name["hang"].error
+    assert "never started" in by_name["queued"].error
+    assert ran["n"] == 0        # cancelled, not left to run after return
+
+
+def test_resume_ignores_log_from_different_loop_config(tmp_path):
+    wl = _tiny_workload("T1/cfg")
+    log = tmp_path / "cfg.jsonl"
+    Campaign([wl], CampaignConfig(loop=LoopConfig(num_iterations=2),
+                                  max_workers=1, log_path=log)).run()
+    # same log, different loop config: nothing may be skipped ...
+    cache = VerificationCache()
+    result = Campaign([wl], CampaignConfig(
+        loop=LoopConfig(num_iterations=3, use_profiling=True),
+        max_workers=1, log_path=log), cache=cache).run()
+    assert result.n_skipped == 0
+    assert result.runs[0].final.correct
+    # ... but the config-independent cache is still pre-warmed
+    assert cache.hits > 0
+
+
+def test_resume_rejects_same_name_different_shapes(tmp_path):
+    """Small and full suites share workload names; a log written for one
+    shape must not be replayed as finished work for another."""
+    log = tmp_path / "shapes.jsonl"
+    cfg_kw = dict(loop=LoopConfig(num_iterations=2), max_workers=1,
+                  log_path=log)
+    Campaign([_tiny_workload("T1/shared", lanes=512)],
+             CampaignConfig(**cfg_kw)).run()
+    result = Campaign([_tiny_workload("T1/shared", lanes=2048)],
+                      CampaignConfig(**cfg_kw)).run()
+    assert result.n_skipped == 0          # io signature differs -> re-run
+    assert result.runs[0].final.correct
+
+
+def test_iterations_journaled_before_workload_finishes(tmp_path):
+    """A workload that dies mid-loop still leaves its completed iterations
+    in the log (that is what resume pre-warms the cache from)."""
+    wl = _tiny_workload("T1/dies")
+
+    class DiesOnThird:
+        def __init__(self):
+            self.calls = 0
+
+        def generate(self, w, **kw):
+            self.calls += 1
+            if self.calls >= 3:
+                raise RuntimeError("backend died mid-workload")
+            p = {"block_rows": self.calls, "block_lanes": 128}
+            return Generation(candidate=cand_mod.Candidate("swish", p))
+
+    log = tmp_path / "dies.jsonl"
+    cfg = CampaignConfig(loop=LoopConfig(num_iterations=5), max_workers=1,
+                         log_path=log)
+    result = Campaign([wl], cfg, agent_factory=DiesOnThird).run()
+    assert "backend died" in result.runs[0].error
+    events = EventLog(log).events()
+    iters = [e for e in events if e["event"] == "iteration"]
+    assert len(iters) == 2                # both completed iterations persist
+    assert all(e["result"]["cache_key"] for e in iters)
+
+
+def test_resume_honours_per_event_config_in_interleaved_log(tmp_path):
+    """A log holding runs of two configs: resume must skip only the
+    terminal events written under the *current* config, even when the last
+    campaign_start belongs to it."""
+    wl_a, wl_b = _tiny_workload("T1/ia"), _tiny_workload("T1/ib")
+    log = tmp_path / "mixed.jsonl"
+    loop3, loop5 = LoopConfig(num_iterations=3), LoopConfig(num_iterations=5)
+    # run A (iters=3) finishes both workloads
+    Campaign([wl_a, wl_b], CampaignConfig(loop=loop3, max_workers=1,
+                                          log_path=log)).run()
+    # run B (iters=5) finishes only wl_a (simulating a kill before wl_b)
+    Campaign([wl_a], CampaignConfig(loop=loop5, max_workers=1,
+                                    log_path=log, resume=False)).run()
+    # run C (iters=5): wl_a resumes from run B; wl_b must NOT resume from
+    # run A's iters=3 result just because run B's campaign_start is last.
+    ran = []
+
+    class Tracking:
+        def generate(self, w, **kw):
+            ran.append(w.name)
+            return Generation(candidate=cand_mod.initial_candidate(
+                "swish", use_reference=False))
+
+    result = Campaign([wl_a, wl_b],
+                      CampaignConfig(loop=loop5, max_workers=1,
+                                     log_path=log),
+                      agent_factory=Tracking).run()
+    assert result.n_skipped == 1
+    skipped = {r.workload for r in result.runs if r.skipped}
+    assert skipped == {"T1/ia"}
+    assert "T1/ib" in ran and "T1/ia" not in ran
+
+
+def test_measure_wall_not_satisfied_by_wall_less_cache_hit():
+    wl = _tiny_workload("T1/wall")
+    cand = cand_mod.initial_candidate("swish", use_reference=False)
+    cache = VerificationCache()
+    r1 = verif_mod.verify(cand, wl, seed=0, cache=cache)
+    assert r1.wall_time_s is None
+    r2 = verif_mod.verify(cand, wl, seed=0, cache=cache, measure_wall=True)
+    assert r2.wall_time_s is not None       # re-verified, not the stale hit
+    # the upgraded entry now serves measure_wall requests from cache
+    r3 = verif_mod.verify(cand, wl, seed=0, cache=cache, measure_wall=True)
+    assert r3 is r2

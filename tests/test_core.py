@@ -87,6 +87,7 @@ def test_reference_improves_single_shot():
     assert not base.correct and with_ref.correct
 
 
+@pytest.mark.slow
 def test_profiling_does_not_hurt_and_logs_recommendations():
     wl = kernelbench.by_name("L1/rmsnorm")
     plain = run_workload(wl, LoopConfig(num_iterations=4))
@@ -97,7 +98,7 @@ def test_profiling_does_not_hurt_and_logs_recommendations():
 
 
 def test_convergence_breaks_early():
-    wl = kernelbench.by_name("L1/swish")
+    wl = kernelbench.by_name("L1/swish", small=True)
     out = run_workload(wl, LoopConfig(num_iterations=5, use_profiling=True))
     assert len(out.logs) <= 5
     assert out.final.correct

@@ -11,7 +11,8 @@ from repro.configs.base import SHAPES
 from repro.roofline import roofline_report
 
 
-@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+@pytest.mark.parametrize("shape", [
+    pytest.param("train_4k", marks=pytest.mark.slow), "decode_32k"])
 def test_lower_cell_whisper_debug_mesh(shape):
     mesh = make_debug_mesh(1, 1)
     compiled, lowered, aux = lower_cell("whisper-base", shape, mesh)

@@ -3,6 +3,7 @@ shardings of the live mesh (the down/up-scale path after a node failure)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_debug_mesh
@@ -32,6 +33,7 @@ def test_restore_with_mesh_shardings(tmp_path):
     assert leaf.sharding.mesh.shape == mesh.shape
 
 
+@pytest.mark.slow
 def test_trainer_state_survives_relayout(tmp_path):
     """Save from a trainer, restore into a fresh trainer, losses continue."""
     from repro.train import Trainer, TrainConfig

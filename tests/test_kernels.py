@@ -53,8 +53,9 @@ def test_matmul_dtypes(rng, dtype):
                                np.asarray(ref.matmul(a, b), np.float32), **tol)
 
 
-@pytest.mark.parametrize("rows,d,block", [(256, 512, 256), (512, 128, 256),
-                                          (1024, 1024, 256)])
+@pytest.mark.parametrize("rows,d,block", [
+    (256, 512, 256), (512, 128, 256),
+    pytest.param(1024, 1024, 256, marks=pytest.mark.slow)])
 def test_rmsnorm(rng, rows, d, block):
     x, g = _arr(rng, (rows, d)), _arr(rng, (d,), scale=0.5)
     np.testing.assert_allclose(rmsnorm(x, g, block_rows=block),
@@ -83,8 +84,9 @@ def test_swiglu(rng):
 
 
 @pytest.mark.parametrize("sq,sk,h,kv,d,causal", [
-    (256, 256, 4, 4, 64, True),
-    (256, 256, 8, 2, 64, True),    # GQA
+    pytest.param(256, 256, 4, 4, 64, True, marks=pytest.mark.slow),
+    pytest.param(256, 256, 8, 2, 64, True,    # GQA
+                 marks=pytest.mark.slow),
     (128, 256, 4, 2, 32, True),    # cross-length causal
     (256, 256, 4, 2, 64, False),
 ])
@@ -111,8 +113,8 @@ def test_flash_attention_dtype(rng, dtype):
 
 @pytest.mark.parametrize("s,kv,g,lengths", [
     (512, 2, 2, (300, 512)),
-    (512, 1, 8, (512, 100)),
-    (1024, 4, 1, (1, 1024)),
+    pytest.param(512, 1, 8, (512, 100), marks=pytest.mark.slow),
+    pytest.param(1024, 4, 1, (1, 1024), marks=pytest.mark.slow),
 ])
 def test_decode_attention(rng, s, kv, g, lengths):
     h = kv * g
@@ -125,8 +127,10 @@ def test_decode_attention(rng, s, kv, g, lengths):
                                rtol=3e-4, atol=3e-4)
 
 
-@pytest.mark.parametrize("t,h,d,chunk", [(64, 2, 16, 16), (128, 1, 32, 64),
-                                         (64, 4, 8, 64)])
+@pytest.mark.parametrize("t,h,d,chunk", [
+    (64, 2, 16, 16),
+    pytest.param(128, 1, 32, 64, marks=pytest.mark.slow),
+    (64, 4, 8, 64)])
 def test_wkv6(rng, t, h, d, chunk):
     r = _arr(rng, (2, t, h, d))
     k = _arr(rng, (2, t, h, d))
@@ -150,7 +154,9 @@ def test_ssd(rng, t, h, p, n, chunk):
     np.testing.assert_allclose(out, exp, rtol=5e-4, atol=5e-4)
 
 
-@pytest.mark.parametrize("s,d,theta", [(256, 64, 1e4), (512, 128, 5e5)])
+@pytest.mark.parametrize("s,d,theta", [
+    (256, 64, 1e4),
+    pytest.param(512, 128, 5e5, marks=pytest.mark.slow)])
 def test_rope(rng, s, d, theta):
     x = _arr(rng, (2, s, 4, d))
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (2, s))
@@ -158,7 +164,9 @@ def test_rope(rng, s, d, theta):
                                ref.rope(x, pos, theta), rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("t,v,scale", [(128, 2048, 1.0), (256, 8192, 50.0)])
+@pytest.mark.parametrize("t,v,scale", [
+    (128, 2048, 1.0),
+    pytest.param(256, 8192, 50.0, marks=pytest.mark.slow)])
 def test_xent(rng, t, v, scale):
     logits = _arr(rng, (t, v), scale=scale)
     labels = jnp.asarray(rng.integers(0, v, (t,)), jnp.int32)
@@ -167,6 +175,7 @@ def test_xent(rng, t, v, scale):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_attention_grad_matches_reference(rng):
     """Pallas forward + recompute-backward == oracle gradients."""
     from repro.kernels import ops

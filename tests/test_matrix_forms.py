@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -84,20 +83,28 @@ def test_matrix_forms_differentiable(rng):
     np.testing.assert_allclose(g1, g2, rtol=2e-3, atol=2e-3)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 32]))
-def test_wkv6_matrix_stability_extreme_decay(seed, chunk):
+def test_wkv6_matrix_stability_extreme_decay():
     """Strong decay (w→0) must not overflow — the 1/decay factorization
-    would; the difference form stays bounded."""
-    rng = np.random.default_rng(seed)
-    B, T, H, D = 1, 64, 1, 8
-    r = _mk(rng, B, T, H, D)
-    k = _mk(rng, B, T, H, D)
-    v = _mk(rng, B, T, H, D)
-    w = _mk(rng, B, T, H, D, lo=1e-4, hi=0.5)   # aggressive decay
-    u = _mk(rng, H, D)
-    out, s = ops.wkv6_matrix(r, k, v, w, u, chunk=chunk)
-    assert np.isfinite(np.asarray(out)).all()
-    assert np.isfinite(np.asarray(s)).all()
-    out_ref, _ = ref.wkv6(r, k, v, w, u)
-    np.testing.assert_allclose(out, out_ref, rtol=1e-3, atol=1e-3)
+    would; the difference form stays bounded. Guarded so the module still
+    collects (and the tests above still run) without hypothesis vendored."""
+    pytest.importorskip(
+        "hypothesis", reason="hypothesis not vendored; property test skipped")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 32]))
+    def check(seed, chunk):
+        rng = np.random.default_rng(seed)
+        B, T, H, D = 1, 64, 1, 8
+        r = _mk(rng, B, T, H, D)
+        k = _mk(rng, B, T, H, D)
+        v = _mk(rng, B, T, H, D)
+        w = _mk(rng, B, T, H, D, lo=1e-4, hi=0.5)   # aggressive decay
+        u = _mk(rng, H, D)
+        out, s = ops.wkv6_matrix(r, k, v, w, u, chunk=chunk)
+        assert np.isfinite(np.asarray(out)).all()
+        assert np.isfinite(np.asarray(s)).all()
+        out_ref, _ = ref.wkv6(r, k, v, w, u)
+        np.testing.assert_allclose(out, out_ref, rtol=1e-3, atol=1e-3)
+
+    check()

@@ -41,6 +41,7 @@ def test_train_step_finite(built, arch):
         2.0 * np.log(cfg.vocab_size)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_grads_nonzero_finite(built, arch):
     cfg, m, params = built(arch)
@@ -51,6 +52,7 @@ def test_grads_nonzero_finite(built, arch):
     assert np.isfinite(total) and total > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_consistency(built, arch):
     """Greedy decode after prefill == teacher-forced next-token argmax."""

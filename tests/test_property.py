@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not vendored; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.candidates import (SPACES, Candidate, baseline_time,

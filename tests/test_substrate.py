@@ -125,6 +125,7 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
 # Trainer
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_trainer_learns_and_restores(small_model, tmp_path):
     cfg, model = small_model
     tc = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40,
@@ -140,6 +141,7 @@ def test_trainer_learns_and_restores(small_model, tmp_path):
     assert m["loss"] < losses[0]
 
 
+@pytest.mark.slow
 def test_trainer_grad_compression_still_learns(small_model):
     cfg, model = small_model
     tc = TrainConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40,
@@ -150,6 +152,7 @@ def test_trainer_grad_compression_still_learns(small_model):
     assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(small_model):
     """ga=2 over 2x batch == single step over the same concatenated batch."""
     cfg, model = small_model

@@ -1,0 +1,40 @@
+"""Paper §6.2 — cross-platform transfer uplift.
+
+Rows: transfer/<from>-><to>/L<level>/<leg>/p<threshold>, value = fast_p;
+us_per_call carries the mean best model time of the leg for the level.
+One `uplift` row per level gives warm-minus-cold fast_1.
+
+Runs on the transfer sweep harness: one campaign on the source platform,
+cold+warm campaigns on the target, one shared verification cache (platform
+is part of the content address, so the three legs never collide).
+"""
+from __future__ import annotations
+
+from benchmarks.common import CAMPAIGN_WORKERS, Row
+from repro.campaign import VerificationCache, run_transfer_sweep
+from repro.core import LoopConfig, kernelbench
+
+PAIRS = (("tpu_v5e", "gpu_sim"), ("tpu_v5e", "tpu_v4"))
+THRESHOLDS = (0.0, 1.0, 1.5)
+
+
+def run(small: bool = True):
+    rows: list[Row] = []
+    cache = VerificationCache()
+    wls = kernelbench.suite(small=small)
+    for src, dst in PAIRS:
+        sweep = run_transfer_sweep(
+            wls, from_platform=src, to_platform=dst,
+            loop=LoopConfig(num_iterations=5, use_profiling=True),
+            cache=cache, max_workers=CAMPAIGN_WORKERS)
+        rep = sweep.report(thresholds=THRESHOLDS)
+        for level, stats in sorted(rep["levels"].items()):
+            for leg in ("cold", "warm"):
+                for p, v in stats[leg].items():
+                    rows.append((f"transfer/{src}->{dst}/L{level}/{leg}/p{p}",
+                                 0.0, f"{v:.3f}"))
+            rows.append((f"transfer/{src}->{dst}/L{level}/uplift", 0.0,
+                         f"{stats['uplift_fast1']:+.3f}"))
+        rows.append((f"transfer/{src}->{dst}/total/uplift", 0.0,
+                     f"{rep['total']['uplift_fast1']:+.3f}"))
+    return rows

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_fastp_levels       Fig. 2  (iterative refinement fast_p per level)
   bench_correctness        Table 4 (single-shot correctness ± reference)
   bench_profiling_impact   Fig. 3 / Table 5 (analysis-agent impact)
+  bench_transfer           §6.2 (cross-platform transfer uplift)
   bench_batch_sizes        Table 6 / §7.1 (batch-size generalization)
   bench_roofline           assignment §Roofline (reads experiments/dryrun)
   bench_kernels_wall       measured CPU wall-clock of reference ops
@@ -25,13 +26,15 @@ import time
 
 from benchmarks import (bench_batch_sizes, bench_correctness,
                         bench_fastp_levels, bench_kernels_wall,
-                        bench_profiling_impact, bench_roofline)
+                        bench_profiling_impact, bench_roofline,
+                        bench_transfer)
 from benchmarks.common import emit
 
 MODULES = {
     "fastp_levels": bench_fastp_levels,
     "correctness": bench_correctness,
     "profiling_impact": bench_profiling_impact,
+    "transfer": bench_transfer,
     "batch_sizes": bench_batch_sizes,
     "roofline": bench_roofline,
     "kernels_wall": bench_kernels_wall,

@@ -6,7 +6,9 @@ verification in a content-addressed cache, journals every iteration to a
 JSONL event log, and can resume an interrupted run from that log. See
 ``python -m repro.campaign --help`` for the CLI.
 """
-from repro.campaign.cache import VerificationCache  # noqa: F401
+from repro.campaign.cache import (  # noqa: F401
+    PersistentVerificationCache, VerificationCache,
+)
 from repro.campaign.events import (  # noqa: F401
     EventLog, completed_workloads, iteration_event, result_from_dict,
     result_to_dict, warm_cache,
@@ -19,3 +21,7 @@ from repro.campaign.runner import (  # noqa: F401
     Campaign, CampaignConfig, CampaignResult, WorkloadRun, run_campaign,
 )
 from repro.campaign.scheduler import JobResult, Scheduler  # noqa: F401
+from repro.campaign.transfer import (  # noqa: F401
+    TransferSweepResult, harvest_hints, reference_sources,
+    run_transfer_sweep,
+)

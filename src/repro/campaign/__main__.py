@@ -5,8 +5,12 @@ Examples::
 
   python -m repro.campaign --suite small
   python -m repro.campaign --suite small --level 2 --workers 8 --iters 5
+  python -m repro.campaign --suite small --platform gpu_sim
+  python -m repro.campaign --suite small --platform gpu_sim \
+      --transfer-from tpu_v5e                 # §6.2 transfer sweep
   python -m repro.campaign --log runs/c1.jsonl           # resumable
   python -m repro.campaign --log runs/c1.jsonl --report-only
+  python -m repro.campaign --cache-path runs/verify.jsonl  # cross-process
 """
 from __future__ import annotations
 
@@ -14,12 +18,15 @@ import argparse
 import sys
 from typing import List, Optional
 
+from repro.campaign.cache import VerificationCache
 from repro.campaign.events import EventLog
 from repro.campaign.report import (distinct_loop_configs, format_report,
                                    report_from_events)
 from repro.campaign.runner import Campaign, CampaignConfig
+from repro.campaign.transfer import run_transfer_sweep
 from repro.core import kernelbench
 from repro.core.refinement import LoopConfig
+from repro.platforms import DEFAULT_PLATFORM, available_platforms
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -39,6 +46,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--profiling", action="store_true",
                     help="enable the performance-analysis agent (§5.2)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--platform", choices=available_platforms(),
+                    default=DEFAULT_PLATFORM,
+                    help="hardware target to synthesize for "
+                         f"(default: {DEFAULT_PLATFORM})")
+    ap.add_argument("--transfer-from", choices=available_platforms(),
+                    default=None, metavar="PLATFORM",
+                    help="run the §6.2 transfer sweep: campaign on this "
+                         "source platform first, then --platform cold and "
+                         "with the harvested references")
+    ap.add_argument("--cache-path", default=None,
+                    help="persistent JSONL verification cache shared "
+                         "across processes (and across both sweep legs)")
     ap.add_argument("--workers", type=int, default=4,
                     help="worker threads (default: 4)")
     ap.add_argument("--timeout", type=float, default=None,
@@ -79,15 +98,34 @@ def main(argv: Optional[List[str]] = None) -> int:
     loop = LoopConfig(num_iterations=args.iters,
                       single_shot=args.single_shot,
                       use_reference=args.reference,
-                      use_profiling=args.profiling, seed=args.seed)
+                      use_profiling=args.profiling, seed=args.seed,
+                      platform=args.platform)
+    cache = (VerificationCache.open(args.cache_path)
+             if args.cache_path else VerificationCache())
+
+    if args.transfer_from:
+        sweep = run_transfer_sweep(
+            workloads, from_platform=args.transfer_from,
+            to_platform=args.platform, loop=loop, cache=cache,
+            max_workers=args.workers, timeout_s=args.timeout,
+            log_path=log_path, resume=not args.no_resume)
+        stats = cache.stats()
+        print(f"transfer sweep: {len(workloads)} workloads x 3 legs "
+              f"-> {log_path}")
+        print(f"verification cache: {stats['hits']} hits / "
+              f"{stats['misses']} misses ({stats['entries']} entries)")
+        print()
+        print(sweep.report_text())
+        return 0
+
     cfg = CampaignConfig(loop=loop, max_workers=args.workers,
                          timeout_s=args.timeout, log_path=log_path,
                          resume=not args.no_resume)
-    campaign = Campaign(workloads, cfg)
+    campaign = Campaign(workloads, cfg, cache=cache)
     result = campaign.run()
 
     done = sum(1 for r in result.runs if r.error is None and not r.skipped)
-    print(f"campaign: {len(result.runs)} workloads "
+    print(f"campaign[{args.platform}]: {len(result.runs)} workloads "
           f"({result.n_skipped} resumed, {result.n_failed} failed, "
           f"{done} ran ok) -> {result.log_path}")
     stats = result.cache.stats()

@@ -2,18 +2,27 @@
 
 Keys are produced by :func:`repro.core.verification.cache_key` — a sha256
 over (op, sorted candidate params, kernel input shapes/dtypes, tolerance,
-seed) — so equal keys imply byte-identical verification work. The cache is
-shared by every worker of a campaign (and, in the benchmark harness, across
-configs and levels), so a candidate the search revisits is verified exactly
-once per input seed.
+seed, platform) — so equal keys imply byte-identical verification work on
+the same hardware target. The cache is shared by every worker of a
+campaign (and, in the benchmark harness, across configs, levels, and both
+legs of a cross-platform transfer sweep), so a candidate the search
+revisits is verified exactly once per input seed per platform.
+
+``VerificationCache.open(path)`` returns the persistent variant: every
+entry is also appended to a JSONL file, and re-opening the same path
+pre-loads all previously verified results — the cache survives across
+processes (ROADMAP item).
 
 Thread-safe; hit/miss counters are the campaign's cache-effectiveness
 telemetry and what the resume/acceptance tests assert on.
 """
 from __future__ import annotations
 
+import json
 import threading
-from typing import Dict, Optional
+from pathlib import Path
+from typing import Dict, Optional, Union
+
 
 from repro.core.states import EvalResult
 
@@ -26,6 +35,12 @@ class VerificationCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+
+    @classmethod
+    def open(cls, path: Union[str, Path]) -> "PersistentVerificationCache":
+        """A cache backed by a JSONL file at ``path`` (created if missing);
+        entries survive across processes."""
+        return PersistentVerificationCache(path)
 
     def get(self, key: str) -> Optional[EvalResult]:
         with self._lock:
@@ -58,3 +73,55 @@ class VerificationCache:
         with self._lock:
             return {"entries": len(self._store), "hits": self.hits,
                     "misses": self.misses}
+
+
+class PersistentVerificationCache(VerificationCache):
+    """On-disk (JSONL, append-only) verification cache.
+
+    One ``{"key": ..., "result": ...}`` object per line; later lines win on
+    load, so a measure_wall-upgraded entry replaces its wall-less
+    predecessor. A torn final line from a killed process is skipped.
+    Construct via :meth:`VerificationCache.open`.
+    """
+
+    def __init__(self, path: Union[str, Path]) -> None:
+        super().__init__()
+        # serialization helpers live in events.py (events does not import us)
+        from repro.campaign import events as _ev
+        self._to_dict = _ev.result_to_dict
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._io_lock = threading.Lock()
+        if self.path.exists():
+            with self.path.open() as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                        self._store[rec["key"]] = _ev.result_from_dict(
+                            rec["result"])
+                    except (json.JSONDecodeError, KeyError):
+                        continue  # torn tail write from a killed run
+
+    def _append(self, key: str, result: EvalResult) -> None:
+        line = json.dumps({"key": key, "result": self._to_dict(result)},
+                          sort_keys=True, default=str)
+        with self._io_lock:
+            with self.path.open("a") as fh:
+                fh.write(line + "\n")
+
+    def put(self, key: str, result: EvalResult) -> None:
+        with self._lock:
+            prev = self._store.get(key)
+            self._store[key] = result
+        if prev is not result:
+            self._append(key, result)
+
+    def warm(self, key: str, result: EvalResult) -> None:
+        with self._lock:
+            if key in self._store:
+                return
+            self._store[key] = result
+        self._append(key, result)

@@ -3,13 +3,17 @@ resumable (paper §3.3: "we save detailed logs for each workload").
 
 One JSON object per line. Event kinds:
 
-  campaign_start   {suite, n_workloads, loop: {...}}
+  campaign_start   {suite, n_workloads, platform, loop: {...}}
   iteration        one per refinement iteration, mirroring ``IterationLog``
                    (workload, iteration, phase, candidate, state, timing,
-                   cache_key, recommendation)
+                   cache_key, recommendation, platform)
   workload_done    terminal per-workload record with the serialized final
                    EvalResult — resume skips these workloads
   workload_error   scheduler-isolated failure (exception or timeout)
+
+Every event carries the hardware platform it ran against (also embedded in
+``loop``), so one log can interleave multi-platform runs — e.g. both legs
+of a transfer sweep — and still aggregate per-config reports.
 
 On restart the runner replays the log: ``workload_done``/``workload_error``
 names are skipped, and every ``iteration`` event carrying a cache key
@@ -53,12 +57,13 @@ def result_from_dict(d: Dict[str, Any]) -> EvalResult:
     )
 
 
-def iteration_event(workload: str, level: int, log: IterationLog
-                    ) -> Dict[str, Any]:
+def iteration_event(workload: str, level: int, log: IterationLog,
+                    platform: Optional[str] = None) -> Dict[str, Any]:
     return {
         "event": "iteration",
         "workload": workload,
         "level": level,
+        "platform": platform,
         "iteration": log.iteration,
         "phase": log.phase,
         "candidate": log.candidate_desc,
@@ -104,12 +109,24 @@ class EventLog:
         return out
 
 
-def completed_workloads(events: Iterable[Dict[str, Any]]) -> Dict[str, Dict]:
-    """name -> terminal event, for every workload the log already finished."""
+def completed_workloads(events: Iterable[Dict[str, Any]],
+                        loop: Optional[Dict[str, Any]] = None
+                        ) -> Dict[str, Dict]:
+    """name -> latest terminal event, for every workload the log finished.
+
+    ``loop`` (optional) restricts terminal events to that loop config. A
+    log may interleave runs of several configs — e.g. the transfer sweep's
+    three legs in one file — and the *latest* event for a name can belong
+    to a different leg; without the filter an earlier leg's finished work
+    would be shadowed and needlessly re-run on resume.
+    """
     done: Dict[str, Dict] = {}
     for ev in events:
-        if ev.get("event") in ("workload_done", "workload_error"):
-            done[ev["workload"]] = ev
+        if ev.get("event") not in ("workload_done", "workload_error"):
+            continue
+        if loop is not None and ev.get("loop") != loop:
+            continue
+        done[ev["workload"]] = ev
     return done
 
 

@@ -105,8 +105,11 @@ class Campaign:
         self.workloads = list(workloads)
         self.cfg = cfg
         self.cache = cache if cache is not None else VerificationCache()
-        self.agent_factory = agent_factory or TemplateSearchBackend
-        self.analyzer_factory = analyzer_factory or RuleBasedAnalyzer
+        plat = cfg.loop.platform
+        self.agent_factory = agent_factory or (
+            lambda: TemplateSearchBackend(platform=plat))
+        self.analyzer_factory = analyzer_factory or (
+            lambda: RuleBasedAnalyzer(platform=plat))
         self.log = EventLog(cfg.log_path) if cfg.log_path else None
 
     # -- resume ------------------------------------------------------------
@@ -115,11 +118,12 @@ class Campaign:
         """Replay the log: returns terminal events by workload name and
         pre-warms the verification cache from logged iterations.
 
-        Each terminal event carries the loop config it ran under and is only
-        honoured when that matches the current one (checked per event in
-        ``run`` — a log may interleave runs of several configs). The cache
-        is warmed unconditionally: its keys are config-independent
-        (candidate + workload io + seed).
+        Terminal events are filtered to this campaign's loop config up
+        front (a log may interleave runs of several configs — e.g. the
+        three legs of a transfer sweep — and the latest event for a name
+        may belong to another leg) and re-checked per event in ``run``.
+        The cache is warmed unconditionally: its keys are config-independent
+        (candidate + workload io + platform + seed).
         """
         if self.log is None or not self.cfg.resume:
             return {}
@@ -127,7 +131,8 @@ class Campaign:
         if not events:
             return {}
         ev_mod.warm_cache(self.cache, events)
-        return ev_mod.completed_workloads(events)
+        return ev_mod.completed_workloads(
+            events, loop=dataclasses.asdict(self.cfg.loop))
 
     # -- one workload ------------------------------------------------------
 
@@ -138,7 +143,8 @@ class Campaign:
             # killed mid-workload keeps the verifications it already paid
             # for (resume pre-warms the cache from these events).
             def on_iteration(it):
-                self.log.append(ev_mod.iteration_event(wl.name, wl.level, it))
+                self.log.append(ev_mod.iteration_event(
+                    wl.name, wl.level, it, platform=self.cfg.loop.platform))
         return run_workload(
             wl, self.cfg.loop, agent=self.agent_factory(),
             analyzer=self.analyzer_factory(), cache=self.cache,
@@ -176,6 +182,7 @@ class Campaign:
             self.log.append({
                 "event": "campaign_start", "label": self.cfg.label,
                 "n_workloads": len(self.workloads), "n_skipped": len(runs),
+                "platform": self.cfg.loop.platform,
                 "loop": dataclasses.asdict(self.cfg.loop),
             })
 
@@ -193,6 +200,7 @@ class Campaign:
                         "level": wl.level, "duration_s": job.duration_s,
                         "iterations": len(outcome.logs),
                         "io": verif_mod.io_signature(wl),
+                        "platform": self.cfg.loop.platform,
                         "loop": dataclasses.asdict(self.cfg.loop),
                         "final": ev_mod.result_to_dict(final),
                     })
@@ -205,6 +213,7 @@ class Campaign:
                         "event": "workload_error", "workload": job.name,
                         "level": wl.level, "error": job.error,
                         "duration_s": job.duration_s,
+                        "platform": self.cfg.loop.platform,
                         "loop": dataclasses.asdict(self.cfg.loop),
                     })
 

@@ -1,0 +1,194 @@
+"""Cross-platform transfer sweep (paper §6.2).
+
+The paper's §6.2 experiment: a correct kernel from platform A, injected as
+a reference, improves synthesis on platform B. The campaign-level version:
+
+  1. run a full campaign on the *source* platform;
+  2. harvest each workload's best verified candidate and reduce it to its
+     platform-portable strategy hints (``core.transfer.strategy_hints`` —
+     online-softmax, fusion, recurrence form; tiling stays behind);
+  3. run the *target* platform twice — cold (no reference) and warm (the
+     harvested hints injected through the agent's reference path) — and
+     report the per-level fast_p uplift.
+
+All three campaigns share one verification cache (platform is part of the
+content address, so legs never collide) and journal into one JSONL event
+log, platform-tagged, so ``--report-only`` can still split them by config.
+
+CLI: ``python -m repro.campaign --platform gpu_sim --transfer-from tpu_v5e``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.campaign.cache import VerificationCache
+from repro.campaign.runner import CampaignResult, run_campaign
+from repro.core import transfer as core_transfer
+from repro.core.metrics import fast_p
+from repro.core.refinement import LoopConfig
+from repro.core.states import EvalResult
+from repro.core.synthesis import TemplateSearchBackend
+from repro.core.workload import Workload
+from repro.platforms import resolve_platform
+
+TRANSFER_THRESHOLDS = (0.0, 1.0, 1.5)
+
+
+def harvest_hints(result: CampaignResult) -> Dict[str, Dict[str, Any]]:
+    """Workload name -> portable strategy hints of the best verified
+    candidate of a finished campaign (skipped/resumed workloads fall back
+    to the params recorded in their journaled profile)."""
+    hints: Dict[str, Dict[str, Any]] = {}
+    for run in result.runs:
+        params = None
+        if run.outcome is not None and run.outcome.best_candidate is not None:
+            params = run.outcome.best_candidate.params
+        elif run.final is not None and run.final.correct and run.final.profile:
+            params = run.final.profile.get("params")
+        if params:
+            hints[run.workload] = core_transfer.strategy_hints(params)
+    return hints
+
+
+def reference_sources(result: CampaignResult, from_platform: str
+                      ) -> Dict[str, Tuple[str, str]]:
+    """Workload name -> (source platform, rendered reference text) for LLM
+    backends (``LLMBackend.reference_sources``); the offline template
+    backend consumes :func:`harvest_hints` instead."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for run in result.runs:
+        profile = run.final.profile if run.final is not None else None
+        if run.outcome is not None and run.outcome.best_candidate is not None:
+            op = run.outcome.best_candidate.op
+            params = run.outcome.best_candidate.params
+        elif run.final is not None and run.final.correct and profile:
+            op, params = profile.get("op"), profile.get("params")
+        else:
+            continue
+        if not op or params is None:
+            continue
+        out[run.workload] = (from_platform,
+                             core_transfer.candidate_reference_source(
+                                 op, params, from_platform))
+    return out
+
+
+@dataclasses.dataclass
+class TransferSweepResult:
+    from_platform: str
+    to_platform: str
+    source: CampaignResult
+    cold: CampaignResult
+    warm: CampaignResult
+    hints: Dict[str, Dict[str, Any]]
+    # workload -> (source platform, rendered reference text): ready to pass
+    # as LLMBackend(reference_sources=...) for a production warm leg
+    references: Dict[str, Tuple[str, str]] = \
+        dataclasses.field(default_factory=dict)
+    log_path: Optional[Path] = None
+
+    def _by_level(self, result: CampaignResult) -> Dict[int, List[EvalResult]]:
+        by: Dict[int, List[EvalResult]] = {}
+        for run, final in zip(result.runs, result.finals()):
+            by.setdefault(run.level, []).append(final)
+        return by
+
+    def report(self, thresholds=TRANSFER_THRESHOLDS) -> Dict[str, Any]:
+        cold_lv, warm_lv = self._by_level(self.cold), self._by_level(self.warm)
+        levels: Dict[int, Dict[str, Any]] = {}
+        for level in sorted(set(cold_lv) | set(warm_lv)):
+            c, w = cold_lv.get(level, []), warm_lv.get(level, [])
+            levels[level] = {
+                "n": max(len(c), len(w)),
+                "cold": {f"{p:g}": fast_p(c, p) for p in thresholds},
+                "warm": {f"{p:g}": fast_p(w, p) for p in thresholds},
+                "uplift_fast1": fast_p(w, 1.0) - fast_p(c, 1.0),
+            }
+        cold_all = [r for rs in cold_lv.values() for r in rs]
+        warm_all = [r for rs in warm_lv.values() for r in rs]
+        return {
+            "from": self.from_platform,
+            "to": self.to_platform,
+            "n_references": len(self.hints),
+            "levels": levels,
+            "total": {
+                "n": max(len(cold_all), len(warm_all)),
+                "cold": {f"{p:g}": fast_p(cold_all, p) for p in thresholds},
+                "warm": {f"{p:g}": fast_p(warm_all, p) for p in thresholds},
+                "uplift_fast1": (fast_p(warm_all, 1.0)
+                                 - fast_p(cold_all, 1.0)),
+            },
+        }
+
+    def report_text(self) -> str:
+        rep = self.report()
+        lines = [
+            f"transfer sweep: {rep['from']} -> {rep['to']} "
+            f"({rep['n_references']} harvested references)",
+            "=" * 60,
+        ]
+        for level, stats in sorted(rep["levels"].items()):
+            lines.append(f"level {level}  (n={stats['n']})")
+            for leg in ("cold", "warm"):
+                fp = "  ".join(f"fast_{p}={v:.3f}"
+                               for p, v in stats[leg].items())
+                lines.append(f"  {leg:4s}: {fp}")
+            lines.append(f"  fast_1 uplift: {stats['uplift_fast1']:+.3f}")
+        tot = rep["total"]
+        lines.append(f"total  (n={tot['n']})")
+        for leg in ("cold", "warm"):
+            fp = "  ".join(f"fast_{p}={v:.3f}" for p, v in tot[leg].items())
+            lines.append(f"  {leg:4s}: {fp}")
+        lines.append(f"  fast_1 uplift: {tot['uplift_fast1']:+.3f}")
+        return "\n".join(lines)
+
+
+def run_transfer_sweep(workloads: Sequence[Workload], *,
+                       from_platform, to_platform,
+                       loop: Optional[LoopConfig] = None,
+                       cache: Optional[VerificationCache] = None,
+                       max_workers: int = 4,
+                       timeout_s: Optional[float] = None,
+                       log_path: Optional[Union[str, Path]] = None,
+                       resume: bool = True) -> TransferSweepResult:
+    """Run the §6.2 transfer experiment between two registered platforms.
+
+    ``loop`` is the base configuration (iterations, profiling, seed); its
+    ``platform``/``use_reference`` fields are overridden per leg. One cache
+    and one event log serve all three campaigns; resuming an interrupted
+    sweep skips whatever legs already finished.
+    """
+    src = resolve_platform(from_platform)
+    dst = resolve_platform(to_platform)
+    base = loop or LoopConfig()
+    cache = cache if cache is not None else VerificationCache()
+    common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
+                  log_path=log_path, resume=resume)
+
+    # Leg 1: source-platform campaign (the reference-producing run).
+    source = run_campaign(
+        workloads, dataclasses.replace(base, platform=src.name), **common)
+    hints = harvest_hints(source)
+    references = reference_sources(source, src.name)
+
+    # Leg 2: cold target run — no reference of any kind.
+    cold = run_campaign(
+        workloads,
+        dataclasses.replace(base, platform=dst.name, use_reference=False),
+        **common)
+
+    # Leg 3: warm target run — harvested hints injected through the
+    # agent's reference path (REFERENCE_HINTS extended per workload).
+    warm = run_campaign(
+        workloads,
+        dataclasses.replace(base, platform=dst.name, use_reference=True),
+        agent_factory=lambda: TemplateSearchBackend(
+            platform=dst, reference_hints=hints),
+        **common)
+
+    return TransferSweepResult(
+        from_platform=src.name, to_platform=dst.name, source=source,
+        cold=cold, warm=warm, hints=hints, references=references,
+        log_path=Path(log_path) if log_path else None)

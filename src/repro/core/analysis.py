@@ -18,8 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional
 
-from repro.core.candidates import MXU, SPACES, Candidate
-from repro.roofline.analysis import HW_V5E
+from repro.core.candidates import SPACES, Candidate, space_for
+from repro.platforms import PlatformLike, resolve_platform
 
 
 @dataclasses.dataclass
@@ -38,7 +38,18 @@ class Recommendation:
 
 
 class RuleBasedAnalyzer:
-    """Deterministic analysis over the candidate's profile."""
+    """Deterministic analysis over the candidate's profile.
+
+    All thresholds derive from the platform profile: the matrix-unit
+    alignment rule fires against ``platform.matrix_align`` (128 on the TPU
+    MXU, 16 on a tensor-core-class GPU), the compute roofline against
+    ``platform.peak_flops``, and candidate spaces are the platform-legal
+    ones — so the same profile dict yields genuinely different
+    recommendations on different targets.
+    """
+
+    def __init__(self, platform: PlatformLike = None):
+        self.platform = resolve_platform(platform)
 
     def analyze(self, profile: Dict[str, Any]) -> Recommendation:
         op = profile["op"]
@@ -46,22 +57,28 @@ class RuleBasedAnalyzer:
         shapes = profile["shapes"]
         model_t = profile["model_time_s"]
         flops = profile.get("flops", 0.0)
-        compute_t = flops / HW_V5E["peak_flops"]
-        space = SPACES.get(op, {})
+        plat = self.platform
+        align = plat.matrix_align
+        compute_t = flops / plat.peak_flops
+        space = space_for(op, plat) if op in SPACES else {}
 
-        # Rule 1: compute far from roofline because tiles are MXU-misaligned.
+        # Rule 1: compute far from roofline because matrix tiles are
+        # misaligned for this platform's matrix-unit width.
         for key in ("block_m", "block_n", "block_q"):
-            if key in params and params[key] < MXU and key in space \
-                    and MXU in space[key]:
-                return Recommendation(
-                    text=(f"{key}={params[key]} underfills the 128x128 MXU "
-                          f"systolic array; raise it to {MXU} so every pass "
-                          "issues full-width matmuls."),
-                    param=key, value=MXU)
+            if key in params and key in space:
+                target = plat.align_target(space[key], params[key])
+                if target is not None:
+                    return Recommendation(
+                        text=(f"{key}={params[key]} underfills the "
+                              f"{align}x{align} matrix unit on {plat.name}; "
+                              f"raise it to {target} so every pass issues "
+                              "full-width matmuls."),
+                        param=key, value=target)
 
         # Rule 2: memory-bound with tiny row tiles -> per-tile overheads and
-        # poor HBM streaming; grow the sublane dimension (TPU analogue of
-        # the paper's 8-elements-per-thread Metal optimization, §7.2).
+        # poor HBM streaming; grow the sublane/thread-coarsening dimension
+        # (the analogue of the paper's 8-elements-per-thread Metal
+        # optimization, §7.2).
         if compute_t < 0.5 * model_t:
             for key in ("block_rows", "block_t", "block_lanes", "block_cols",
                         "block_v"):
@@ -76,14 +93,20 @@ class RuleBasedAnalyzer:
                             param=key, value=min(bigger))
 
         # Rule 3: matmul K-tile too large relative to M/N starves the
-        # accumulation pipeline; prefer squarer VMEM tiles.
-        if op == "matmul" and params.get("block_k", 0) > \
-                2 * max(params.get("block_m", 0), params.get("block_n", 0)):
-            return Recommendation(
-                text=("block_k dominates the VMEM working set; rebalance "
-                      "toward square tiles (block_k=128) to double-buffer "
-                      "more output tiles."),
-                param="block_k", value=128)
+        # accumulation pipeline; prefer squarer fast-memory tiles. The
+        # target is the legal choice nearest the output-tile width, not a
+        # hardcoded constant — it must exist on every platform's space.
+        mn = max(params.get("block_m", 0), params.get("block_n", 0))
+        if op == "matmul" and "block_k" in space \
+                and params.get("block_k", 0) > 2 * mn:
+            target = min(space["block_k"], key=lambda c: abs(c - mn))
+            if target < params["block_k"]:
+                return Recommendation(
+                    text=(f"block_k dominates the fast-memory working set; "
+                          f"rebalance toward square tiles "
+                          f"(block_k={target}) to double-buffer more "
+                          "output tiles."),
+                    param="block_k", value=target)
 
         # Rule 4: attention kv tile growth reduces K/V re-streaming.
         if op == "attention" and "block_k" in params:

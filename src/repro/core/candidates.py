@@ -9,9 +9,11 @@ degrees of freedom a kernel engineer (or the paper's LLM) controls:
   * fused vs staged elementwise epilogues.
 
 ``materialize`` turns a candidate into a callable (Pallas interpret-mode on
-CPU / real kernel on TPU); ``model_time`` is the analytic TPU roofline
-estimate used as the performance signal (wall-clock of interpret mode
-measures the interpreter, not the kernel — DESIGN.md §7.2).
+CPU / real kernel on TPU); ``model_time`` is the analytic roofline estimate
+used as the performance signal (wall-clock of interpret mode measures the
+interpreter, not the kernel — DESIGN.md §7.2). Every performance/legality
+judgement is parameterized by a :class:`repro.platforms.Platform` — the
+hardware target is an explicit axis, not a module constant (DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -27,8 +29,10 @@ from repro.kernels import ops, ref
 from repro.kernels import (flash_attention as _fa, matmul as _mm,
                            rmsnorm as _rn, softmax as _sm, swiglu as _sg,
                            swish as _sw, xent as _xe)
-from repro.roofline.analysis import HW_V5E
+from repro.platforms import PlatformLike, resolve_platform
 
+# Historical name for the default target's matrix-unit width; prefer
+# ``resolve_platform(...).matrix_align`` in new code.
 MXU = 128
 
 
@@ -79,7 +83,9 @@ NAIVE_DEFAULTS: Dict[str, Dict[str, Any]] = {
 
 # What a correct cross-platform reference implementation teaches the agent:
 # the *strategy* (online softmax, fusion) transfers even though the tiling
-# must be re-derived for the target hardware (paper §6.2).
+# must be re-derived for the target hardware (paper §6.2). Platforms extend
+# these per-target via Platform.reference_hints, and transfer sweeps inject
+# per-workload harvested hints on top (campaign/transfer.py).
 REFERENCE_HINTS: Dict[str, Dict[str, Any]] = {
     "softmax": {"online": True},
     "attention": {"online": True},
@@ -88,24 +94,79 @@ REFERENCE_HINTS: Dict[str, Dict[str, Any]] = {
     "ssd": {"form": "matrix"},
 }
 
+_TILE_KEYS = ("block_", "chunk")
 
-def initial_candidate(op: str, *, use_reference: bool) -> Candidate:
-    params = dict(NAIVE_DEFAULTS[op])
+
+def _is_tile_key(k: str) -> bool:
+    return k.startswith("block_") or k == "chunk"
+
+
+def space_for(op: str, platform: PlatformLike = None) -> Dict[str, Tuple]:
+    """The platform-legal parameter space for one op family.
+
+    Tile dimensions above ``platform.max_tile`` never fit the target's fast
+    memory and are removed; if that would empty an axis the smallest choice
+    is kept so every family stays synthesizable. Strategy axes (online,
+    fused, form) are hardware-independent and pass through.
+    """
+    p = resolve_platform(platform)
+    out: Dict[str, Tuple] = {}
+    for k, choices in SPACES[op].items():
+        if _is_tile_key(k):
+            legal = tuple(c for c in choices if c <= p.max_tile)
+            out[k] = legal or (min(choices),)
+        else:
+            out[k] = choices
+    return out
+
+
+def _snap_to_space(op: str, params: Dict[str, Any],
+                   space: Dict[str, Tuple]) -> Dict[str, Any]:
+    """Clamp tile params to the platform-legal space (largest legal <= v)."""
+    out = dict(params)
+    for k, v in params.items():
+        if not _is_tile_key(k) or k not in space or v in space[k]:
+            continue
+        smaller = [c for c in space[k] if c <= v]
+        out[k] = max(smaller) if smaller else min(space[k])
+    return out
+
+
+def initial_candidate(op: str, *, use_reference: bool,
+                      platform: PlatformLike = None,
+                      hints: Optional[Dict[str, Any]] = None) -> Candidate:
+    """The agent's first proposal for one op family on one platform.
+
+    ``hints`` (optional) are per-workload reference hints — e.g. the
+    strategy params harvested from another platform's best verified
+    candidate in a transfer sweep — applied on top of the global
+    REFERENCE_HINTS and the platform's own reference_hints extension.
+    """
+    plat = resolve_platform(platform)
+    space = space_for(op, plat)
+    params = _snap_to_space(op, dict(NAIVE_DEFAULTS[op]), space)
     if use_reference:
-        params.update(REFERENCE_HINTS.get(op, {}))
-        # reference CUDA kernels in the paper's dataset are MXU/warp-aligned;
-        # transferring them biases tile choices toward alignment.
+        merged = dict(REFERENCE_HINTS.get(op, {}))
+        merged.update(plat.reference_hints.get(op, {}))
+        merged.update(hints or {})
+        params.update(merged)
+        params = _snap_to_space(op, params, space)
+        # reference kernels in the paper's dataset are aligned to the source
+        # platform's matrix unit; transferring them biases tile choices
+        # toward the *target's* alignment (re-derived tiling, same strategy).
         for k in params:
-            if k.startswith("block_") and params[k] < MXU \
-                    and MXU in SPACES[op][k]:
-                params[k] = MXU
+            if k.startswith("block_"):
+                target = plat.align_target(space[k], params[k])
+                if target is not None:
+                    params[k] = target
     return Candidate(op=op, params=params)
 
 
-def mutations(cand: Candidate) -> Dict[str, Candidate]:
-    """All single-parameter mutations of a candidate."""
+def mutations(cand: Candidate,
+              platform: PlatformLike = None) -> Dict[str, Candidate]:
+    """All single-parameter mutations within the platform-legal space."""
     out = {}
-    for k, choices in SPACES[cand.op].items():
+    for k, choices in space_for(cand.op, platform).items():
         cur = cand.params.get(k)
         for c in choices:
             if c != cur:
@@ -232,29 +293,32 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Analytic TPU performance model (the optimization signal)
+# Analytic per-platform performance model (the optimization signal)
 # ---------------------------------------------------------------------------
 
 
-def _mxu_eff(dim: int) -> float:
-    """MXU utilization penalty for tiles not aligned to 128."""
-    return min(1.0, dim / MXU) if dim < MXU else 1.0
-
-
 def model_time(cand: Candidate, shapes: Dict[str, Tuple[int, ...]],
-               hw=HW_V5E) -> float:
-    """Estimated kernel time on TPU v5e: max(compute, HBM traffic) with
-    tiling-dependent re-load factors and MXU alignment penalties."""
+               platform: PlatformLike = None) -> float:
+    """Estimated kernel time on the target platform: max(compute, HBM
+    traffic) with tiling-dependent re-load factors and matrix-unit
+    alignment penalties, all drawn from the platform profile."""
+    plat = resolve_platform(platform)
     p = cand.params
     op = cand.op
+    hw = plat.hw
     bw, peak = hw["hbm_bw"], hw["peak_flops"]
-    vpu_peak = peak / 8  # elementwise ops don't use the MXU
+    align = plat.matrix_align
+    vpu_peak = peak / plat.vpu_ratio  # elementwise ops skip the matrix unit
+
+    def _mxu_eff(dim: int) -> float:
+        # matrix-unit utilization penalty for tiles under the native width
+        return min(1.0, dim / align) if dim < align else 1.0
 
     def elemwise(n_elems, n_streams, rows, lanes):
         bytes_ = n_elems * 4 * n_streams
         # tiny tiles pay per-grid-step overhead (launch + pipeline bubbles)
         steps = n_elems / max(1, rows * lanes)
-        overhead = steps * 2e-8
+        overhead = steps * plat.grid_step_overhead_s
         return max(n_elems / vpu_peak, bytes_ / bw) + overhead
 
     if op == "swish":
@@ -309,21 +373,30 @@ def model_time(cand: Candidate, shapes: Dict[str, Tuple[int, ...]],
         n = shapes["b"][-1]
         if p["form"] == "recurrent":
             # one (P,N) f32 state read+write per token per head, fully
-            # latency/memory-bound; no MXU utilization
+            # latency/memory-bound; no matrix-unit utilization
             state_traffic = bsz * t * h * pdim * n * 4 * 2
-            return state_traffic / bw + t * 5e-7  # sequential-step latency
+            return state_traffic / bw + t * plat.seq_step_latency_s
         c = p["chunk"]
         nc = t // max(c, 1)
         flops = 2 * bsz * nc * h * (c * c * n + c * c * pdim) \
             + 2 * bsz * nc * h * c * pdim * n
         bytes_ = 4 * bsz * t * h * (pdim + 2 * n) \
             + 4 * bsz * nc * c * c * h  # decay-ratio tensor
-        eff = _mxu_eff(min(c, MXU))
-        return max(flops / (peak * eff), bytes_ / bw) + nc * 5e-7
+        eff = _mxu_eff(min(c, align))
+        return max(flops / (peak * eff), bytes_ / bw) \
+            + nc * plat.seq_step_latency_s
     raise KeyError(op)
 
 
-def baseline_time(op: str, shapes: Dict[str, Tuple[int, ...]]) -> float:
+def naive_candidate(op: str, platform: PlatformLike = None) -> Candidate:
+    """The naive/default candidate, snapped to the platform-legal space."""
+    space = space_for(op, platform)
+    return Candidate(op, _snap_to_space(op, dict(NAIVE_DEFAULTS[op]), space))
+
+
+def baseline_time(op: str, shapes: Dict[str, Tuple[int, ...]],
+                  platform: PlatformLike = None) -> float:
     """Roofline time of the naive/default implementation (the 'PyTorch eager'
-    analogue): unfused, non-online, 8-row tiles."""
-    return model_time(Candidate(op, dict(NAIVE_DEFAULTS[op])), shapes)
+    analogue): unfused, non-online, 8-row tiles — on the same platform the
+    candidate is modeled for, so speedups stay platform-internal."""
+    return model_time(naive_candidate(op, platform), shapes, platform)

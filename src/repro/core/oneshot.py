@@ -1,51 +1,7 @@
-"""The single-shot example embedded in every synthesis prompt.
+"""Back-compat shim: the one-shot examples now live with the platform
+registry (:mod:`repro.platforms.examples`) so each hardware target carries
+its own prompt example. Import from there in new code."""
 
-Vector addition, exactly as the paper uses for CUDA (Appendix A) and Metal
-(Appendix B) — here in the target platform's idiom: a Pallas TPU kernel with
-explicit BlockSpec tiling, plus the jit'd scheduling wrapper.
-"""
-
-VECTOR_ADD_PALLAS = '''\
-import functools
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.kernels.ops import tpu_compiler_params
-
-
-def _add_kernel(a_ref, b_ref, out_ref):
-    # one (block_rows, block_lanes) VMEM tile per grid step
-    out_ref[...] = a_ref[...] + b_ref[...]
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "block_lanes"))
-def vector_add(a, b, *, block_rows=8, block_lanes=512):
-    rows, lanes = a.shape
-    spec = pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j))
-    return pl.pallas_call(
-        _add_kernel,
-        grid=(rows // block_rows, lanes // block_lanes),
-        in_specs=[spec, spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel")),
-    )(a, b)
-
-
-def candidate(a, b):
-    return vector_add(a, b)
-'''
-
-# Reference implementation "from the other platform" (paper Appendix A):
-VECTOR_ADD_CUDA = '''\
-__global__ void elementwise_add_kernel(
-    const float *a, const float *b, float *out, int size) {
-  int idx = blockIdx.x * blockDim.x + threadIdx.x;
-  if (idx < size) {
-    out[idx] = a[idx] + b[idx];
-  }
-}
-'''
+from repro.platforms.examples import (  # noqa: F401
+    VECTOR_ADD_CUDA, VECTOR_ADD_PALLAS,
+)

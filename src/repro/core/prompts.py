@@ -11,8 +11,7 @@ You write custom {accelerator} kernels to replace the JAX/XLA operators in
 the given workload to get speedups.
 
 Here's an example to show you the syntax of a custom {accelerator} kernel
-(jax.experimental.pallas, pl.pallas_call with explicit BlockSpec VMEM
-tiling), its scheduling logic and jit integration:
+with explicit tiling, its scheduling logic and launch/jit integration:
 
 {example_src}
 
@@ -22,8 +21,7 @@ jax.numpy — treat it as the correctness oracle):
 {workload_src}
 {reference_block}
 Optimize the workload named {workload_name} with a custom {accelerator}
-kernel. Pay attention to VMEM working-set size (<= 128 MiB), MXU tile
-alignment (128x128), and numerical stability for large-magnitude inputs.
+kernel. {constraints}
 {feedback_block}
 Output the new code in codeblocks. The code must define a function
 `candidate(*inputs)` returning the workload output.
@@ -67,7 +65,9 @@ target value).
 def render_synthesis(accelerator: str, example_src: str, workload_src: str,
                      workload_name: str, *, ref_src: str = "",
                      ref_platform: str = "CUDA", prev_src: str = "",
-                     prev_result: str = "", recommendation: str = "") -> str:
+                     prev_result: str = "", recommendation: str = "",
+                     constraints: str = "") -> str:
+    from repro.platforms import resolve_platform
     ref_block = REFERENCE_BLOCK.format(
         ref_platform=ref_platform, ref_src=ref_src) if ref_src else ""
     fb = FEEDBACK_BLOCK.format(prev_result=prev_result, prev_src=prev_src,
@@ -76,4 +76,6 @@ def render_synthesis(accelerator: str, example_src: str, workload_src: str,
     return SYNTHESIS_TEMPLATE.format(
         accelerator=accelerator, example_src=example_src,
         workload_src=workload_src, workload_name=workload_name,
-        reference_block=ref_block, feedback_block=fb)
+        reference_block=ref_block, feedback_block=fb,
+        # default: the registry default target's note (single source)
+        constraints=constraints or resolve_platform(None).constraints_note)

@@ -20,6 +20,7 @@ from repro.core.states import EvalResult, ExecutionState
 from repro.core.synthesis import Generation, TemplateSearchBackend
 from repro.core.verification import verify
 from repro.core.workload import Workload
+from repro.platforms import resolve_platform
 
 
 @dataclasses.dataclass
@@ -42,16 +43,24 @@ class RefinementOutcome:
 
     @property
     def final(self) -> EvalResult:
-        return self.best if self.best is not None else self.logs[-1].result
+        if self.best is not None:
+            return self.best
+        if not self.logs:
+            # num_iterations=0 (or every iteration short-circuited before
+            # logging): report a generation failure, don't IndexError.
+            return EvalResult(ExecutionState.GENERATION_FAILURE,
+                              error="no refinement iterations ran")
+        return self.logs[-1].result
 
 
 @dataclasses.dataclass
 class LoopConfig:
     num_iterations: int = 5          # paper: num_iterations=5
-    use_reference: bool = False      # CUDA-reference configuration (§6.2)
+    use_reference: bool = False      # reference-transfer configuration (§6.2)
     use_profiling: bool = False      # profiling-information configuration (§5.2)
     single_shot: bool = False        # one generation, no refinement
     seed: int = 0
+    platform: str = "tpu_v5e"        # hardware target (repro.platforms)
 
 
 def run_workload(wl: Workload, cfg: LoopConfig, *,
@@ -67,9 +76,16 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
     as soon as it exists — the campaign runner journals iterations through
     it, so a run killed mid-workload still persists the verifications it
     already paid for.
+
+    ``cfg.platform`` selects the hardware target end-to-end: the default
+    agent searches that platform's legal space, the default analyzer derives
+    its thresholds from its profile, and every verification is scored (and
+    cache-addressed) against it. Explicitly passed agents/analyzers are
+    used as-is — construct them with the same platform.
     """
-    agent = agent or TemplateSearchBackend()
-    analyzer = analyzer or RuleBasedAnalyzer()
+    platform = resolve_platform(cfg.platform)
+    agent = agent or TemplateSearchBackend(platform=platform)
+    analyzer = analyzer or RuleBasedAnalyzer(platform=platform)
     logs: List[IterationLog] = []
 
     def record(entry: IterationLog) -> None:
@@ -107,7 +123,7 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
             break
         result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
                         wl, seed=cfg.seed + i, fn=gen.callable_fn,
-                        cache=cache)
+                        cache=cache, platform=platform)
         if key is not None:
             seen[key] = result
         rec_text = None

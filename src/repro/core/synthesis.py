@@ -19,13 +19,14 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, Optional, Protocol, Tuple
+from typing import Callable, Dict, Optional, Protocol, Tuple
 
 from repro.core import candidates as cand_mod
-from repro.core import oneshot, prompts, transfer
+from repro.core import prompts, transfer
 from repro.core.analysis import Recommendation
 from repro.core.states import EvalResult, ExecutionState
 from repro.core.workload import Workload
+from repro.platforms import PlatformLike, resolve_platform
 
 
 @dataclasses.dataclass
@@ -51,7 +52,20 @@ class GenerationAgent(Protocol):
 
 
 class TemplateSearchBackend:
-    """Deterministic agent over the Pallas candidate space."""
+    """Deterministic agent over the platform-legal candidate space.
+
+    ``platform`` selects the hardware target the search optimizes for
+    (tile legality, alignment bias, performance model). ``reference_hints``
+    — workload name -> {param: value} — injects per-workload transferred
+    strategy hints (harvested from another platform's best verified
+    candidate, campaign/transfer.py) on top of the global REFERENCE_HINTS
+    whenever ``use_reference`` is set.
+    """
+
+    def __init__(self, platform: PlatformLike = None,
+                 reference_hints: Optional[Dict[str, Dict]] = None):
+        self.platform = resolve_platform(platform)
+        self.reference_hints = dict(reference_hints or {})
 
     def generate(self, wl: Workload, *, prev: Optional[Generation] = None,
                  prev_result: Optional[EvalResult] = None,
@@ -60,8 +74,10 @@ class TemplateSearchBackend:
         if wl.op not in cand_mod.SPACES:
             return Generation(failure=f"no template family for op {wl.op!r}")
         if prev is None or prev.candidate is None:
-            cand = cand_mod.initial_candidate(wl.op,
-                                              use_reference=use_reference)
+            cand = cand_mod.initial_candidate(
+                wl.op, use_reference=use_reference, platform=self.platform,
+                hints=self.reference_hints.get(wl.name))
+            cand = self._repair_shapes(cand, wl, "") or cand
             return Generation(candidate=cand, source=cand.describe())
 
         cand = prev.candidate
@@ -91,14 +107,14 @@ class TemplateSearchBackend:
             nxt = self._repair_shapes(nxt, wl, "") or nxt
             if self._legal(nxt, wl) and nxt.params != cand.params:
                 return Generation(candidate=nxt, source=nxt.describe())
-        # fall back: best predicted single mutation
+        # fall back: best predicted single mutation on this platform
         shapes = {k: tuple(v) for k, v in wl.input_shapes.items()}
-        best, best_t = None, cand_mod.model_time(cand, shapes) \
+        best, best_t = None, cand_mod.model_time(cand, shapes, self.platform) \
             if self._legal(cand, wl) else float("inf")
-        for _, mut in cand_mod.mutations(cand).items():
+        for _, mut in cand_mod.mutations(cand, self.platform).items():
             if not self._legal(mut, wl):
                 continue
-            t = cand_mod.model_time(mut, shapes)
+            t = cand_mod.model_time(mut, shapes, self.platform)
             if t < best_t:
                 best, best_t = mut, t
         if best is not None:
@@ -142,7 +158,8 @@ class TemplateSearchBackend:
                 continue
             if check_only:
                 return None
-            choices = [c for c in cand_mod.SPACES[cand.op][k] if dim % c == 0]
+            space = cand_mod.space_for(cand.op, self.platform)
+            choices = [c for c in space[k] if dim % c == 0]
             if not choices:
                 return None
             params[k] = max(choices)
@@ -162,23 +179,44 @@ _CODE_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
 
 
 class LLMBackend:
+    """Prompt-building production backend.
+
+    The platform supplies the prompt descriptor, the one-shot example in
+    the target's idiom, and the working-set/alignment constraints note —
+    retargeting the LLM to a new accelerator is a registry entry, not a
+    prompt fork. ``reference_sources`` (workload name -> (platform name,
+    source text)) overrides the default XLA-oracle reference with e.g. a
+    best-verified kernel harvested from another platform's campaign.
+    """
+
     def __init__(self, complete: Optional[Callable[[str], str]] = None,
-                 accelerator: str = "Pallas TPU"):
+                 accelerator: Optional[str] = None,
+                 platform: PlatformLike = None,
+                 reference_sources: Optional[Dict[str, Tuple[str, str]]]
+                 = None):
         self.complete = complete
-        self.accelerator = accelerator
+        self.platform = resolve_platform(platform)
+        self.accelerator = accelerator or self.platform.descriptor
+        self.reference_sources = dict(reference_sources or {})
 
     def build_prompt(self, wl: Workload, *, prev: Optional[Generation],
                      prev_result: Optional[EvalResult],
                      recommendation: Optional[Recommendation],
                      use_reference: bool) -> str:
-        ref_src = transfer.reference_source(wl) if use_reference else ""
+        ref_src, ref_platform = "", "XLA (jax.numpy)"
+        if use_reference:
+            if wl.name in self.reference_sources:
+                ref_platform, ref_src = self.reference_sources[wl.name]
+            else:
+                ref_src = transfer.reference_source(wl) or ""
         return prompts.render_synthesis(
-            self.accelerator, oneshot.VECTOR_ADD_PALLAS,
+            self.accelerator, self.platform.oneshot_example,
             transfer.workload_source(wl), wl.name,
-            ref_src=ref_src or "", ref_platform="XLA (jax.numpy)",
+            ref_src=ref_src, ref_platform=ref_platform,
             prev_src=(prev.source or "") if prev else "",
             prev_result=prev_result.feedback() if prev_result else "",
-            recommendation=recommendation.text if recommendation else "")
+            recommendation=recommendation.text if recommendation else "",
+            constraints=self.platform.constraints_note)
 
     def generate(self, wl: Workload, *, prev=None, prev_result=None,
                  recommendation=None, use_reference=False) -> Generation:

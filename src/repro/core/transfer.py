@@ -1,15 +1,24 @@
 """Cross-platform reference-implementation registry (paper §6.2).
 
 The paper shows that a correct CUDA kernel substantially improves Metal
-synthesis. The TPU mapping: the "other platform" is XLA — the pure-jnp
-oracle source (plus any known-good Pallas kernel for the same family) is
-injected into the synthesis prompt, and teaches the offline search backend
-the correct *strategy* (online softmax, fusion) via candidates.REFERENCE_HINTS.
+synthesis. Two reference flavours exist here:
+
+* the *oracle* reference — the pure-jnp source for the op family
+  (:func:`reference_source`), the "other platform" being XLA;
+* a *harvested* reference — the best verified candidate from a campaign on
+  another registered platform (:func:`strategy_hints`,
+  :func:`candidate_reference_source`), which is what the transfer sweep in
+  :mod:`repro.campaign.transfer` injects.
+
+Either way the transferable part is the *strategy* (online softmax, fusion,
+matrix form); the tiling must be re-derived for the target platform —
+``candidates.initial_candidate`` re-aligns tile params to the target's
+matrix unit when a reference is injected.
 """
 from __future__ import annotations
 
 import inspect
-from typing import Optional
+from typing import Any, Dict, Optional
 
 from repro.core.workload import Workload
 from repro.kernels import ref as ref_mod
@@ -26,7 +35,7 @@ _REF_SOURCES = {
 
 
 def reference_source(wl: Workload) -> Optional[str]:
-    """Source text of the reference implementation for the prompt."""
+    """Source text of the XLA-oracle reference implementation."""
     name = _REF_SOURCES.get(wl.op)
     if name is None:
         return None
@@ -44,3 +53,29 @@ def workload_source(wl: Workload) -> str:
         return inspect.getsource(wl.ref_fn)
     except (OSError, TypeError):
         return f"# {wl.name}: {wl.description}\n# oracle: kernels/ref.py::{wl.op}"
+
+
+def strategy_hints(params: Dict[str, Any]) -> Dict[str, Any]:
+    """The platform-portable subset of a candidate's params.
+
+    Strategy axes (online-softmax, fusion, recurrence form, ...) transfer
+    across accelerators; tile/chunk sizes do not — they are re-derived for
+    the target's alignment and fast-memory budget (paper §6.2)."""
+    return {k: v for k, v in params.items()
+            if not (k.startswith("block_") or k == "chunk")}
+
+
+def candidate_reference_source(op: str, params: Dict[str, Any],
+                               platform_name: str) -> str:
+    """Render a harvested best-verified candidate as prompt reference text.
+
+    The template backend consumes the structured hints directly; for LLM
+    backends this block plays the role of the paper's correct-CUDA-kernel
+    reference (LLMBackend.reference_sources)."""
+    kv = "\n".join(f"#   {k} = {v!r}" for k, v in sorted(params.items()))
+    portable = strategy_hints(params)
+    strat = ", ".join(f"{k}={v!r}" for k, v in sorted(portable.items())) \
+        or "(tiling only)"
+    return (f"# Best verified {op} kernel from platform {platform_name!r}\n"
+            f"# (campaign-harvested; tiling is platform-specific, the\n"
+            f"#  strategy transfers): {strat}\n{kv}\n")

@@ -9,12 +9,19 @@ of surviving evaluation.
 ``get(key) -> Optional[EvalResult]`` / ``put(key, result)``, e.g.
 :class:`repro.campaign.VerificationCache`): declarative candidates are
 content-addressed by :func:`cache_key` so a repeated (candidate, workload,
-seed) triple across iterations, configs, or whole campaigns is never
-re-verified.
+platform, seed) tuple across iterations, configs, or whole campaigns is
+never re-verified. The platform is part of the content address — results
+modeled for different hardware targets must not collide.
+
+When no ``seed`` is passed, verify draws one from a deterministic per-call
+counter (NOT wall-clock entropy): the Nth seedless call of a process always
+sees the same inputs, so runs are reproducible and the cache stays
+effective. Callers wanting fresh entropy must pass their own seed.
 """
 from __future__ import annotations
 
 import hashlib
+import itertools
 import json
 import time
 from typing import Callable, Optional
@@ -26,9 +33,13 @@ from repro.core import candidates as cand_mod
 from repro.core import kernelbench as kb
 from repro.core.states import EvalResult, ExecutionState
 from repro.core.workload import Workload
+from repro.platforms import PlatformLike, resolve_platform
 
 _TRACE_ERRORS = (TypeError, ValueError, AssertionError, KeyError,
                  IndexError, NotImplementedError)
+
+# Deterministic fallback seed source for seedless verify() calls.
+_FRESH_SEEDS = itertools.count(1)
 
 
 def io_signature(wl: Workload):
@@ -49,12 +60,16 @@ def io_signature(wl: Workload):
     return sig
 
 
-def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int) -> str:
+def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int,
+              platform: PlatformLike = None) -> str:
     """Content address of one verification: op, sorted candidate params, the
-    kernel-level input shapes/dtypes, tolerance, and the input seed.
+    kernel-level input shapes/dtypes, tolerance, the input seed, and the
+    hardware platform the performance model scored against.
 
-    Two verify calls with equal keys see byte-identical inputs and an
-    identical candidate program, so their ``EvalResult`` is interchangeable.
+    Two verify calls with equal keys see byte-identical inputs, an identical
+    candidate program, and the same platform profile, so their
+    ``EvalResult`` is interchangeable. Results for the same candidate on
+    different platforms carry different model times and must never collide.
     """
     sig = {
         "workload": wl.name,
@@ -63,6 +78,7 @@ def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int) -> str:
         "io": io_signature(wl),
         "tol": wl.tol,
         "seed": int(seed),
+        "platform": resolve_platform(platform).name,
     }
     blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
@@ -70,14 +86,19 @@ def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int) -> str:
 
 def verify(candidate: cand_mod.Candidate, wl: Workload, *,
            seed: Optional[int] = None, measure_wall: bool = False,
-           fn: Optional[Callable] = None, cache=None) -> EvalResult:
-    """Run the verification pipeline for one candidate against one workload."""
-    seed = int(time.time_ns() % (2 ** 31)) if seed is None else seed
+           fn: Optional[Callable] = None, cache=None,
+           platform: PlatformLike = None) -> EvalResult:
+    """Run the verification pipeline for one candidate against one workload,
+    scoring performance against ``platform``'s roofline profile."""
+    plat = resolve_platform(platform)
+    # Deterministic per-call counter, NOT time_ns(): wall-clock seeds defeat
+    # the cache and make runs irreproducible. Pass a seed for fresh entropy.
+    seed = next(_FRESH_SEEDS) % (2 ** 31) if seed is None else seed
 
     # -- verification cache: only declarative candidates are addressable ----
     key = None
     if cache is not None and fn is None:
-        key = cache_key(candidate, wl, seed)
+        key = cache_key(candidate, wl, seed, plat)
         hit = cache.get(key)
         # a hit recorded without wall-clock cannot satisfy a measure_wall
         # request — fall through, re-verify, and upgrade the entry.
@@ -89,7 +110,7 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
     kernel_inputs = kb.workload_for_candidate_inputs(wl, inputs)
     shapes = {k: tuple(v.shape) for k, v in kernel_inputs.items()}
     result = _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes,
-                              measure_wall=measure_wall, fn=fn)
+                              measure_wall=measure_wall, fn=fn, platform=plat)
     result.cache_key = key
     if key is not None:
         cache.put(key, result)
@@ -97,7 +118,7 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
 
 
 def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
-                     measure_wall, fn) -> EvalResult:
+                     measure_wall, fn, platform) -> EvalResult:
 
     # -- generation state handled by the caller; here candidate exists -------
     if fn is None:
@@ -147,8 +168,8 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
                           max_abs_err=err)
 
     # -- performance ----------------------------------------------------------
-    model_t = cand_mod.model_time(candidate, shapes)
-    base_t = cand_mod.baseline_time(candidate.op, shapes)
+    model_t = cand_mod.model_time(candidate, shapes, platform)
+    base_t = cand_mod.baseline_time(candidate.op, shapes, platform)
     wall = None
     if measure_wall:
         t0 = time.perf_counter()
@@ -157,6 +178,7 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
         wall = (time.perf_counter() - t0) / 3
     profile = {
         "op": candidate.op,
+        "platform": platform.name,
         "params": dict(candidate.params),
         "shapes": shapes,
         "model_time_s": model_t,

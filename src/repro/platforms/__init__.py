@@ -1,0 +1,21 @@
+"""Hardware-target registry: the platform abstraction KForge retargets over.
+
+``Platform`` bundles everything one accelerator target needs — roofline
+constants for the performance model, tile-alignment/legality rules, the
+prompt descriptor + one-shot example, a compiler-params hook, and
+per-platform reference-transfer hints. ``resolve_platform`` is the one
+entry point call sites use (name | Platform | None).
+
+Import-leaf package: must not import from ``repro.core`` / ``repro.roofline``
+(they import us).
+"""
+from repro.platforms.base import Platform, PlatformLike  # noqa: F401
+from repro.platforms.registry import (  # noqa: F401
+    DEFAULT_PLATFORM, available_platforms, get_platform, register_platform,
+    resolve_platform,
+)
+from repro.platforms import examples  # noqa: F401
+
+# The old module constant, now derived from the registry; only this package
+# may export it (no module outside repro/platforms imports HW_V5E directly).
+HW_V5E = get_platform("tpu_v5e").hw

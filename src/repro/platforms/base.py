@@ -1,0 +1,103 @@
+"""The hardware-target abstraction (DESIGN.md §1).
+
+KForge's central claim is platform-agnosticism: the same synthesis loop
+retargets to a new accelerator given (a) a hardware profile for the
+performance model, (b) a prompt descriptor + one-shot example in the
+target's idiom, and (c) the platform-specific legality/alignment rules.
+:class:`Platform` bundles exactly those degrees of freedom, so every layer
+that used to hardcode TPU v5e (candidates.model_time, RuleBasedAnalyzer,
+verification, prompts, the campaign runner) takes a platform instead.
+
+Platforms are plain frozen dataclasses registered by name
+(:mod:`repro.platforms.registry`); ``resolve`` accepts a name, an instance,
+or ``None`` (the default target) so call sites stay one-liner-cheap.
+
+This package is an import leaf: nothing here imports from ``repro.core`` or
+``repro.roofline`` (both import *us*), which is what lets the profile be
+threaded everywhere without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """One hardware target: roofline constants + codegen/prompt idiom.
+
+    ``matrix_align`` is the matrix-unit tile width (128 for a TPU MXU,
+    16 for a tensor-core-class GPU profile); ``vector_align`` the sublane /
+    warp granularity. ``fast_mem_bytes`` is the per-kernel working-set
+    budget (VMEM on TPU, shared-memory+register tiling budget on GPU) the
+    performance model uses for tile legality. ``max_tile`` caps a single
+    block dimension — it is what makes the candidate SPACES genuinely
+    platform-dependent (see ``candidates.space_for``).
+    """
+    name: str
+    descriptor: str                 # prompt-facing accelerator name
+    # -- roofline constants (per chip) --------------------------------------
+    peak_flops: float               # matrix-unit peak, FLOP/s
+    hbm_bw: float                   # main-memory bandwidth, B/s
+    link_bw: float                  # interconnect bandwidth per link, B/s
+    hbm_bytes: float                # main-memory capacity
+    fast_mem_bytes: float           # VMEM / shared-memory working set
+    # -- tiling / legality ---------------------------------------------------
+    matrix_align: int               # MXU / tensor-core tile width
+    vector_align: int               # sublane rows / warp width
+    max_tile: int = 8192            # largest legal single block dimension
+    # -- performance-model shape --------------------------------------------
+    vpu_ratio: float = 8.0          # elementwise peak = peak_flops/vpu_ratio
+    grid_step_overhead_s: float = 2e-8   # per-grid-step launch/bubble cost
+    seq_step_latency_s: float = 5e-7     # per-sequential-step latency
+    # -- synthesis idiom -----------------------------------------------------
+    oneshot_example: str = ""       # one-shot kernel example (prompt)
+    constraints_note: str = ""      # prompt text: working set + alignment
+    # op -> {param: value} merged over candidates.REFERENCE_HINTS whenever
+    # a reference is injected while synthesizing FOR this platform: how
+    # transferred kernels idiomatically land on this target
+    reference_hints: Mapping[str, Mapping[str, Any]] = \
+        dataclasses.field(default_factory=dict)
+    # compiler-params hook: builds backend compiler params (Mosaic on TPU)
+    compiler_params_fn: Optional[Callable[..., Any]] = None
+
+    @property
+    def hw(self) -> Dict[str, float]:
+        """The roofline dict historically known as ``HW_V5E``."""
+        return {
+            "peak_flops": self.peak_flops,
+            "hbm_bw": self.hbm_bw,
+            "ici_bw": self.link_bw,
+            "hbm_bytes": self.hbm_bytes,
+            "vmem_bytes": self.fast_mem_bytes,
+        }
+
+    def compiler_params(self, **kwargs) -> Any:
+        """Backend compiler params for a kernel (e.g. Mosaic
+        dimension_semantics on TPU); platforms without a compiler hook echo
+        the kwargs so callers can forward them to a simulator."""
+        if self.compiler_params_fn is None:
+            return dict(kwargs)
+        return self.compiler_params_fn(**kwargs)
+
+    def align_target(self, choices, current: int) -> Optional[int]:
+        """Smallest legal choice that is matrix-aligned, or None.
+
+        Used by initial-candidate biasing and the analysis agent's Rule 1:
+        only meaningful when ``current`` is misaligned for this platform.
+        """
+        if current % self.matrix_align == 0:
+            return None
+        aligned = [c for c in choices
+                   if c >= self.matrix_align and c % self.matrix_align == 0]
+        return min(aligned) if aligned else None
+
+    def describe(self) -> str:
+        return (f"{self.name}: {self.descriptor} — "
+                f"{self.peak_flops / 1e12:.0f} TFLOP/s, "
+                f"{self.hbm_bw / 1e9:.0f} GB/s HBM, "
+                f"align {self.matrix_align}, "
+                f"fast mem {self.fast_mem_bytes / 2**20:.0f} MiB")
+
+
+PlatformLike = Union[str, Platform, None]

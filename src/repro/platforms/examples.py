@@ -1,0 +1,53 @@
+"""Per-platform one-shot examples embedded in every synthesis prompt.
+
+Vector addition, exactly as the paper uses for CUDA (Appendix A) and Metal
+(Appendix B) — here in each registered target's idiom. The TPU variant is a
+Pallas kernel with explicit BlockSpec tiling plus the jit'd scheduling
+wrapper; the GPU-class profile uses the paper's CUDA appendix-A example.
+"""
+
+VECTOR_ADD_PALLAS = '''\
+import functools
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import tpu_compiler_params
+
+
+def _add_kernel(a_ref, b_ref, out_ref):
+    # one (block_rows, block_lanes) VMEM tile per grid step
+    out_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_lanes"))
+def vector_add(a, b, *, block_rows=8, block_lanes=512):
+    rows, lanes = a.shape
+    spec = pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(rows // block_rows, lanes // block_lanes),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
+    )(a, b)
+
+
+def candidate(a, b):
+    return vector_add(a, b)
+'''
+
+# Reference implementation "from the other platform" (paper Appendix A) —
+# also the one-shot example for the simulated GPU-class target.
+VECTOR_ADD_CUDA = '''\
+__global__ void elementwise_add_kernel(
+    const float *a, const float *b, float *out, int size) {
+  int idx = blockIdx.x * blockDim.x + threadIdx.x;
+  if (idx < size) {
+    out[idx] = a[idx] + b[idx];
+  }
+}
+'''

@@ -1,0 +1,126 @@
+"""Registered hardware targets.
+
+Three seed profiles (ISSUE 2):
+
+* ``tpu_v5e``  — the reproduction's historical target; its ``hw`` dict is
+  byte-for-byte the old ``roofline.analysis.HW_V5E`` module constant.
+* ``tpu_v4``   — same ISA/idiom, different roofline ratios (more FLOPs,
+  much more HBM bandwidth) so the memory/compute crossover moves.
+* ``gpu_sim``  — a simulated tensor-core-class GPU: 16-wide matrix tiles
+  (vs the MXU's 128), a ~1 MiB shared-memory working set that makes the
+  large TPU tile choices illegal, a 256 cap on single block dims, and a
+  flatter matrix:vector peak ratio — so analysis rules and SPACES legality
+  genuinely diverge from the TPUs, not just the constants.
+
+New targets register with :func:`register_platform`; everything downstream
+(candidates, analyzer, verifier, prompts, campaigns) picks them up by name.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.platforms import examples
+from repro.platforms.base import Platform, PlatformLike
+
+DEFAULT_PLATFORM = "tpu_v5e"
+
+_REGISTRY: Dict[str, Platform] = {}
+
+
+def register_platform(platform: Platform, *, overwrite: bool = False) -> Platform:
+    if not overwrite and platform.name in _REGISTRY:
+        raise ValueError(f"platform {platform.name!r} already registered")
+    _REGISTRY[platform.name] = platform
+    return platform
+
+
+def get_platform(name: str) -> Platform:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown platform {name!r}; available: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def available_platforms() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_platform(platform: PlatformLike = None) -> Platform:
+    """None -> default target; str -> registry lookup; Platform -> itself."""
+    if platform is None:
+        return _REGISTRY[DEFAULT_PLATFORM]
+    if isinstance(platform, Platform):
+        return platform
+    return get_platform(platform)
+
+
+def _tpu_compiler_params(**kwargs):
+    from repro.kernels.ops import tpu_compiler_params
+    return tpu_compiler_params(**kwargs)
+
+
+# shared by every Pallas-TPU target (and, via the default platform, by
+# prompts.render_synthesis when no constraints are passed)
+TPU_CONSTRAINTS = ("Pay attention to VMEM working-set size (<= 128 MiB), "
+                   "MXU tile alignment (128x128), and numerical stability "
+                   "for large-magnitude inputs.")
+
+
+register_platform(Platform(
+    name="tpu_v5e",
+    descriptor="Pallas TPU (v5e)",
+    peak_flops=197e12,            # bf16 FLOP/s
+    hbm_bw=819e9,                 # B/s
+    link_bw=50e9,                 # ICI, B/s per link
+    hbm_bytes=16e9,
+    fast_mem_bytes=128 * 2 ** 20,  # VMEM
+    matrix_align=128,             # MXU systolic array
+    vector_align=8,               # sublanes
+    max_tile=8192,
+    vpu_ratio=8.0,
+    oneshot_example=examples.VECTOR_ADD_PALLAS,
+    constraints_note=TPU_CONSTRAINTS,
+    compiler_params_fn=_tpu_compiler_params,
+))
+
+register_platform(Platform(
+    name="tpu_v4",
+    descriptor="Pallas TPU (v4)",
+    peak_flops=275e12,
+    hbm_bw=1228e9,
+    link_bw=100e9,
+    hbm_bytes=32e9,
+    fast_mem_bytes=128 * 2 ** 20,
+    matrix_align=128,
+    vector_align=8,
+    max_tile=8192,
+    vpu_ratio=8.0,
+    oneshot_example=examples.VECTOR_ADD_PALLAS,
+    constraints_note=TPU_CONSTRAINTS,
+    compiler_params_fn=_tpu_compiler_params,
+))
+
+register_platform(Platform(
+    name="gpu_sim",
+    descriptor="CUDA-class GPU (simulated)",
+    peak_flops=312e12,            # tensor-core bf16
+    hbm_bw=2039e9,                # HBM2e
+    link_bw=600e9,                # NVLink
+    hbm_bytes=80e9,
+    fast_mem_bytes=2 ** 20,       # shared-memory tiling budget per kernel
+    matrix_align=16,              # tensor-core fragment width
+    vector_align=32,              # warp
+    max_tile=256,                 # block dims past this never fit smem
+    vpu_ratio=16.0,               # CUDA-core : tensor-core peak ratio
+    grid_step_overhead_s=5e-9,    # fine-grained thread-block launch
+    seq_step_latency_s=2e-7,
+    oneshot_example=examples.VECTOR_ADD_CUDA,
+    constraints_note="Pay attention to shared-memory working-set size "
+                     "(<= 1 MiB per block), tensor-core fragment alignment "
+                     "(16x16), warp-width (32) coalescing, and numerical "
+                     "stability for large-magnitude inputs.",
+    # Idiomatic GPU attention kernels are warp-specialized with wide query
+    # tiles; any reference landing on this target biases block_q up-front.
+    reference_hints={"attention": {"block_q": 128}},
+))

@@ -1,3 +1,3 @@
 from repro.roofline.analysis import (  # noqa: F401
-    HW_V5E, collective_bytes, roofline_report, RooflineReport,
+    collective_bytes, roofline_report, RooflineReport,
 )

@@ -16,16 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
-# TPU v5e, per chip.
-HW_V5E = {
-    "peak_flops": 197e12,    # bf16 FLOP/s
-    "hbm_bw": 819e9,         # B/s
-    "ici_bw": 50e9,          # B/s per link
-    "hbm_bytes": 16e9,
-    "vmem_bytes": 128 * 2 ** 20,
-}
+from repro.platforms import Platform, resolve_platform
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -97,6 +90,9 @@ class RooflineReport:
     # TPU-wire estimate: CPU legalizes bf16 dots to f32 pre-SPMD, inflating
     # dot-adjacent collectives 2×; this term halves the f32 subset.
     collective_s_tpu_wire: float = 0.0
+    # the platform profile the report was computed against (repro.platforms)
+    platform: str = "tpu_v5e"
+    peak_flops: float = 197e12
 
     @property
     def dominant(self) -> str:
@@ -118,7 +114,7 @@ class RooflineReport:
 
     @property
     def roofline_fraction_tpu(self) -> float:
-        denom = self.chips * HW_V5E["peak_flops"] * self.step_time_tpu_s
+        denom = self.chips * self.peak_flops * self.step_time_tpu_s
         return self.model_flops_total / denom if denom else 0.0
 
     @property
@@ -130,7 +126,7 @@ class RooflineReport:
     @property
     def roofline_fraction(self) -> float:
         """Model MFU bound: useful FLOPs / (chips × peak × step_time)."""
-        denom = self.chips * HW_V5E["peak_flops"] * self.step_time_s
+        denom = self.chips * self.peak_flops * self.step_time_s
         return self.model_flops_total / denom if denom else 0.0
 
     def to_dict(self) -> Dict:
@@ -146,8 +142,13 @@ class RooflineReport:
 def roofline_report(*, arch: str, shape: str, mesh_desc: str, chips: int,
                     cost: Dict, hlo_text: str, model_flops_total: float,
                     bytes_per_device: Optional[float] = None,
-                    hw: Dict = HW_V5E) -> RooflineReport:
+                    platform: Union[str, Platform, None] = None,
+                    hw: Optional[Dict] = None) -> RooflineReport:
     """Build the three-term report.
+
+    ``platform`` selects the hardware profile the three terms divide by
+    (default: the registry's default target); ``hw`` is a raw-dict escape
+    hatch that overrides it for ad-hoc what-if sweeps.
 
     ``compiled.cost_analysis()`` counts while-loop bodies once (verified —
     EXPERIMENTS.md §Roofline), so the terms use the loop-aware analyzer in
@@ -155,6 +156,9 @@ def roofline_report(*, arch: str, shape: str, mesh_desc: str, chips: int,
     in the record for reference.
     """
     from repro.roofline import hlo_cost as _hc
+    plat = resolve_platform(platform)
+    if hw is None:
+        hw = plat.hw
     res = _hc.analyze(hlo_text)
     flops = res.flops or float(cost.get("flops", 0.0))
     byts = res.bytes or float(cost.get("bytes accessed", 0.0))
@@ -172,4 +176,6 @@ def roofline_report(*, arch: str, shape: str, mesh_desc: str, chips: int,
         model_flops_total=model_flops_total,
         bytes_per_device=bytes_per_device,
         collective_s_tpu_wire=res.collective_bytes_tpu_wire / hw["ici_bw"],
+        platform=plat.name,
+        peak_flops=hw["peak_flops"],
     )

@@ -1,0 +1,405 @@
+"""Platform registry + cross-platform threading: per-platform performance
+model, cache-key separation, analyzer alignment rules, persistent cache,
+transfer sweep, and the seedless-verify / empty-logs regression fixes."""
+import itertools
+import json
+from pathlib import Path
+
+import pytest
+
+import repro.platforms as plat_mod
+from repro.campaign import (Campaign, CampaignConfig, EventLog,
+                            PersistentVerificationCache, VerificationCache,
+                            harvest_hints, run_transfer_sweep)
+from repro.core import LoopConfig, kernelbench
+from repro.core import candidates as cand_mod
+from repro.core import verification as verif_mod
+from repro.core.analysis import RuleBasedAnalyzer
+from repro.core.refinement import RefinementOutcome, run_workload
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.synthesis import LLMBackend, TemplateSearchBackend
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+from repro.platforms import Platform, get_platform, resolve_platform
+
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _tiny(name="T1/softmax", op="softmax", shape=(64, 512), scale=60.0,
+          level=1):
+    refs = {"softmax": ref.softmax, "swish": ref.swish}
+    return Workload(
+        name=name, level=level, op=op,
+        ref_fn=refs[op],
+        input_fn=lambda rng: {"x": randn(rng, shape, scale)},
+        input_shapes={"x": shape})
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_three_seed_targets():
+    names = plat_mod.available_platforms()
+    assert {"tpu_v5e", "tpu_v4", "gpu_sim"} <= set(names)
+
+
+def test_resolve_accepts_none_name_and_instance():
+    default = resolve_platform(None)
+    assert default.name == plat_mod.DEFAULT_PLATFORM
+    byname = resolve_platform("gpu_sim")
+    assert byname.name == "gpu_sim"
+    assert resolve_platform(byname) is byname
+    with pytest.raises(KeyError):
+        resolve_platform("metal_m3")
+
+
+def test_v5e_hw_matches_historical_constants():
+    hw = get_platform("tpu_v5e").hw
+    assert hw == {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+                  "hbm_bytes": 16e9, "vmem_bytes": 128 * 2 ** 20}
+
+
+def test_register_duplicate_raises():
+    with pytest.raises(ValueError):
+        plat_mod.register_platform(get_platform("tpu_v5e"))
+
+
+def test_compiler_params_hook():
+    tpu = get_platform("tpu_v5e").compiler_params(
+        dimension_semantics=("parallel",))
+    assert tpu is not None and not isinstance(tpu, dict)  # Mosaic params
+    gpu = get_platform("gpu_sim").compiler_params(num_warps=4)
+    assert gpu == {"num_warps": 4}                        # echo (simulated)
+
+
+def test_no_module_outside_platforms_imports_hw_v5e():
+    """ISSUE 2 acceptance: HW_V5E lives only in repro/platforms/."""
+    offenders = []
+    for path in SRC_ROOT.rglob("*.py"):
+        if "platforms" in path.parts:
+            continue
+        if "HW_V5E" in path.read_text():
+            offenders.append(str(path))
+    assert offenders == []
+
+
+# ---------------------------------------------------------------------------
+# Candidate space + performance model per platform
+# ---------------------------------------------------------------------------
+
+
+def test_space_for_default_platform_is_unchanged():
+    for op, space in cand_mod.SPACES.items():
+        assert cand_mod.space_for(op, "tpu_v5e") == space
+
+
+def test_space_for_gpu_sim_caps_tiles_but_never_empties_an_axis():
+    mm = cand_mod.space_for("matmul", "gpu_sim")
+    assert max(mm["block_m"]) <= 256 and max(mm["block_k"]) <= 256
+    xe = cand_mod.space_for("xent", "gpu_sim")
+    assert xe["block_v"] == (512,)          # fallback keeps smallest choice
+    assert xe["online"] == (False, True)    # strategy axes pass through
+
+
+def test_model_time_differs_across_platforms():
+    shapes = {"a": (1024, 1024), "b": (1024, 1024)}
+    cand = cand_mod.Candidate("matmul", {"block_m": 128, "block_n": 128,
+                                         "block_k": 128})
+    times = {p: cand_mod.model_time(cand, shapes, p)
+             for p in ("tpu_v5e", "tpu_v4", "gpu_sim")}
+    assert len(set(times.values())) == 3
+    assert all(t > 0 for t in times.values())
+    # speedups are computed against the same platform's baseline
+    for p in times:
+        assert cand_mod.baseline_time("matmul", shapes, p) > 0
+
+
+def test_fast_memory_legality_diverges():
+    """512-wide matmul triple-tiles fit v5e VMEM but not gpu_sim smem."""
+    shapes = {"a": (1024, 1024), "b": (1024, 1024)}
+    big = cand_mod.Candidate("matmul", {"block_m": 512, "block_n": 512,
+                                        "block_k": 512})
+    assert cand_mod.model_time(big, shapes, "tpu_v5e") < float("inf")
+    assert cand_mod.model_time(big, shapes, "gpu_sim") == float("inf")
+
+
+def test_initial_candidate_alignment_bias_per_platform():
+    # TPU: reference transfer aligns matrix tiles up to the 128-wide MXU
+    tpu = cand_mod.initial_candidate("matmul", use_reference=True,
+                                     platform="tpu_v5e")
+    assert tpu.params["block_m"] == 128 and tpu.params["block_n"] == 128
+    # GPU: 64 is already 16-aligned; no up-alignment, and naive tiles snap
+    # into the capped space
+    gpu = cand_mod.initial_candidate("matmul", use_reference=True,
+                                     platform="gpu_sim")
+    assert gpu.params["block_m"] == 64
+    assert gpu.params["block_k"] <= 256
+    # per-platform REFERENCE_HINTS extension (gpu_sim biases attention q)
+    att = cand_mod.initial_candidate("attention", use_reference=True,
+                                     platform="gpu_sim")
+    assert att.params["online"] is True and att.params["block_q"] == 128
+
+
+def test_mutations_stay_in_platform_space():
+    cand = cand_mod.naive_candidate("matmul", "gpu_sim")
+    for mut in cand_mod.mutations(cand, "gpu_sim").values():
+        assert all(v <= 256 for k, v in mut.params.items()
+                   if k.startswith("block_"))
+
+
+# ---------------------------------------------------------------------------
+# Verification: platform in the content address and the profile
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_differs_across_platforms():
+    wl = _tiny()
+    cand = cand_mod.naive_candidate("softmax")
+    k_default = verif_mod.cache_key(cand, wl, 0)
+    assert verif_mod.cache_key(cand, wl, 0, "tpu_v5e") == k_default
+    assert verif_mod.cache_key(cand, wl, 0, "tpu_v4") != k_default
+    assert verif_mod.cache_key(cand, wl, 0, "gpu_sim") != k_default
+
+
+def test_verify_stamps_platform_and_caches_per_platform():
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    cache = VerificationCache()
+    r_tpu = verif_mod.verify(cand, wl, seed=0, cache=cache)
+    r_gpu = verif_mod.verify(cand, wl, seed=0, cache=cache,
+                             platform="gpu_sim")
+    assert r_tpu.profile["platform"] == "tpu_v5e"
+    assert r_gpu.profile["platform"] == "gpu_sim"
+    assert r_tpu.model_time_s != r_gpu.model_time_s
+    assert len(cache) == 2                      # no collision
+    assert verif_mod.verify(cand, wl, seed=0, cache=cache,
+                            platform="gpu_sim") is r_gpu
+
+
+def test_seedless_verify_uses_deterministic_counter(monkeypatch):
+    """Regression (ISSUE 2): time_ns() seeds defeated the cache and made
+    runs irreproducible; seedless calls now draw from a per-call counter."""
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    monkeypatch.setattr(verif_mod, "_FRESH_SEEDS", itertools.count(1))
+    cache = VerificationCache()
+    r1 = verif_mod.verify(cand, wl, cache=cache)
+    r2 = verif_mod.verify(cand, wl, cache=cache)
+    assert r1.cache_key == verif_mod.cache_key(cand, wl, 1)
+    assert r2.cache_key == verif_mod.cache_key(cand, wl, 2)
+    # same counter state => byte-identical key sequence on a "rerun"
+    monkeypatch.setattr(verif_mod, "_FRESH_SEEDS", itertools.count(1))
+    assert verif_mod.verify(cand, wl, cache=cache) is r1
+
+
+def test_refinement_outcome_final_empty_logs_regression():
+    out = RefinementOutcome(workload="w", best=None, best_candidate=None,
+                            logs=[])
+    final = out.final                           # used to IndexError
+    assert final.state is ExecutionState.GENERATION_FAILURE
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    zero = run_workload(wl, LoopConfig(num_iterations=0))
+    assert zero.final.state is ExecutionState.GENERATION_FAILURE
+
+
+# ---------------------------------------------------------------------------
+# Analyzer: thresholds derive from the platform profile
+# ---------------------------------------------------------------------------
+
+_MM_PROFILE = {
+    "op": "matmul",
+    "params": {"block_m": 64, "block_n": 64, "block_k": 512},
+    "shapes": {"a": (1024, 1024), "b": (1024, 1024)},
+    "model_time_s": 1e-3, "flops": 2 * 1024 ** 3,
+}
+
+
+def test_analyzer_alignment_matches_platform_tile_width():
+    tpu_rec = RuleBasedAnalyzer("tpu_v5e").analyze(dict(_MM_PROFILE))
+    assert tpu_rec.param in ("block_m", "block_n")
+    assert tpu_rec.value == 128                 # MXU width
+    # 64 is already aligned for a 16-wide tensor-core fragment: rule 1 must
+    # NOT fire on gpu_sim for the same profile
+    gpu_rec = RuleBasedAnalyzer("gpu_sim").analyze(dict(_MM_PROFILE))
+    assert not (gpu_rec.param in ("block_m", "block_n")
+                and gpu_rec.value == 128)
+    # a genuinely misaligned tile gets a 16-aligned target from the space
+    prof = dict(_MM_PROFILE)
+    prof["params"] = {"block_m": 8, "block_n": 64, "block_k": 64}
+    rec = RuleBasedAnalyzer("gpu_sim").analyze(prof)
+    assert rec.param == "block_m" and rec.value % 16 == 0
+    assert rec.value < 128                      # not the TPU target
+
+
+def test_default_analyzer_matches_seed_behaviour():
+    rec = RuleBasedAnalyzer().analyze(dict(_MM_PROFILE))
+    assert rec.param in ("block_m", "block_n") and rec.value == 128
+
+
+# ---------------------------------------------------------------------------
+# Prompts / LLM backend idiom per platform
+# ---------------------------------------------------------------------------
+
+
+def test_llm_prompt_uses_platform_idiom():
+    wl = kernelbench.by_name("L1/softmax", small=True)
+    tpu_prompt = LLMBackend(platform="tpu_v5e").build_prompt(
+        wl, prev=None, prev_result=None, recommendation=None,
+        use_reference=False)
+    assert "pallas_call" in tpu_prompt and "VMEM" in tpu_prompt
+    gpu_prompt = LLMBackend(platform="gpu_sim").build_prompt(
+        wl, prev=None, prev_result=None, recommendation=None,
+        use_reference=False)
+    assert "__global__" in gpu_prompt           # CUDA one-shot example
+    assert "shared-memory" in gpu_prompt and "pallas_call" not in gpu_prompt
+
+
+def test_llm_prompt_harvested_reference_overrides_oracle():
+    wl = kernelbench.by_name("L1/softmax", small=True)
+    backend = LLMBackend(platform="gpu_sim", reference_sources={
+        wl.name: ("tpu_v5e", "# harvested kernel: online=True")})
+    p = backend.build_prompt(wl, prev=None, prev_result=None,
+                             recommendation=None, use_reference=True)
+    assert "# harvested kernel: online=True" in p
+    assert "tpu_v5e" in p
+
+
+# ---------------------------------------------------------------------------
+# Persistent verification cache (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_cache_survives_reopen(tmp_path):
+    path = tmp_path / "verify.jsonl"
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    cache = VerificationCache.open(path)
+    assert isinstance(cache, PersistentVerificationCache)
+    r1 = verif_mod.verify(cand, wl, seed=0, cache=cache)
+    assert r1.correct and cache.misses == 1
+
+    reopened = VerificationCache.open(path)
+    assert len(reopened) == 1
+    r2 = verif_mod.verify(cand, wl, seed=0, cache=reopened)
+    assert reopened.misses == 0 and reopened.hits == 1
+    assert r2.state is r1.state
+    assert r2.model_time_s == pytest.approx(r1.model_time_s)
+
+
+def test_persistent_cache_last_write_wins_and_tolerates_torn_tail(tmp_path):
+    path = tmp_path / "verify.jsonl"
+    cache = VerificationCache.open(path)
+    cache.put("k", EvalResult(ExecutionState.CORRECT, model_time_s=1.0))
+    cache.put("k", EvalResult(ExecutionState.CORRECT, model_time_s=2.0))
+    with path.open("a") as fh:
+        fh.write('{"key": "torn"')              # killed mid-write
+    reopened = VerificationCache.open(path)
+    assert len(reopened) == 1
+    assert reopened.get("k").model_time_s == 2.0
+
+
+def test_persistent_cache_separates_platforms(tmp_path):
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    cand = cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    cache = VerificationCache.open(tmp_path / "v.jsonl")
+    verif_mod.verify(cand, wl, seed=0, cache=cache, platform="tpu_v5e")
+    verif_mod.verify(cand, wl, seed=0, cache=cache, platform="gpu_sim")
+    reopened = VerificationCache.open(tmp_path / "v.jsonl")
+    assert len(reopened) == 2
+
+
+# ---------------------------------------------------------------------------
+# Campaign + transfer sweep across platforms
+# ---------------------------------------------------------------------------
+
+
+def test_campaign_events_are_platform_tagged(tmp_path):
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    log = tmp_path / "p.jsonl"
+    cfg = CampaignConfig(loop=LoopConfig(num_iterations=2,
+                                         platform="gpu_sim"),
+                         max_workers=1, log_path=log)
+    result = Campaign([wl], cfg).run()
+    assert result.runs[0].final.correct
+    events = EventLog(log).events()
+    iters = [e for e in events if e["event"] == "iteration"]
+    dones = [e for e in events if e["event"] == "workload_done"]
+    assert iters and all(e["platform"] == "gpu_sim" for e in iters)
+    assert dones and all(e["platform"] == "gpu_sim" for e in dones)
+    assert all(e["loop"]["platform"] == "gpu_sim" for e in dones)
+
+
+def test_resume_does_not_cross_platforms(tmp_path):
+    """A workload finished on platform A must re-run for platform B even
+    from the same event log (the loop config differs by platform)."""
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    log = tmp_path / "x.jsonl"
+    kw = dict(max_workers=1, log_path=log)
+    Campaign([wl], CampaignConfig(
+        loop=LoopConfig(num_iterations=2, platform="tpu_v5e"), **kw)).run()
+    second = Campaign([wl], CampaignConfig(
+        loop=LoopConfig(num_iterations=2, platform="gpu_sim"), **kw)).run()
+    assert second.n_skipped == 0
+    third = Campaign([wl], CampaignConfig(
+        loop=LoopConfig(num_iterations=2, platform="gpu_sim"), **kw)).run()
+    assert third.n_skipped == 1                 # same platform does resume
+
+
+def test_transfer_sweep_two_platforms(tmp_path):
+    """§6.2 on two tiny workloads: harvested references make the warm leg
+    converge at least as fast as the cold leg, and never score worse."""
+    wls = [_tiny("T1/softmax", shape=(64, 512), scale=60.0),
+           _tiny("T2/softmax_wide", shape=(128, 512), scale=60.0, level=2)]
+    log = tmp_path / "sweep.jsonl"
+    cache = VerificationCache.open(tmp_path / "cache.jsonl")
+    sweep = run_transfer_sweep(
+        wls, from_platform="tpu_v5e", to_platform="gpu_sim",
+        loop=LoopConfig(num_iterations=4, use_profiling=True),
+        cache=cache, max_workers=2, log_path=log)
+
+    # strategy (not tiling) was harvested from the source platform
+    assert sweep.hints["T1/softmax"] == {"online": True}
+    assert harvest_hints(sweep.source) == sweep.hints
+
+    # warm >= cold at fast_1, per level and total
+    rep = sweep.report()
+    for stats in rep["levels"].values():
+        assert stats["warm"]["1"] >= stats["cold"]["1"]
+    assert rep["total"]["warm"]["1"] >= rep["total"]["cold"]["1"]
+    assert "uplift" in sweep.report_text()
+
+    # reference-injected runs reach a correct candidate in <= the cold
+    # run's iterations (here: immediately, vs after a numeric repair)
+    by_name_cold = {r.workload: r.outcome for r in sweep.cold.runs}
+    by_name_warm = {r.workload: r.outcome for r in sweep.warm.runs}
+    for name in by_name_cold:
+        first_ok_cold = min(i for i, l in enumerate(by_name_cold[name].logs)
+                            if l.result.correct)
+        first_ok_warm = min(i for i, l in enumerate(by_name_warm[name].logs)
+                            if l.result.correct)
+        assert first_ok_warm <= first_ok_cold
+        assert first_ok_warm == 0               # reference fixes numerics
+
+    # both legs journal (platform-tagged) into ONE event log
+    events = EventLog(log).events()
+    platforms = {e.get("platform") for e in events
+                 if e.get("event") == "workload_done"}
+    assert platforms == {"tpu_v5e", "gpu_sim"}
+
+    # rendered prompt references are ready for LLMBackend(reference_sources=)
+    src_plat, text = sweep.references["T1/softmax"]
+    assert src_plat == "tpu_v5e" and "online" in text
+
+    # re-running the identical sweep against the same log resumes ALL
+    # three legs (the interleaved multi-config log must not shadow the
+    # earlier legs' terminal events)
+    rerun = run_transfer_sweep(
+        wls, from_platform="tpu_v5e", to_platform="gpu_sim",
+        loop=LoopConfig(num_iterations=4, use_profiling=True),
+        cache=cache, max_workers=2, log_path=log)
+    assert rerun.source.n_skipped == len(wls)
+    assert rerun.cold.n_skipped == len(wls)
+    assert rerun.warm.n_skipped == len(wls)
+    assert rerun.report()["total"]["warm"]["1"] == rep["total"]["warm"]["1"]

@@ -1,0 +1,42 @@
+"""All-pairs transfer matrix (DESIGN.md §2) — the cross-target headline.
+
+Rows: matrix/<from>-><to>/uplift, value = total warm-minus-cold fast_1 of
+that ordered pair; matrix/<from>-><to>/warm_p1 and /cold_p1 carry the two
+absolute fast_1 values the uplift is the difference of. A failed leg emits
+a single matrix/<from>-><to>/error row. The final matrix/heatmap rows
+carry the rendered ASCII heat-map (one row per line, value in `derived`).
+
+Runs on the matrix engine: one base campaign per platform (reused as the
+source leg of every pair it feeds and the cold leg of every pair targeting
+it), N·(N−1) warm legs, one shared VerificationCache and worker pool.
+"""
+from __future__ import annotations
+
+from benchmarks.common import CAMPAIGN_WORKERS, Row
+from repro.campaign import VerificationCache, run_transfer_matrix
+from repro.campaign.cache import format_cache_stats
+from repro.core import LoopConfig, kernelbench
+
+
+def run(small: bool = True):
+    rows: list[Row] = []
+    cache = VerificationCache()
+    wls = kernelbench.suite(small=small)
+    matrix = run_transfer_matrix(
+        wls, loop=LoopConfig(num_iterations=5, use_profiling=True),
+        cache=cache, max_workers=CAMPAIGN_WORKERS)
+    for (src, dst), leg in sorted(matrix.legs.items()):
+        if not leg.ok:
+            rows.append((f"matrix/{src}->{dst}/error", 0.0, str(leg.error)))
+            continue
+        rep = leg.sweep.report()
+        rows.append((f"matrix/{src}->{dst}/cold_p1", 0.0,
+                     f"{rep['total']['cold']['1']:.3f}"))
+        rows.append((f"matrix/{src}->{dst}/warm_p1", 0.0,
+                     f"{rep['total']['warm']['1']:.3f}"))
+        rows.append((f"matrix/{src}->{dst}/uplift", 0.0,
+                     f"{rep['total']['uplift_fast1']:+.3f}"))
+    rows.append(("matrix/cache", 0.0, format_cache_stats(cache.stats())))
+    for i, line in enumerate(matrix.heatmap_text().splitlines()):
+        rows.append((f"matrix/heatmap/{i}", 0.0, line))
+    return rows

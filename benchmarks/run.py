@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_correctness        Table 4 (single-shot correctness ± reference)
   bench_profiling_impact   Fig. 3 / Table 5 (analysis-agent impact)
   bench_transfer           §6.2 (cross-platform transfer uplift)
+  bench_transfer_matrix    DESIGN.md §2 (all-pairs uplift heat-map)
   bench_batch_sizes        Table 6 / §7.1 (batch-size generalization)
   bench_roofline           assignment §Roofline (reads experiments/dryrun)
   bench_kernels_wall       measured CPU wall-clock of reference ops
@@ -27,7 +28,7 @@ import time
 from benchmarks import (bench_batch_sizes, bench_correctness,
                         bench_fastp_levels, bench_kernels_wall,
                         bench_profiling_impact, bench_roofline,
-                        bench_transfer)
+                        bench_transfer, bench_transfer_matrix)
 from benchmarks.common import emit
 
 MODULES = {
@@ -35,6 +36,7 @@ MODULES = {
     "correctness": bench_correctness,
     "profiling_impact": bench_profiling_impact,
     "transfer": bench_transfer,
+    "transfer_matrix": bench_transfer_matrix,
     "batch_sizes": bench_batch_sizes,
     "roofline": bench_roofline,
     "kernels_wall": bench_kernels_wall,

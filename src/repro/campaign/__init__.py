@@ -25,3 +25,6 @@ from repro.campaign.transfer import (  # noqa: F401
     TransferSweepResult, harvest_hints, reference_sources,
     run_transfer_sweep,
 )
+from repro.campaign.matrix import (  # noqa: F401
+    MatrixLeg, TransferMatrix, all_pairs, run_transfer_matrix,
+)

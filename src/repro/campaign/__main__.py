@@ -8,6 +8,8 @@ Examples::
   python -m repro.campaign --suite small --platform gpu_sim
   python -m repro.campaign --suite small --platform gpu_sim \
       --transfer-from tpu_v5e                 # §6.2 transfer sweep
+  python -m repro.campaign --matrix           # every ordered platform pair
+  python -m repro.campaign --matrix --platforms tpu_v5e metal_m2
   python -m repro.campaign --log runs/c1.jsonl           # resumable
   python -m repro.campaign --log runs/c1.jsonl --report-only
   python -m repro.campaign --cache-path runs/verify.jsonl  # cross-process
@@ -18,10 +20,11 @@ import argparse
 import sys
 from typing import List, Optional
 
-from repro.campaign.cache import VerificationCache
+from repro.campaign.cache import VerificationCache, format_cache_stats
 from repro.campaign.events import EventLog
 from repro.campaign.report import (distinct_loop_configs, format_report,
                                    report_from_events)
+from repro.campaign.matrix import run_transfer_matrix
 from repro.campaign.runner import Campaign, CampaignConfig
 from repro.campaign.transfer import run_transfer_sweep
 from repro.core import kernelbench
@@ -30,6 +33,8 @@ from repro.platforms import DEFAULT_PLATFORM, available_platforms
 
 
 def build_parser() -> argparse.ArgumentParser:
+    """The ``python -m repro.campaign`` argument parser (kept separate so
+    tests and docs can introspect the flags)."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.campaign",
         description="concurrent, cached, resumable KForge synthesis campaign")
@@ -55,6 +60,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run the §6.2 transfer sweep: campaign on this "
                          "source platform first, then --platform cold and "
                          "with the harvested references")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run the transfer sweep over EVERY ordered "
+                         "platform pair and print the uplift heat-map "
+                         "(all registered platforms, or --platforms)")
+    ap.add_argument("--platforms", nargs="+", default=None,
+                    metavar="PLATFORM",
+                    help="restrict --matrix to these platforms (>= 2)")
     ap.add_argument("--cache-path", default=None,
                     help="persistent JSONL verification cache shared "
                          "across processes (and across both sweep legs)")
@@ -73,7 +85,31 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: Optional[List[str]] = None) -> int:
-    args = build_parser().parse_args(argv)
+    """CLI entry point; returns a process exit code (0 on success, 1 on
+    empty --report-only logs or failed matrix legs, 2 on usage errors)."""
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.transfer_from is not None and args.transfer_from == args.platform:
+        ap.error(f"--transfer-from {args.transfer_from} --platform "
+                 f"{args.platform}: source and target platform must differ "
+                 "(a same-platform sweep would just re-run the source "
+                 "campaign and report zero uplift); available: "
+                 + ", ".join(available_platforms()))
+    if args.matrix and args.transfer_from:
+        ap.error("--matrix already runs every ordered platform pair; "
+                 "it cannot be combined with --transfer-from")
+    if args.matrix and args.platform != DEFAULT_PLATFORM:
+        ap.error("--platform does not scope --matrix; use "
+                 "--platforms A B ... to restrict the platform set")
+    if args.platforms is not None and not args.matrix:
+        ap.error("--platforms only applies to --matrix")
+    if args.platforms is not None:
+        unknown = sorted(set(args.platforms) - set(available_platforms()))
+        if unknown:
+            ap.error(f"unknown platform(s) {', '.join(unknown)}; available: "
+                     + ", ".join(available_platforms()))
+        if len(set(args.platforms)) < 2:
+            ap.error("--matrix needs at least 2 distinct platforms")
     log_path = args.log or f"campaign-{args.suite}.jsonl"
 
     if args.report_only:
@@ -103,17 +139,36 @@ def main(argv: Optional[List[str]] = None) -> int:
     cache = (VerificationCache.open(args.cache_path)
              if args.cache_path else VerificationCache())
 
+    if args.matrix:
+        # No default event log for the matrix: with only --cache-path, a
+        # rerun re-verifies every leg against the persistent cache (100%
+        # hits) instead of skipping legs via log resume. Pass --log to get
+        # journaling + resume on top.
+        matrix = run_transfer_matrix(
+            workloads, args.platforms, loop=loop, cache=cache,
+            max_workers=args.workers, timeout_s=args.timeout,
+            log_path=args.log, resume=not args.no_resume)
+        print(f"transfer matrix: {len(workloads)} workloads x "
+              f"{len(matrix.legs)} ordered pairs over "
+              f"{len(matrix.platforms)} platforms"
+              + (f" -> {args.log}" if args.log else ""))
+        print(f"verification cache: {format_cache_stats(cache.stats())}")
+        print()
+        print(matrix.heatmap_text())
+        for (src, dst), leg in sorted(matrix.legs.items()):
+            if not leg.ok:
+                print(f"FAILED {src}->{dst}: {leg.error}", file=sys.stderr)
+        return 1 if matrix.n_failed else 0
+
     if args.transfer_from:
         sweep = run_transfer_sweep(
             workloads, from_platform=args.transfer_from,
             to_platform=args.platform, loop=loop, cache=cache,
             max_workers=args.workers, timeout_s=args.timeout,
             log_path=log_path, resume=not args.no_resume)
-        stats = cache.stats()
         print(f"transfer sweep: {len(workloads)} workloads x 3 legs "
               f"-> {log_path}")
-        print(f"verification cache: {stats['hits']} hits / "
-              f"{stats['misses']} misses ({stats['entries']} entries)")
+        print(f"verification cache: {format_cache_stats(cache.stats())}")
         print()
         print(sweep.report_text())
         return 0
@@ -128,9 +183,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"campaign[{args.platform}]: {len(result.runs)} workloads "
           f"({result.n_skipped} resumed, {result.n_failed} failed, "
           f"{done} ran ok) -> {result.log_path}")
-    stats = result.cache.stats()
-    print(f"verification cache: {stats['hits']} hits / "
-          f"{stats['misses']} misses ({stats['entries']} entries)")
+    print(f"verification cache: "
+          f"{format_cache_stats(result.cache.stats())}")
     print()
     print(campaign.report_text())
     return 0

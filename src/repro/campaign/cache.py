@@ -27,6 +27,16 @@ from typing import Dict, Optional, Union
 from repro.core.states import EvalResult
 
 
+def format_cache_stats(stats: Dict[str, int]) -> str:
+    """One-line human-readable rendering of :meth:`VerificationCache.stats`
+    ('X hits / Y misses (Z entries, R% hit rate)') — the single format every
+    CLI branch and benchmark prints."""
+    total = stats["hits"] + stats["misses"]
+    rate = 100.0 * stats["hits"] / total if total else 0.0
+    return (f"{stats['hits']} hits / {stats['misses']} misses "
+            f"({stats['entries']} entries, {rate:.1f}% hit rate)")
+
+
 class VerificationCache:
     """In-memory EvalResult memo keyed by verification content address."""
 
@@ -43,6 +53,8 @@ class VerificationCache:
         return PersistentVerificationCache(path)
 
     def get(self, key: str) -> Optional[EvalResult]:
+        """Look up one verification by content address; returns the cached
+        EvalResult or None, updating the hit/miss counters."""
         with self._lock:
             result = self._store.get(key)
             if result is None:
@@ -52,6 +64,7 @@ class VerificationCache:
             return result
 
     def put(self, key: str, result: EvalResult) -> None:
+        """Store (or overwrite) the EvalResult for one content address."""
         with self._lock:
             self._store[key] = result
 
@@ -70,6 +83,8 @@ class VerificationCache:
             return key in self._store
 
     def stats(self) -> Dict[str, int]:
+        """Snapshot of {entries, hits, misses} — the campaign's
+        cache-effectiveness telemetry."""
         with self._lock:
             return {"entries": len(self._store), "hits": self.hits,
                     "misses": self.misses}

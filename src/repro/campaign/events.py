@@ -22,16 +22,34 @@ without re-verifying the iterations they already paid for.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import threading
 from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Union
 
-from repro.core.refinement import IterationLog
+from repro.core.refinement import IterationLog, LoopConfig
 from repro.core.states import EvalResult, ExecutionState
 
 
+def normalize_loop(loop: Optional[Dict[str, Any]]
+                   ) -> Optional[Dict[str, Any]]:
+    """Fill LoopConfig fields absent from a logged loop dict with their
+    defaults. Logs written before a config field existed (e.g.
+    ``transfer_from``) must keep resuming and reporting under the grown
+    config — the same tolerant-loading promise :func:`result_from_dict`
+    makes for results. Always compare loop configs through this."""
+    if loop is None:
+        return None
+    out = dataclasses.asdict(LoopConfig())
+    out.update(loop)
+    return out
+
+
 def result_to_dict(r: EvalResult) -> Dict[str, Any]:
+    """JSON-serializable form of an EvalResult (inverse:
+    :func:`result_from_dict`); shared by the event log and the persistent
+    verification cache."""
     return {
         "state": r.state.value,
         "error": r.error,
@@ -45,6 +63,8 @@ def result_to_dict(r: EvalResult) -> Dict[str, Any]:
 
 
 def result_from_dict(d: Dict[str, Any]) -> EvalResult:
+    """Rebuild an EvalResult from :func:`result_to_dict` output; absent
+    keys default to None, so older logs stay loadable."""
     return EvalResult(
         state=ExecutionState(d["state"]),
         error=d.get("error"),
@@ -59,6 +79,9 @@ def result_from_dict(d: Dict[str, Any]) -> EvalResult:
 
 def iteration_event(workload: str, level: int, log: IterationLog,
                     platform: Optional[str] = None) -> Dict[str, Any]:
+    """The JSONL event for one refinement iteration: candidate, phase,
+    serialized result (with cache_key — what resume pre-warms the
+    verification cache from), and the platform it ran against."""
     return {
         "event": "iteration",
         "workload": workload,
@@ -124,7 +147,8 @@ def completed_workloads(events: Iterable[Dict[str, Any]],
     for ev in events:
         if ev.get("event") not in ("workload_done", "workload_error"):
             continue
-        if loop is not None and ev.get("loop") != loop:
+        if loop is not None and \
+                normalize_loop(ev.get("loop")) != normalize_loop(loop):
             continue
         done[ev["workload"]] = ev
     return done

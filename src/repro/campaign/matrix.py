@@ -1,0 +1,259 @@
+"""All-pairs cross-platform transfer matrix (DESIGN.md §2).
+
+The §6.2 transfer sweep (:mod:`repro.campaign.transfer`) measures ONE
+ordered platform pair. The matrix engine runs it over **every ordered pair
+of registered platforms** and aggregates the per-pair warm-minus-cold
+fast_1 uplift into a heat-map — the headline cross-target artifact of the
+paper's platform-agnosticism claim.
+
+Work sharing keeps N platforms at N + N·(N−1) campaigns instead of the
+naive 3·N·(N−1):
+
+* one **base campaign per platform** doubles as the *source* leg of every
+  pair it feeds and the *cold* leg of every pair that targets it (both are
+  the same ``use_reference=False`` configuration on that platform);
+* one shared :class:`VerificationCache` serves every leg — the platform is
+  part of the verification content address, so legs never collide, and a
+  candidate two legs both visit is verified once;
+* one shared :class:`Scheduler` (worker pool / timeout policy) runs every
+  campaign, instead of each leg sizing its own pool;
+* warm legs are tagged ``LoopConfig.transfer_from``, so a shared event log
+  keeps (A → B) and (C → B) warm results apart and resume works per leg.
+
+A leg that dies (platform misconfiguration, scheduler failure) is isolated
+into its :class:`MatrixLeg` ``error`` — the matrix completes and the
+heat-map renders the hole instead of crashing.
+
+CLI: ``python -m repro.campaign --matrix [--platforms A B ...]``;
+benchmark: ``benchmarks/bench_transfer_matrix.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.campaign.cache import VerificationCache
+from repro.campaign.runner import CampaignResult, run_campaign
+from repro.campaign.scheduler import Scheduler
+from repro.campaign.transfer import (TransferSweepResult, harvest_hints,
+                                     reference_sources)
+from repro.core.refinement import LoopConfig
+from repro.core.synthesis import TemplateSearchBackend
+from repro.core.workload import Workload
+from repro.platforms import available_platforms, resolve_platform
+
+
+def all_pairs(platforms: Sequence[str]) -> List[Tuple[str, str]]:
+    """Every ordered (source, target) pair of distinct platforms, in
+    deterministic (sorted-source, sorted-target) order."""
+    names = sorted(platforms)
+    return [(a, b) for a in names for b in names if a != b]
+
+
+@dataclasses.dataclass
+class MatrixLeg:
+    """One ordered (source → target) cell of the transfer matrix.
+
+    Exactly one of ``sweep`` / ``error`` is set: a completed leg carries the
+    full :class:`TransferSweepResult`; a failed one carries the error string
+    so the matrix can render around the hole.
+    """
+    from_platform: str
+    to_platform: str
+    sweep: Optional[TransferSweepResult] = None
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None and self.sweep is not None
+
+    @property
+    def uplift_fast1(self) -> Optional[float]:
+        """Total warm − cold fast_1 of this leg (None on a failed leg)."""
+        if not self.ok:
+            return None
+        return self.sweep.report()["total"]["uplift_fast1"]
+
+
+@dataclasses.dataclass
+class TransferMatrix:
+    """All-pairs transfer result: one :class:`MatrixLeg` per ordered pair.
+
+    ``platforms`` is the sorted platform list the matrix ran over; ``legs``
+    maps every ordered pair from :func:`all_pairs` to its leg. ``cache`` is
+    the single verification cache all legs shared (its hit/miss counters
+    are the matrix's work-sharing telemetry).
+    """
+    platforms: List[str]
+    legs: Dict[Tuple[str, str], MatrixLeg]
+    cache: VerificationCache
+    log_path: Optional[Path] = None
+
+    def leg(self, from_platform: str, to_platform: str) -> MatrixLeg:
+        return self.legs[(from_platform, to_platform)]
+
+    def uplift(self, from_platform: str, to_platform: str) -> Optional[float]:
+        """fast_1 uplift of one ordered pair (None if that leg failed)."""
+        return self.legs[(from_platform, to_platform)].uplift_fast1
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for leg in self.legs.values() if not leg.ok)
+
+    def report(self) -> Dict[str, Any]:
+        """Aggregate dict: per-pair leg reports (or errors), the best and
+        worst completed pairs by fast_1 uplift, and cache stats."""
+        pairs: Dict[str, Any] = {}
+        for (src, dst), leg in sorted(self.legs.items()):
+            key = f"{src}->{dst}"
+            pairs[key] = leg.sweep.report() if leg.ok \
+                else {"error": leg.error}
+        done = [(k, v["total"]["uplift_fast1"])
+                for k, v in pairs.items() if "error" not in v]
+        return {
+            "platforms": list(self.platforms),
+            "n_pairs": len(self.legs),
+            "n_failed": self.n_failed,
+            "pairs": pairs,
+            "best_pair": max(done, key=lambda kv: kv[1])[0] if done else None,
+            "worst_pair": min(done, key=lambda kv: kv[1])[0] if done else None,
+            "cache": self.cache.stats(),
+        }
+
+    # -- heat-map rendering --------------------------------------------------
+
+    def _cell(self, src: str, dst: str) -> str:
+        if src == dst:
+            return "·"
+        leg = self.legs.get((src, dst))
+        if leg is None or not leg.ok:
+            return "ERR"
+        return f"{leg.uplift_fast1:+.3f}"
+
+    def heatmap_text(self) -> str:
+        """ASCII heat-map: rows = source platform, columns = target,
+        cells = total fast_1 uplift (warm − cold); '·' diagonal, 'ERR' for
+        a failed leg."""
+        names = list(self.platforms)
+        width = max([len("from \\ to")] + [len(n) for n in names])
+        cell_w = max(8, max(len(n) for n in names))
+        lines = [
+            f"transfer matrix — fast_1 uplift (warm − cold), "
+            f"{len(names)} platforms, {len(self.legs)} pairs"
+            + (f", {self.n_failed} failed" if self.n_failed else ""),
+        ]
+        header = "from \\ to".ljust(width) + "  " + "  ".join(
+            n.rjust(cell_w) for n in names)
+        lines.append(header)
+        lines.append("-" * len(header))
+        for src in names:
+            row = src.ljust(width) + "  " + "  ".join(
+                self._cell(src, dst).rjust(cell_w) for dst in names)
+            lines.append(row)
+        return "\n".join(lines)
+
+    def heatmap_markdown(self) -> str:
+        """The same heat-map as a GitHub-flavored markdown table."""
+        names = list(self.platforms)
+        lines = ["| from \\ to | " + " | ".join(names) + " |",
+                 "|---" * (len(names) + 1) + "|"]
+        for src in names:
+            cells = " | ".join(self._cell(src, dst) for dst in names)
+            lines.append(f"| **{src}** | {cells} |")
+        return "\n".join(lines)
+
+
+def run_transfer_matrix(workloads: Sequence[Workload],
+                        platforms: Optional[Sequence[str]] = None, *,
+                        loop: Optional[LoopConfig] = None,
+                        cache: Optional[VerificationCache] = None,
+                        max_workers: int = 4,
+                        timeout_s: Optional[float] = None,
+                        log_path: Optional[Union[str, Path]] = None,
+                        resume: bool = True) -> TransferMatrix:
+    """Run the §6.2 transfer sweep over every ordered platform pair.
+
+    Args:
+        workloads: KernelBench workloads, shared by every leg.
+        platforms: platform names to cross (≥ 2); defaults to every
+            registered platform (:func:`repro.platforms.available_platforms`).
+        loop: base loop configuration; ``platform`` / ``use_reference`` /
+            ``transfer_from`` are overridden per leg.
+        cache: shared verification cache for ALL legs (open a persistent
+            one with ``VerificationCache.open`` to share across processes
+            and reruns); a fresh in-memory cache when omitted.
+        max_workers / timeout_s: sizing of the ONE worker pool every
+            campaign leg runs on.
+        log_path / resume: one JSONL event log shared by every leg
+            (platform- and transfer_from-tagged); resuming skips whatever
+            legs already finished.
+
+    Returns:
+        A :class:`TransferMatrix` whose ``legs`` cover exactly
+        ``all_pairs(platforms)``. Per-leg failures are recorded, never
+        raised.
+
+    Base campaigns run first, one per platform — each is reused as the
+    source leg of every pair it feeds and the cold leg of every pair that
+    targets it — then the N·(N−1) warm legs.
+    """
+    names = sorted(platforms) if platforms is not None \
+        else available_platforms()
+    if len(names) < 2:
+        raise ValueError(f"transfer matrix needs >= 2 platforms, got {names}")
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate platforms in {names}")
+    base = loop or LoopConfig()
+    cache = cache if cache is not None else VerificationCache()
+    sched = Scheduler(max_workers=max_workers, timeout_s=timeout_s)
+    common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
+                  log_path=log_path, resume=resume, scheduler=sched)
+
+    # Phase 1 — one base campaign per platform: source AND cold leg at once.
+    campaigns: Dict[str, CampaignResult] = {}
+    hints: Dict[str, Dict[str, Dict[str, Any]]] = {}
+    refs: Dict[str, Dict[str, Tuple[str, str]]] = {}
+    errors: Dict[str, str] = {}
+    for name in names:
+        try:
+            plat = resolve_platform(name)
+            result = run_campaign(
+                workloads,
+                dataclasses.replace(base, platform=plat.name,
+                                    use_reference=False, transfer_from=None),
+                **common)
+            campaigns[name] = result
+            hints[name] = harvest_hints(result)
+            refs[name] = reference_sources(result, plat.name)
+        except Exception as exc:  # noqa: BLE001 — isolate per platform
+            errors[name] = f"{type(exc).__name__}: {exc}"
+
+    # Phase 2 — warm legs for every ordered pair.
+    legs: Dict[Tuple[str, str], MatrixLeg] = {}
+    for src, dst in all_pairs(names):
+        fail = errors.get(src) or errors.get(dst)
+        if fail:
+            legs[(src, dst)] = MatrixLeg(src, dst, error=fail)
+            continue
+        try:
+            dst_plat = resolve_platform(dst)
+            warm = run_campaign(
+                workloads,
+                dataclasses.replace(base, platform=dst_plat.name,
+                                    use_reference=True, transfer_from=src),
+                agent_factory=lambda: TemplateSearchBackend(
+                    platform=dst_plat, reference_hints=hints[src]),
+                **common)
+            sweep = TransferSweepResult(
+                from_platform=src, to_platform=dst, source=campaigns[src],
+                cold=campaigns[dst], warm=warm, hints=hints[src],
+                references=refs[src],
+                log_path=Path(log_path) if log_path else None)
+            legs[(src, dst)] = MatrixLeg(src, dst, sweep=sweep)
+        except Exception as exc:  # noqa: BLE001 — isolate per leg
+            legs[(src, dst)] = MatrixLeg(
+                src, dst, error=f"{type(exc).__name__}: {exc}")
+
+    return TransferMatrix(platforms=names, legs=legs, cache=cache,
+                          log_path=Path(log_path) if log_path else None)

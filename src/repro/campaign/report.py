@@ -7,7 +7,7 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, Iterable, List, Optional
 
-from repro.campaign.events import result_from_dict
+from repro.campaign.events import normalize_loop, result_from_dict
 from repro.core.metrics import fast_p_curve, state_histogram
 from repro.core.states import EvalResult, ExecutionState
 
@@ -21,8 +21,8 @@ def distinct_loop_configs(events: Iterable[Dict[str, Any]]
     for ev in events:
         if ev.get("event") in ("workload_done", "workload_error") \
                 and ev.get("loop") is not None:
-            seen.setdefault(json.dumps(ev["loop"], sort_keys=True),
-                            ev["loop"])
+            loop = normalize_loop(ev["loop"])
+            seen.setdefault(json.dumps(loop, sort_keys=True), loop)
     return list(seen.values())
 
 
@@ -45,7 +45,8 @@ def report_from_events(events: Iterable[Dict[str, Any]],
     cache_stats = None
     for ev in events:
         if ev.get("event") in ("workload_done", "workload_error"):
-            if loop is None or ev.get("loop") == loop:
+            if loop is None or \
+                    normalize_loop(ev.get("loop")) == normalize_loop(loop):
                 terminal[ev["workload"]] = ev
         elif ev.get("event") == "campaign_done":
             cache_stats = ev.get("cache")

@@ -101,10 +101,14 @@ class Campaign:
     def __init__(self, workloads: Sequence[Workload], cfg: CampaignConfig,
                  *, cache: Optional[VerificationCache] = None,
                  agent_factory: Optional[Callable[[], Any]] = None,
-                 analyzer_factory: Optional[Callable[[], Any]] = None):
+                 analyzer_factory: Optional[Callable[[], Any]] = None,
+                 scheduler: Optional[Scheduler] = None):
         self.workloads = list(workloads)
         self.cfg = cfg
         self.cache = cache if cache is not None else VerificationCache()
+        # an injected scheduler lets several campaigns (e.g. every leg of a
+        # transfer matrix) share one worker-pool/timeout policy
+        self.scheduler = scheduler
         plat = cfg.loop.platform
         self.agent_factory = agent_factory or (
             lambda: TemplateSearchBackend(platform=plat))
@@ -153,6 +157,10 @@ class Campaign:
     # -- campaign ----------------------------------------------------------
 
     def run(self) -> CampaignResult:
+        """Execute the campaign: resume-skip finished workloads, fan the
+        rest over the worker pool, journal every iteration and terminal
+        event. Returns a CampaignResult with one WorkloadRun per workload
+        in input order."""
         done = self._load_previous()
         by_name = {wl.name: wl for wl in self.workloads}
         runs: Dict[str, WorkloadRun] = {}
@@ -168,7 +176,8 @@ class Campaign:
             # campaign's results.
             if name not in by_name or ev.get("event") != "workload_done":
                 continue
-            if ev.get("loop") != loop_dict:
+            if ev_mod.normalize_loop(ev.get("loop")) != \
+                    ev_mod.normalize_loop(loop_dict):
                 continue
             if not _same_io(ev.get("io"), verif_mod.io_signature(
                     by_name[name])):
@@ -218,8 +227,9 @@ class Campaign:
                     })
 
         if todo:
-            sched = Scheduler(max_workers=self.cfg.max_workers,
-                              timeout_s=self.cfg.timeout_s)
+            sched = self.scheduler or Scheduler(
+                max_workers=self.cfg.max_workers,
+                timeout_s=self.cfg.timeout_s)
             sched.run([(wl.name, (lambda wl=wl: self._run_one(wl)))
                        for wl in todo], on_result=record)
 
@@ -252,12 +262,35 @@ def run_campaign(workloads: Sequence[Workload],
                  log_path: Optional[Union[str, Path]] = None,
                  resume: bool = True,
                  agent_factory: Optional[Callable[[], Any]] = None,
-                 analyzer_factory: Optional[Callable[[], Any]] = None
+                 analyzer_factory: Optional[Callable[[], Any]] = None,
+                 scheduler: Optional[Scheduler] = None
                  ) -> CampaignResult:
     """One-call campaign: the concurrent, cached replacement for
-    ``run_suite`` that benchmarks and examples build on."""
+    ``run_suite`` that benchmarks and examples build on.
+
+    Args:
+        workloads: the KernelBench workloads to synthesize for.
+        loop: refinement-loop configuration (platform, iterations, seed);
+            defaults to ``LoopConfig()``.
+        cache: shared :class:`VerificationCache`; a fresh in-memory one per
+            call when omitted.
+        max_workers / timeout_s: worker-pool width and per-workload timeout
+            (ignored when ``scheduler`` is injected).
+        log_path: JSONL event-log path; enables journaling and resume.
+        resume: skip workloads whose terminal event (same loop config and io
+            signature) is already in the log.
+        agent_factory / analyzer_factory: per-workload builders for agent F
+            and agent G; defaults are the offline platform-aware backends.
+        scheduler: an existing :class:`Scheduler` to run on — lets several
+            campaigns share one worker-pool policy (transfer matrix).
+
+    Returns:
+        A :class:`CampaignResult` with one :class:`WorkloadRun` per
+        workload, in input order.
+    """
     cfg = CampaignConfig(loop=loop or LoopConfig(), max_workers=max_workers,
                          timeout_s=timeout_s, log_path=log_path,
                          resume=resume)
     return Campaign(workloads, cfg, cache=cache, agent_factory=agent_factory,
-                    analyzer_factory=analyzer_factory).run()
+                    analyzer_factory=analyzer_factory,
+                    scheduler=scheduler).run()

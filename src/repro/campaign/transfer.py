@@ -25,6 +25,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.campaign.cache import VerificationCache
 from repro.campaign.runner import CampaignResult, run_campaign
+from repro.campaign.scheduler import Scheduler
 from repro.core import transfer as core_transfer
 from repro.core.metrics import fast_p
 from repro.core.refinement import LoopConfig
@@ -152,38 +153,68 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
                        max_workers: int = 4,
                        timeout_s: Optional[float] = None,
                        log_path: Optional[Union[str, Path]] = None,
-                       resume: bool = True) -> TransferSweepResult:
+                       resume: bool = True,
+                       scheduler: Optional[Scheduler] = None
+                       ) -> TransferSweepResult:
     """Run the §6.2 transfer experiment between two registered platforms.
 
-    ``loop`` is the base configuration (iterations, profiling, seed); its
-    ``platform``/``use_reference`` fields are overridden per leg. One cache
-    and one event log serve all three campaigns; resuming an interrupted
-    sweep skips whatever legs already finished.
+    Args:
+        workloads: KernelBench workloads, shared by all three legs.
+        from_platform / to_platform: source and target (name or Platform);
+            they must be distinct — transferring a platform's own references
+            back onto itself is a degenerate experiment (the "warm" leg
+            would re-measure the source campaign), so it raises ValueError.
+        loop: base configuration (iterations, profiling, seed); its
+            ``platform``/``use_reference``/``transfer_from`` fields are
+            overridden per leg.
+        cache / scheduler: shared verification cache and (optional) shared
+            worker pool — one of each serves all three campaigns.
+        max_workers / timeout_s / log_path / resume: as in
+            :func:`repro.campaign.run_campaign`; all three legs journal
+            into ONE event log, and resuming an interrupted sweep skips
+            whatever legs already finished.
+
+    Returns:
+        A :class:`TransferSweepResult` (source/cold/warm campaigns, the
+        harvested hints and rendered references, per-level uplift report).
     """
     src = resolve_platform(from_platform)
     dst = resolve_platform(to_platform)
+    if src.name == dst.name:
+        raise ValueError(
+            f"transfer sweep needs two distinct platforms, got {src.name!r} "
+            "as both source and target — a same-platform sweep would just "
+            "re-run the source campaign and report zero uplift. Pick a "
+            "different --transfer-from/--platform pair (see "
+            "repro.platforms.available_platforms()).")
     base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
     common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
-                  log_path=log_path, resume=resume)
+                  log_path=log_path, resume=resume, scheduler=scheduler)
 
     # Leg 1: source-platform campaign (the reference-producing run).
     source = run_campaign(
-        workloads, dataclasses.replace(base, platform=src.name), **common)
+        workloads,
+        dataclasses.replace(base, platform=src.name, transfer_from=None),
+        **common)
     hints = harvest_hints(source)
     references = reference_sources(source, src.name)
 
     # Leg 2: cold target run — no reference of any kind.
     cold = run_campaign(
         workloads,
-        dataclasses.replace(base, platform=dst.name, use_reference=False),
+        dataclasses.replace(base, platform=dst.name, use_reference=False,
+                            transfer_from=None),
         **common)
 
     # Leg 3: warm target run — harvested hints injected through the
     # agent's reference path (REFERENCE_HINTS extended per workload).
+    # transfer_from tags the loop config so warm legs fed from different
+    # sources stay distinguishable in a shared event log (matrix runs).
     warm = run_campaign(
         workloads,
-        dataclasses.replace(base, platform=dst.name, use_reference=True),
+        dataclasses.replace(base, platform=dst.name, use_reference=True,
+                            transfer_from=src.name),
         agent_factory=lambda: TemplateSearchBackend(
             platform=dst, reference_hints=hints),
         **common)

@@ -11,7 +11,7 @@ degrees of freedom a kernel engineer (or the paper's LLM) controls:
 ``materialize`` turns a candidate into a callable (Pallas interpret-mode on
 CPU / real kernel on TPU); ``model_time`` is the analytic roofline estimate
 used as the performance signal (wall-clock of interpret mode measures the
-interpreter, not the kernel — DESIGN.md §7.2). Every performance/legality
+interpreter, not the kernel — DESIGN.md §8.2). Every performance/legality
 judgement is parameterized by a :class:`repro.platforms.Platform` — the
 hardware target is an explicit axis, not a module constant (DESIGN.md §1).
 """
@@ -188,9 +188,19 @@ def _naive_softmax(x):
     return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
 
 
-def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
+def materialize(cand: Candidate, *, interpret: bool = True,
+                platform: PlatformLike = None) -> Callable:
+    """Turn a candidate into a callable kernel.
+
+    ``platform`` (name, instance, or None for the default target) selects
+    the backend compiler params the underlying Pallas call is built with
+    (``kernels.ops.compiler_params_for``): TPU targets get Mosaic params,
+    other targets get none. Interpret-mode numerics are identical either
+    way; on real hardware the compiled artifact differs.
+    """
     p = cand.params
     op = cand.op
+    plat = None if platform is None else resolve_platform(platform).name
     if op == "swish":
         def fn(x):
             r, l = x.shape
@@ -200,7 +210,7 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
                     f"({p['block_rows']},{p['block_lanes']})")
             return _sw.swish(x, block_rows=p["block_rows"],
                              block_lanes=p["block_lanes"],
-                             interpret=interpret)
+                             interpret=interpret, platform=plat)
         return fn
     if op == "softmax":
         def fn(x):
@@ -209,14 +219,14 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
             if x.shape[0] % p["block_rows"]:
                 raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
             return _sm.softmax(x, block_rows=p["block_rows"],
-                               interpret=interpret)
+                               interpret=interpret, platform=plat)
         return fn
     if op == "rmsnorm":
         def fn(x, g):
             if x.shape[0] % p["block_rows"]:
                 raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
             return _rn.rmsnorm(x, g, block_rows=p["block_rows"],
-                               interpret=interpret)
+                               interpret=interpret, platform=plat)
         return fn
     if op == "matmul":
         def fn(a, b):
@@ -227,7 +237,7 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
                     f"matmul tiles {p} do not divide {(m, k, n)}")
             return _mm.matmul(a, b, block_m=p["block_m"],
                               block_n=p["block_n"], block_k=p["block_k"],
-                              interpret=interpret)
+                              interpret=interpret, platform=plat)
         return fn
     if op == "swiglu":
         def fn(g, u):
@@ -238,7 +248,7 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
                 raise ValueError(f"swiglu tiles {p} do not divide {g.shape}")
             return _sg.swiglu_act(g, u, block_rows=p["block_rows"],
                                   block_cols=p["block_cols"],
-                                  interpret=interpret)
+                                  interpret=interpret, platform=plat)
         return fn
     if op == "attention":
         def fn(q, k, v):
@@ -260,7 +270,7 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
             return _fa.flash_attention(q, k, v, causal=True,
                                        block_q=p["block_q"],
                                        block_k=p["block_k"],
-                                       interpret=interpret)
+                                       interpret=interpret, platform=plat)
         return fn
     if op == "ssd":
         def fn(x, a, b, c):
@@ -287,7 +297,7 @@ def materialize(cand: Candidate, *, interpret: bool = True) -> Callable:
                 raise ValueError(f"xent tiles {p} do not divide {(t, v)}")
             return _xe.softmax_xent(logits, labels, block_t=p["block_t"],
                                     block_v=p["block_v"],
-                                    interpret=interpret)
+                                    interpret=interpret, platform=plat)
         return fn
     raise KeyError(f"unknown op family {op!r}")
 

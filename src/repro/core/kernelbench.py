@@ -1,7 +1,7 @@
 """KernelBench-JAX: the workload suite KForge is evaluated on.
 
 Mirrors the paper's three levels with problems drawn from the assigned
-architectures (DESIGN.md §6). Softmax-family workloads use large-magnitude
+architectures (DESIGN.md §7). Softmax-family workloads use large-magnitude
 inputs so numerically-naive candidates genuinely fail (the functional pass
 has real work to do), exactly like fp32 overflow on device.
 """

@@ -55,12 +55,21 @@ class RefinementOutcome:
 
 @dataclasses.dataclass
 class LoopConfig:
+    """Configuration of one refinement loop (and the campaign event-log
+    discriminator: resume only skips workloads whose terminal event was
+    written under an identical config)."""
     num_iterations: int = 5          # paper: num_iterations=5
     use_reference: bool = False      # reference-transfer configuration (§6.2)
     use_profiling: bool = False      # profiling-information configuration (§5.2)
     single_shot: bool = False        # one generation, no refinement
     seed: int = 0
     platform: str = "tpu_v5e"        # hardware target (repro.platforms)
+    # Source platform of the references a warm transfer leg injects (None
+    # outside transfer sweeps). The loop itself never reads it, but it keeps
+    # warm legs fed from different sources distinguishable in a shared event
+    # log — without it, resume would let (A -> B) warm results masquerade as
+    # (C -> B) warm results, since both run on B with use_reference=True.
+    transfer_from: Optional[str] = None
 
 
 def run_workload(wl: Workload, cfg: LoopConfig, *,

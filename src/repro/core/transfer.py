@@ -8,7 +8,9 @@ synthesis. Two reference flavours exist here:
 * a *harvested* reference — the best verified candidate from a campaign on
   another registered platform (:func:`strategy_hints`,
   :func:`candidate_reference_source`), which is what the transfer sweep in
-  :mod:`repro.campaign.transfer` injects.
+  :mod:`repro.campaign.transfer` injects — and what the all-pairs matrix
+  (:mod:`repro.campaign.matrix`) harvests once per platform and re-injects
+  into every warm leg that platform feeds.
 
 Either way the transferable part is the *strategy* (online softmax, fusion,
 matrix form); the tiling must be re-derived for the target platform —

@@ -123,7 +123,7 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
     # -- generation state handled by the caller; here candidate exists -------
     if fn is None:
         try:
-            fn = cand_mod.materialize(candidate)
+            fn = cand_mod.materialize(candidate, platform=platform)
         except Exception as exc:  # noqa: BLE001
             return EvalResult(ExecutionState.GENERATION_FAILURE,
                               error=f"{type(exc).__name__}: {exc}")

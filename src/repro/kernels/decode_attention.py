@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 NEG_INF = -1e30
 _LANES = 128
@@ -63,10 +63,12 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
         out_ref[0, 0, :, :] = (acc_ref[...] / l).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "interpret", "platform"))
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, scale: float | None = None,
-                     block_k: int = 512, interpret: bool = True) -> jax.Array:
+                     block_k: int = 512, interpret: bool = True,
+                     platform: str | None = None) -> jax.Array:
     """q (B, 1, H, D); caches (B, S, KV, D); lengths (B,). Returns (B,1,H,D)."""
     b, one, h, d = q.shape
     _, s, kv, _ = k_cache.shape
@@ -93,8 +95,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             pltpu.VMEM((g, _LANES), jnp.float32),
             pltpu.VMEM((g, _LANES), jnp.float32),
         ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths2, qg, k_cache, v_cache)
     return out.reshape(b, 1, h, d)

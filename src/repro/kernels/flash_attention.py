@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 NEG_INF = -1e30
 _LANES = 128
@@ -79,11 +79,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret", "platform"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: float | None = None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = True,
+                    platform: str | None = None) -> jax.Array:
     """q (B, Sq, H, D); k/v (B, Sk, KV, D); KV divides H. Returns (B, Sq, H, D)."""
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
@@ -114,8 +115,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, _LANES), jnp.float32),
             pltpu.VMEM((block_q, _LANES), jnp.float32),
         ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel",
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(q, k, v)

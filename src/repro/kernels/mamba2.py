@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
@@ -38,9 +38,10 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, chunk: int):
     jax.lax.fori_loop(0, chunk, step, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "platform"))
 def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
-        chunk: int = 256, interpret: bool = True) -> jax.Array:
+        chunk: int = 256, interpret: bool = True,
+        platform: str | None = None) -> jax.Array:
     """x (B,T,H,P); a (B,T,H); b/c (B,T,H,N). Returns y (B,T,H,P) f32."""
     bsz, t, h, p = x.shape
     n = b.shape[-1]
@@ -59,7 +60,7 @@ def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
                                lambda ib, ih, ic: (ib, ic, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, t, h, p), jnp.float32),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, a, b, c)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
@@ -28,10 +28,11 @@ def _matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "interpret"))
+                                             "interpret", "platform"))
 def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
            block_n: int = 128, block_k: int = 128,
-           interpret: bool = True) -> jax.Array:
+           interpret: bool = True,
+           platform: str | None = None) -> jax.Array:
     """C = A @ B with (block_m, block_n, block_k) VMEM tiles.
 
     A (M, K), B (K, N); M/N/K must be divisible by the block sizes
@@ -53,7 +54,7 @@ def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

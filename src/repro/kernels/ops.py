@@ -14,6 +14,12 @@ Every op takes ``impl`` ∈ {"auto", "pallas", "xla", "ref"}:
 Training gradients: :func:`attention` wraps the Pallas forward in a
 ``jax.custom_vjp`` whose backward recomputes via the chunked XLA
 implementation (flash-style recompute; no S×S residuals are saved).
+
+Every Pallas-backed op also takes ``platform`` (a registered platform name,
+default ``None`` = the registry default target): backend compiler params
+are built per platform via :func:`compiler_params_for`, so retargeting a
+kernel to ``gpu_sim``/``metal_m2`` stops it from silently inheriting the
+TPU Mosaic params.
 """
 from __future__ import annotations
 
@@ -36,6 +42,33 @@ def tpu_compiler_params(**kwargs):
     cls = getattr(_pltpu, "CompilerParams", None) \
         or getattr(_pltpu, "TPUCompilerParams")
     return cls(**kwargs)
+
+
+def compiler_params_for(platform=None, **kwargs):
+    """Backend compiler params for ``pallas_call`` on one hardware target.
+
+    ``platform`` is a registered platform name (or ``None`` for the default
+    target). Targets with a compiler hook (the TPUs) get their real backend
+    params (Mosaic ``dimension_semantics`` etc.); targets without one
+    (``gpu_sim``, ``metal_m2``) get ``None`` so ``pallas_call`` receives no
+    compiler params at all — instead of silently inheriting the TPU ones.
+
+    Names (not :class:`~repro.platforms.Platform` instances) keep this
+    usable as a ``jax.jit`` static argument, which is how the kernel
+    modules thread it through.
+    """
+    from repro.platforms import resolve_platform
+    p = resolve_platform(platform)
+    if p.compiler_params_fn is None:
+        return None
+    return p.compiler_params(**kwargs)
+
+
+def _platform_name(platform) -> Optional[str]:
+    """Reduce a PlatformLike to the hashable name the kernels jit over."""
+    if platform is None or isinstance(platform, str):
+        return platform
+    return platform.name
 
 
 from repro.kernels import ref  # noqa: E402
@@ -79,18 +112,20 @@ def _pad_rows(x: jax.Array, mult: int):
 # ---------------------------------------------------------------------------
 
 
-def rmsnorm(x, gamma, *, eps: float = 1e-5, impl: str = "auto"):
+def rmsnorm(x, gamma, *, eps: float = 1e-5, impl: str = "auto",
+            platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         shape = x.shape
         x2 = x.reshape(-1, shape[-1])
         x2, t = _pad_rows(x2, 256)
-        out = _rmsnorm.rmsnorm(x2, gamma, eps=eps, interpret=_interpret())
+        out = _rmsnorm.rmsnorm(x2, gamma, eps=eps, interpret=_interpret(),
+                               platform=_platform_name(platform))
         return out[:t].reshape(shape)
     return ref.rmsnorm(x, gamma, eps)
 
 
-def swish(x, *, impl: str = "auto"):
+def swish(x, *, impl: str = "auto", platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         shape = x.shape
@@ -98,23 +133,25 @@ def swish(x, *, impl: str = "auto"):
         n = x2.shape[0]
         pad = (-n) % (8 * 512)
         x2 = jnp.pad(x2, (0, pad)).reshape(-1, 512)
-        out = _swish.swish(x2, interpret=_interpret())
+        out = _swish.swish(x2, interpret=_interpret(),
+                           platform=_platform_name(platform))
         return out.reshape(-1)[:n].reshape(shape)
     return ref.swish(x)
 
 
-def softmax(x, *, impl: str = "auto"):
+def softmax(x, *, impl: str = "auto", platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         shape = x.shape
         x2 = x.reshape(-1, shape[-1])
         x2, t = _pad_rows(x2, 128)
-        out = _softmax.softmax(x2, interpret=_interpret())
+        out = _softmax.softmax(x2, interpret=_interpret(),
+                               platform=_platform_name(platform))
         return out[:t].reshape(shape)
     return ref.softmax(x)
 
 
-def swiglu_act(gate, up, *, impl: str = "auto"):
+def swiglu_act(gate, up, *, impl: str = "auto", platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         shape = gate.shape
@@ -124,12 +161,14 @@ def swiglu_act(gate, up, *, impl: str = "auto"):
         u2, _ = _pad_rows(u2, 128)
         f = shape[-1]
         bc = 512 if f % 512 == 0 else f
-        out = _swiglu.swiglu_act(g2, u2, block_cols=bc, interpret=_interpret())
+        out = _swiglu.swiglu_act(g2, u2, block_cols=bc, interpret=_interpret(),
+                                 platform=_platform_name(platform))
         return out[:t].reshape(shape)
     return ref.swish(gate) * up
 
 
-def matmul(a, b, *, impl: str = "auto", block_m=128, block_n=128, block_k=128):
+def matmul(a, b, *, impl: str = "auto", block_m=128, block_n=128,
+           block_k=128, platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         m, k = a.shape
@@ -138,16 +177,19 @@ def matmul(a, b, *, impl: str = "auto", block_m=128, block_n=128, block_k=128):
         a2 = jnp.pad(a, ((0, pm), (0, pk)))
         b2 = jnp.pad(b, ((0, pk), (0, pn)))
         out = _matmul.matmul(a2, b2, block_m=block_m, block_n=block_n,
-                             block_k=block_k, interpret=_interpret())
+                             block_k=block_k, interpret=_interpret(),
+                             platform=_platform_name(platform))
         return out[:m, :n]
     return ref.matmul(a, b)
 
 
-def rope(x, positions, *, theta: float = 10_000.0, impl: str = "auto"):
+def rope(x, positions, *, theta: float = 10_000.0, impl: str = "auto",
+         platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas" and x.shape[1] % 256 == 0:
         return _rope.rope(x, positions.astype(jnp.int32), theta=theta,
-                          interpret=_interpret())
+                          interpret=_interpret(),
+                          platform=_platform_name(platform))
     return ref.rope(x, positions, theta)
 
 
@@ -234,17 +276,17 @@ def xla_chunked_attention(q, k, v, *, causal: bool = True,
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _pallas_attention(q, k, v, causal, scale):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _pallas_attention(q, k, v, causal, scale, platform):
     return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
-                               interpret=_interpret())
+                               interpret=_interpret(), platform=platform)
 
 
-def _pallas_attention_fwd(q, k, v, causal, scale):
-    return _pallas_attention(q, k, v, causal, scale), (q, k, v)
+def _pallas_attention_fwd(q, k, v, causal, scale, platform):
+    return _pallas_attention(q, k, v, causal, scale, platform), (q, k, v)
 
 
-def _pallas_attention_bwd(causal, scale, res, g):
+def _pallas_attention_bwd(causal, scale, platform, res, g):
     q, k, v = res
     # Flash-style recompute backward via the chunked XLA implementation.
     _, vjp = jax.vjp(
@@ -264,13 +306,14 @@ TRAIN_ATTN = "chunked"  # full | chunked (xla self-attention strategy)
 
 
 def attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
-              impl: str = "auto", chunk: int = 1024):
+              impl: str = "auto", chunk: int = 1024, platform=None):
     """q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D). Differentiable."""
     impl = resolve_impl(impl)
     if impl == "pallas":
         d = q.shape[-1]
         return _pallas_attention(q, k, v, causal,
-                                 scale if scale is not None else d ** -0.5)
+                                 scale if scale is not None else d ** -0.5,
+                                 _platform_name(platform))
     if impl == "xla_full":
         return xla_full_attention(q, k, v, causal=causal, scale=scale)
     if impl == "xla_chunked":
@@ -286,12 +329,14 @@ def attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *,
-                     scale: Optional[float] = None, impl: str = "auto"):
+                     scale: Optional[float] = None, impl: str = "auto",
+                     platform=None):
     """One-token attention vs a KV cache. q (B,1,H,D), caches (B,S,KV,D)."""
     impl = resolve_impl(impl)
     if impl == "pallas" and k_cache.shape[1] % 512 == 0:
         return _dec.decode_attention(q, k_cache, v_cache, lengths,
-                                     scale=scale, interpret=_interpret())
+                                     scale=scale, interpret=_interpret(),
+                                     platform=_platform_name(platform))
     return ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
 
 
@@ -300,21 +345,24 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
 # ---------------------------------------------------------------------------
 
 
-def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 128):
+def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 128,
+         platform=None):
     """RWKV6 over a full sequence; returns (B,T,H,D) f32 outputs only."""
     impl = resolve_impl(impl)
     t = r.shape[1]
     if impl == "pallas" and t % chunk == 0:
-        return _rwkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret())
+        return _rwkv6.wkv6(r, k, v, w, u, chunk=chunk, interpret=_interpret(),
+                           platform=_platform_name(platform))
     out, _ = ref.wkv6(r, k, v, w, u)
     return out
 
 
-def ssd(x, a, b, c, *, impl: str = "auto", chunk: int = 256):
+def ssd(x, a, b, c, *, impl: str = "auto", chunk: int = 256, platform=None):
     impl = resolve_impl(impl)
     t = x.shape[1]
     if impl == "pallas" and t % chunk == 0:
-        return _mamba2.ssd(x, a, b, c, chunk=chunk, interpret=_interpret())
+        return _mamba2.ssd(x, a, b, c, chunk=chunk, interpret=_interpret(),
+                           platform=_platform_name(platform))
     y, _ = ref.ssd(x, a, b, c)
     return y
 
@@ -500,10 +548,11 @@ def xla_chunked_xent(logits_fn, x, labels, vocab_w, *, chunk_s: int = 512):
     return total, count
 
 
-def softmax_xent(logits, labels, *, impl: str = "auto"):
+def softmax_xent(logits, labels, *, impl: str = "auto", platform=None):
     impl = resolve_impl(impl)
     if impl == "pallas":
         t, v = logits.shape
         if t % 128 == 0 and v % 2048 == 0:
-            return _xent.softmax_xent(logits, labels, interpret=_interpret())
+            return _xent.softmax_xent(logits, labels, interpret=_interpret(),
+                                      platform=_platform_name(platform))
     return ref.softmax_xent(logits, labels)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _rmsnorm_kernel(x_ref, g_ref, out_ref, *, eps: float):
@@ -18,9 +18,11 @@ def _rmsnorm_kernel(x_ref, g_ref, out_ref, *, eps: float):
     out_ref[...] = (x * inv * g_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps",
+                                             "interpret", "platform"))
 def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
-            block_rows: int = 256, interpret: bool = True) -> jax.Array:
+            block_rows: int = 256, interpret: bool = True,
+            platform: str | None = None) -> jax.Array:
     """x (T, D), gamma (D,). T divisible by block_rows (wrapper pads)."""
     t, d = x.shape
     assert t % block_rows == 0, (t, block_rows)
@@ -34,7 +36,7 @@ def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel",)),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, g2)

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _rope_kernel(x_ref, pos_ref, out_ref, *, theta: float, half: int):
@@ -22,9 +22,11 @@ def _rope_kernel(x_ref, pos_ref, out_ref, *, theta: float, half: int):
     out_ref[0, :, 0, :] = out.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("theta", "block_s", "interpret"))
+@functools.partial(jax.jit, static_argnames=("theta", "block_s",
+                                             "interpret", "platform"))
 def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
-         block_s: int = 256, interpret: bool = True) -> jax.Array:
+         block_s: int = 256, interpret: bool = True,
+         platform: str | None = None) -> jax.Array:
     """x (B, S, H, D); positions (B, S) int32. S divisible by block_s."""
     b, s, h, d = x.shape
     assert s % block_s == 0 and d % 2 == 0
@@ -38,7 +40,7 @@ def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
         out_specs=pl.BlockSpec((1, block_s, 1, d),
                                lambda ib, ih, isq: (ib, isq, ih, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x, positions)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, s_ref, *,
@@ -45,10 +45,11 @@ def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, s_ref, *,
     jax.lax.fori_loop(0, chunk, step, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "platform"))
 def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
          u: jax.Array, *, chunk: int = 128,
-         interpret: bool = True) -> jax.Array:
+         interpret: bool = True,
+         platform: str | None = None) -> jax.Array:
     """r/k/v/w (B, T, H, D); u (H, D); T divisible by chunk. Returns (B,T,H,D) f32."""
     b, t, h, d = r.shape
     assert t % chunk == 0
@@ -62,7 +63,7 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_specs=seq_spec,
         out_shape=jax.ShapeDtypeStruct((b, t, h, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

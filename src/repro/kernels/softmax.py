@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _softmax_kernel(x_ref, out_ref):
@@ -18,9 +18,11 @@ def _softmax_kernel(x_ref, out_ref):
     out_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "platform"))
 def softmax(x: jax.Array, *, block_rows: int = 128,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool = True,
+            platform: str | None = None) -> jax.Array:
     """x (T, D) -> softmax over D. T divisible by block_rows."""
     t, d = x.shape
     assert t % block_rows == 0
@@ -30,7 +32,7 @@ def softmax(x: jax.Array, *, block_rows: int = 128,
         in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel",)),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)

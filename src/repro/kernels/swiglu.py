@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _swiglu_kernel(g_ref, u_ref, out_ref):
@@ -22,9 +22,10 @@ def _swiglu_kernel(g_ref, u_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_cols",
-                                             "interpret"))
+                                             "interpret", "platform"))
 def swiglu_act(gate: jax.Array, up: jax.Array, *, block_rows: int = 128,
-               block_cols: int = 512, interpret: bool = True) -> jax.Array:
+               block_cols: int = 512, interpret: bool = True,
+               platform: str | None = None) -> jax.Array:
     """gate/up (T, F) -> silu(gate)*up, tile-divisible."""
     t, f = gate.shape
     assert gate.shape == up.shape
@@ -36,7 +37,7 @@ def swiglu_act(gate: jax.Array, up: jax.Array, *, block_rows: int = 128,
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(gate.shape, gate.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(gate, up)

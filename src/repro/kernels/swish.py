@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 
 def _swish_kernel(x_ref, out_ref):
@@ -24,9 +24,10 @@ def _swish_kernel(x_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "block_lanes",
-                                             "interpret"))
+                                             "interpret", "platform"))
 def swish(x: jax.Array, *, block_rows: int = 8, block_lanes: int = 512,
-          interpret: bool = True) -> jax.Array:
+          interpret: bool = True,
+          platform: str | None = None) -> jax.Array:
     """Elementwise swish on a 2D array (rows, lanes), tile-divisible."""
     r, l = x.shape
     assert r % block_rows == 0 and l % block_lanes == 0, (x.shape,)
@@ -36,7 +37,7 @@ def swish(x: jax.Array, *, block_rows: int = 8, block_lanes: int = 512,
         in_specs=[pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((block_rows, block_lanes), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ops import tpu_compiler_params
+from repro.kernels.ops import compiler_params_for
 
 NEG_INF = -1e30
 _LANES = 128
@@ -50,9 +50,11 @@ def _xent_kernel(logits_ref, labels_ref, loss_ref, m_ref, l_ref, g_ref, *,
         loss_ref[...] = (lse - g_ref[:, 0]).astype(loss_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "block_v", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v",
+                                             "interpret", "platform"))
 def softmax_xent(logits: jax.Array, labels: jax.Array, *, block_t: int = 128,
-                 block_v: int = 2048, interpret: bool = True) -> jax.Array:
+                 block_v: int = 2048, interpret: bool = True,
+                 platform: str | None = None) -> jax.Array:
     """logits (T, V), labels (T,) int32 -> per-token loss (T,) f32."""
     t, v = logits.shape
     assert t % block_t == 0 and v % block_v == 0
@@ -71,7 +73,7 @@ def softmax_xent(logits: jax.Array, labels: jax.Array, *, block_t: int = 128,
             pltpu.VMEM((block_t, _LANES), jnp.float32),
             pltpu.VMEM((block_t, _LANES), jnp.float32),
         ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compiler_params_for(
+            platform, dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits, labels)

@@ -93,11 +93,15 @@ class Platform:
         return min(aligned) if aligned else None
 
     def describe(self) -> str:
+        """One-line human-readable profile summary (used by CLI output)."""
+        fast = self.fast_mem_bytes / 2 ** 20
+        fast_s = f"{fast:.0f} MiB" if fast >= 1 else \
+            f"{self.fast_mem_bytes / 2 ** 10:.0f} KiB"
         return (f"{self.name}: {self.descriptor} — "
                 f"{self.peak_flops / 1e12:.0f} TFLOP/s, "
                 f"{self.hbm_bw / 1e9:.0f} GB/s HBM, "
                 f"align {self.matrix_align}, "
-                f"fast mem {self.fast_mem_bytes / 2**20:.0f} MiB")
+                f"fast mem {fast_s}")
 
 
 PlatformLike = Union[str, Platform, None]

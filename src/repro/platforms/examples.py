@@ -51,3 +51,23 @@ __global__ void elementwise_add_kernel(
   }
 }
 '''
+
+# Metal Shading Language variant (paper Appendix B) — the one-shot example
+# for the ``metal_m2`` target. Same parallel decomposition as the CUDA
+# kernel; the launch idiom is a compute pipeline dispatch over a 1-D grid,
+# with [[thread_position_in_grid]] playing blockIdx*blockDim+threadIdx.
+VECTOR_ADD_METAL = '''\
+#include <metal_stdlib>
+using namespace metal;
+
+kernel void elementwise_add_kernel(
+    device const float *a    [[buffer(0)]],
+    device const float *b    [[buffer(1)]],
+    device float *out        [[buffer(2)]],
+    constant uint &size      [[buffer(3)]],
+    uint idx                 [[thread_position_in_grid]]) {
+  if (idx < size) {
+    out[idx] = a[idx] + b[idx];
+  }
+}
+'''

@@ -1,11 +1,16 @@
 """Registered hardware targets.
 
-Three seed profiles (ISSUE 2):
+Four registered profiles:
 
 * ``tpu_v5e``  — the reproduction's historical target; its ``hw`` dict is
   byte-for-byte the old ``roofline.analysis.HW_V5E`` module constant.
 * ``tpu_v4``   — same ISA/idiom, different roofline ratios (more FLOPs,
   much more HBM bandwidth) so the memory/compute crossover moves.
+* ``metal_m2`` — an Apple-Metal-class unified-memory GPU (the paper's
+  second real platform): 8-wide ``simdgroup_matrix`` tiles, a 32 KiB
+  threadgroup-memory working set (128-capped block dims), no discrete
+  matrix unit (flat 2:1 matrix:vector ratio), MSL prompt idiom, and the
+  §7.2 elements-per-thread trick as its reference-landing hint.
 * ``gpu_sim``  — a simulated tensor-core-class GPU: 16-wide matrix tiles
   (vs the MXU's 128), a ~1 MiB shared-memory working set that makes the
   large TPU tile choices illegal, a 256 cap on single block dims, and a
@@ -14,6 +19,9 @@ Three seed profiles (ISSUE 2):
 
 New targets register with :func:`register_platform`; everything downstream
 (candidates, analyzer, verifier, prompts, campaigns) picks them up by name.
+The TPUs share a Mosaic ``compiler_params_fn``; ``metal_m2``/``gpu_sim``
+deliberately have none, so ``kernels.ops.compiler_params_for`` hands their
+``pallas_call`` no TPU compiler params.
 """
 from __future__ import annotations
 
@@ -28,6 +36,10 @@ _REGISTRY: Dict[str, Platform] = {}
 
 
 def register_platform(platform: Platform, *, overwrite: bool = False) -> Platform:
+    """Add a hardware target to the registry (returns it for chaining).
+
+    Raises ValueError on a duplicate name unless ``overwrite`` — tests use
+    overwrite to shadow a profile, production code never should."""
     if not overwrite and platform.name in _REGISTRY:
         raise ValueError(f"platform {platform.name!r} already registered")
     _REGISTRY[platform.name] = platform
@@ -35,6 +47,7 @@ def register_platform(platform: Platform, *, overwrite: bool = False) -> Platfor
 
 
 def get_platform(name: str) -> Platform:
+    """Registered platform by name; KeyError lists the available names."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -43,6 +56,8 @@ def get_platform(name: str) -> Platform:
 
 
 def available_platforms() -> List[str]:
+    """Sorted names of every registered platform (the CLI choices and the
+    default platform set of the transfer matrix)."""
     return sorted(_REGISTRY)
 
 
@@ -99,6 +114,37 @@ register_platform(Platform(
     oneshot_example=examples.VECTOR_ADD_PALLAS,
     constraints_note=TPU_CONSTRAINTS,
     compiler_params_fn=_tpu_compiler_params,
+))
+
+register_platform(Platform(
+    name="metal_m2",
+    descriptor="Apple Metal GPU (M2-class)",
+    # Unified-memory SoC: the GPU shares one LPDDR pool with the CPU, so
+    # "HBM" bandwidth/capacity are the unified-memory figures and there is
+    # no discrete-accelerator transfer link (link_bw is a PCIe-class floor
+    # so the collective roofline term stays finite, not a real fabric).
+    peak_flops=13.6e12,           # GPU ALU peak (fp16-rate), M2 Max-class
+    hbm_bw=400e9,                 # unified LPDDR5 memory bandwidth
+    link_bw=32e9,
+    hbm_bytes=96e9,               # whole unified pool is GPU-addressable
+    fast_mem_bytes=256 * 2 ** 10,  # 32 KiB threadgroup mem + register tiles
+    matrix_align=8,               # simdgroup_matrix fragments are 8x8
+    vector_align=32,              # SIMD-group width
+    max_tile=128,                 # past this no tile triple fits on-chip
+    vpu_ratio=2.0,                # no discrete matrix unit: simdgroup
+                                  # matmul is ~2x the scalar ALU rate
+    grid_step_overhead_s=1e-8,    # threadgroup dispatch
+    seq_step_latency_s=4e-7,
+    oneshot_example=examples.VECTOR_ADD_METAL,
+    constraints_note="Pay attention to threadgroup-memory working-set size "
+                     "(<= 32 KiB per threadgroup), simdgroup_matrix tile "
+                     "alignment (8x8), SIMD-group width (32) execution, "
+                     "elements-per-thread vectorization, and numerical "
+                     "stability for large-magnitude inputs.",
+    # The paper's §7.2 Metal case study: loop vectorization (8 elements per
+    # thread) is the idiomatic landing for transferred elementwise kernels —
+    # on this profile that is the block_rows axis.
+    reference_hints={"swish": {"block_rows": 8}},
 ))
 
 register_platform(Platform(

@@ -10,7 +10,7 @@ Collective bytes are not in cost_analysis — we parse the optimized HLO and
 sum result-shape bytes of every collective op.
 
 This module doubles as the "profiler" whose output the KForge
-performance-analysis agent G interprets (DESIGN.md §2).
+performance-analysis agent G interprets (DESIGN.md §3).
 """
 from __future__ import annotations
 

@@ -1,0 +1,336 @@
+"""Transfer-matrix engine (DESIGN.md §2): all-pairs enumeration, cache
+sharing, heat-map rendering with failed legs, the metal_m2 target, the
+same-platform transfer guard, and the --matrix CLI."""
+import dataclasses
+import json
+
+import pytest
+
+import repro.platforms as plat_mod
+from repro.campaign import (Campaign, CampaignConfig, MatrixLeg, Scheduler,
+                            VerificationCache, all_pairs, run_campaign,
+                            run_transfer_matrix, run_transfer_sweep)
+from repro.core import LoopConfig
+from repro.core import candidates as cand_mod
+from repro.core import verification as verif_mod
+from repro.core.synthesis import LLMBackend
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+from repro.kernels.ops import compiler_params_for
+
+
+def _tiny(name="T1/softmax", op="softmax", shape=(64, 512), scale=60.0,
+          level=1):
+    refs = {"softmax": ref.softmax, "swish": ref.swish}
+    return Workload(
+        name=name, level=level, op=op,
+        ref_fn=refs[op],
+        input_fn=lambda rng: {"x": randn(rng, shape, scale)},
+        input_shapes={"x": shape})
+
+
+# ---------------------------------------------------------------------------
+# All-pairs enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_all_pairs_matches_registry_contents():
+    names = plat_mod.available_platforms()
+    pairs = all_pairs(names)
+    assert len(pairs) == len(names) * (len(names) - 1)
+    assert len(set(pairs)) == len(pairs)                 # no duplicates
+    assert all(a != b for a, b in pairs)                 # no diagonal
+    assert {a for a, _ in pairs} == set(names)           # every source
+    assert {b for _, b in pairs} == set(names)           # every target
+    # deterministic order regardless of input order
+    assert all_pairs(reversed(names)) == pairs
+
+
+def test_matrix_requires_two_distinct_platforms():
+    wl = _tiny()
+    with pytest.raises(ValueError):
+        run_transfer_matrix([wl], ["tpu_v5e"])
+    with pytest.raises(ValueError):
+        run_transfer_matrix([wl], ["tpu_v5e", "tpu_v5e"])
+
+
+def test_matrix_legs_cover_all_ordered_pairs(tmp_path):
+    wls = [_tiny("T1/swish", op="swish", scale=1.0)]
+    names = ["gpu_sim", "metal_m2", "tpu_v5e"]
+    matrix = run_transfer_matrix(
+        wls, names, loop=LoopConfig(num_iterations=2), max_workers=2)
+    assert sorted(matrix.legs) == all_pairs(names)
+    assert matrix.n_failed == 0
+    for (src, dst), leg in matrix.legs.items():
+        assert leg.ok and leg.sweep.from_platform == src
+        assert leg.sweep.to_platform == dst
+        # base campaigns are shared: the (A -> B) source is the (B -> A) cold
+        assert leg.sweep.source is matrix.legs[(dst, src)].sweep.cold
+    rep = matrix.report()
+    assert rep["n_pairs"] == 6 and rep["n_failed"] == 0
+    assert set(rep["pairs"]) == {f"{a}->{b}" for a, b in all_pairs(names)}
+
+
+@pytest.mark.slow
+def test_matrix_defaults_to_every_registered_platform():
+    wls = [_tiny("T1/swish", op="swish", scale=1.0)]
+    matrix = run_transfer_matrix(wls, loop=LoopConfig(num_iterations=2),
+                                 max_workers=2)
+    assert matrix.platforms == plat_mod.available_platforms()
+    assert sorted(matrix.legs) == all_pairs(matrix.platforms)
+    assert matrix.n_failed == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache sharing across legs and reruns
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_shares_one_cache_and_rerun_hits_100_percent(tmp_path):
+    wls = [_tiny(), _tiny("T1/swish", op="swish", scale=1.0)]
+    path = tmp_path / "verify.jsonl"
+    names = ["metal_m2", "tpu_v5e"]
+    loop = LoopConfig(num_iterations=3, use_profiling=True)
+
+    first = run_transfer_matrix(wls, names, loop=loop,
+                                cache=VerificationCache.open(path),
+                                max_workers=2)
+    s1 = first.cache.stats()
+    assert s1["misses"] > 0
+    # warm legs revisit candidates their platform's base campaign already
+    # verified: the shared cache must have absorbed some of that work
+    assert s1["hits"] > 0
+
+    # a fresh process re-opening the same persistent cache re-verifies
+    # nothing: 100% hit rate on the second run (ISSUE 3 acceptance)
+    second = run_transfer_matrix(wls, names, loop=loop,
+                                 cache=VerificationCache.open(path),
+                                 max_workers=2)
+    s2 = second.cache.stats()
+    assert s2["misses"] == 0 and s2["hits"] > 0
+    assert second.report()["pairs"] == first.report()["pairs"]
+
+
+def test_warm_legs_from_different_sources_do_not_cross_resume(tmp_path):
+    """transfer_from is part of the loop-config discriminator: a warm leg
+    journaled for (A -> B) must not be resume-skipped by (C -> B)."""
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    log = tmp_path / "warm.jsonl"
+    kw = dict(max_workers=1, log_path=log)
+    base = LoopConfig(num_iterations=2, platform="gpu_sim",
+                      use_reference=True)
+    Campaign([wl], CampaignConfig(
+        loop=dataclasses.replace(base, transfer_from="tpu_v5e"), **kw)).run()
+    other = Campaign([wl], CampaignConfig(
+        loop=dataclasses.replace(base, transfer_from="metal_m2"), **kw)).run()
+    assert other.n_skipped == 0
+    again = Campaign([wl], CampaignConfig(
+        loop=dataclasses.replace(base, transfer_from="tpu_v5e"), **kw)).run()
+    assert again.n_skipped == 1
+
+
+def test_resume_tolerates_logs_written_before_transfer_from_existed(
+        tmp_path):
+    """Growing LoopConfig must not orphan old event logs: a terminal event
+    journaled without the transfer_from key still resume-matches a current
+    config where the new field holds its default."""
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    log = tmp_path / "old.jsonl"
+    loop = LoopConfig(num_iterations=2)
+    first = Campaign([wl], CampaignConfig(loop=loop, max_workers=1,
+                                          log_path=log)).run()
+    assert first.n_skipped == 0
+    # age the log: strip the field this PR added, as a pre-PR log would be
+    events = [json.loads(line) for line in log.read_text().splitlines()]
+    for ev in events:
+        if isinstance(ev.get("loop"), dict):
+            ev["loop"].pop("transfer_from")
+    log.write_text("\n".join(json.dumps(ev) for ev in events) + "\n")
+    second = Campaign([wl], CampaignConfig(loop=loop, max_workers=1,
+                                           log_path=log)).run()
+    assert second.n_skipped == 1
+
+
+def test_cli_rejects_platform_with_matrix(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--matrix", "--platform", "metal_m2"])
+    assert exc.value.code == 2
+    assert "--platforms" in capsys.readouterr().err
+
+
+def test_campaign_accepts_injected_scheduler():
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    sched = Scheduler(max_workers=2)
+    r1 = run_campaign([wl], LoopConfig(num_iterations=2), scheduler=sched)
+    r2 = run_campaign([wl], LoopConfig(num_iterations=2,
+                                       platform="metal_m2"),
+                      scheduler=sched)
+    assert r1.runs[0].final.correct and r2.runs[0].final.correct
+
+
+# ---------------------------------------------------------------------------
+# Heat-map rendering (incl. failed legs)
+# ---------------------------------------------------------------------------
+
+
+def _matrix_with_failure():
+    wls = [_tiny("T1/swish", op="swish", scale=1.0)]
+    names = ["metal_m2", "tpu_v5e"]
+    matrix = run_transfer_matrix(wls, names,
+                                 loop=LoopConfig(num_iterations=2),
+                                 max_workers=1)
+    # knock one leg out after the fact: rendering must survive the hole
+    matrix.legs[("tpu_v5e", "metal_m2")] = MatrixLeg(
+        "tpu_v5e", "metal_m2", error="RuntimeError: leg exploded")
+    return matrix
+
+
+def test_heatmap_renders_failed_leg_without_crashing():
+    matrix = _matrix_with_failure()
+    text = matrix.heatmap_text()
+    assert "ERR" in text and "·" in text
+    assert "1 failed" in text.splitlines()[0]
+    md = matrix.heatmap_markdown()
+    assert "ERR" in md and "| **tpu_v5e** |" in md
+    rep = matrix.report()
+    assert rep["n_failed"] == 1
+    assert rep["pairs"]["tpu_v5e->metal_m2"] == {
+        "error": "RuntimeError: leg exploded"}
+    assert matrix.uplift("tpu_v5e", "metal_m2") is None
+    assert matrix.uplift("metal_m2", "tpu_v5e") is not None
+
+
+def test_matrix_isolates_unknown_platform_into_leg_errors():
+    """A platform that fails to resolve poisons exactly its own legs."""
+    wls = [_tiny("T1/swish", op="swish", scale=1.0)]
+    matrix = run_transfer_matrix(
+        wls, ["tpu_v5e", "metal_m2", "metal_m9"],
+        loop=LoopConfig(num_iterations=2), max_workers=1)
+    assert matrix.n_failed == 4                  # every pair touching m9
+    for (src, dst), leg in matrix.legs.items():
+        if "metal_m9" in (src, dst):
+            assert not leg.ok and "metal_m9" in leg.error
+        else:
+            assert leg.ok
+    assert "ERR" in matrix.heatmap_text()
+
+
+# ---------------------------------------------------------------------------
+# metal_m2 target
+# ---------------------------------------------------------------------------
+
+
+def test_metal_m2_registered_with_metal_idiom():
+    assert "metal_m2" in plat_mod.available_platforms()
+    m = plat_mod.get_platform("metal_m2")
+    assert m.matrix_align == 8 and m.vector_align == 32
+    assert "[[thread_position_in_grid]]" in m.oneshot_example
+    assert "threadgroup" in m.constraints_note
+    # unified memory: fast-mem budget is KiB-scale, not the TPUs' 128 MiB
+    assert m.fast_mem_bytes < 2 ** 20
+    assert "KiB" in m.describe()
+
+
+def test_metal_m2_space_and_model_diverge_from_tpu():
+    mm = cand_mod.space_for("matmul", "metal_m2")
+    assert max(mm["block_m"]) <= 128             # 128-capped tiles
+    # strategy axes pass through untouched
+    assert cand_mod.space_for("softmax", "metal_m2")["online"] == \
+        (False, True)
+    shapes = {"a": (1024, 1024), "b": (1024, 1024)}
+    c = cand_mod.Candidate("matmul", {"block_m": 128, "block_n": 128,
+                                      "block_k": 128})
+    t_metal = cand_mod.model_time(c, shapes, "metal_m2")
+    assert 0 < t_metal < float("inf")
+    assert t_metal > cand_mod.model_time(c, shapes, "tpu_v5e")
+    # elements-per-thread reference hint (paper §7.2) lands on block_rows
+    sw = cand_mod.initial_candidate("swish", use_reference=True,
+                                    platform="metal_m2")
+    assert sw.params["block_rows"] == 8
+
+
+def test_metal_m2_gets_no_tpu_compiler_params():
+    assert compiler_params_for("metal_m2", dimension_semantics=("parallel",)) \
+        is None
+    assert compiler_params_for("gpu_sim") is None
+    assert compiler_params_for("tpu_v5e",
+                               dimension_semantics=("parallel",)) is not None
+
+
+def test_metal_m2_prompt_and_verification():
+    wl = _tiny()
+    prompt = LLMBackend(platform="metal_m2").build_prompt(
+        wl, prev=None, prev_result=None, recommendation=None,
+        use_reference=False)
+    assert "[[thread_position_in_grid]]" in prompt
+    assert "threadgroup" in prompt and "pallas_call" not in prompt
+    cand = cand_mod.Candidate("softmax", {"block_rows": 64, "online": True})
+    cache = VerificationCache()
+    r = verif_mod.verify(cand, wl, seed=0, cache=cache, platform="metal_m2")
+    assert r.correct and r.profile["platform"] == "metal_m2"
+    assert verif_mod.cache_key(cand, wl, 0, "metal_m2") != \
+        verif_mod.cache_key(cand, wl, 0, "tpu_v5e")
+
+
+# ---------------------------------------------------------------------------
+# Same-platform transfer guard + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_same_platform_transfer_sweep_raises():
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    with pytest.raises(ValueError, match="distinct platforms"):
+        run_transfer_sweep([wl], from_platform="gpu_sim",
+                           to_platform="gpu_sim")
+
+
+def test_cli_rejects_same_platform_transfer(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--transfer-from", "gpu_sim", "--platform", "gpu_sim"])
+    assert exc.value.code == 2
+    assert "must differ" in capsys.readouterr().err
+
+
+def test_cli_rejects_matrix_with_transfer_from(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--matrix", "--transfer-from", "tpu_v5e"])
+    assert exc.value.code == 2
+
+
+def test_cli_matrix_smoke(tmp_path, capsys, monkeypatch):
+    """--matrix end to end on a stubbed two-workload suite: heat-map +
+    cache stats printed, exit 0, and a rerun against the same persistent
+    cache reports zero misses."""
+    from repro.campaign import __main__ as cli
+    wls = [_tiny(), _tiny("T1/swish", op="swish", scale=1.0)]
+    monkeypatch.setattr(cli.kernelbench, "suite",
+                        lambda level, small=True: wls)
+    cache = str(tmp_path / "cli-cache.jsonl")
+    argv = ["--matrix", "--platforms", "tpu_v5e", "metal_m2",
+            "--iters", "2", "--cache-path", cache]
+    assert cli.main(argv) == 0
+    out = capsys.readouterr().out
+    assert "transfer matrix" in out and "fast_1 uplift" in out
+    assert "metal_m2" in out and "hit rate" in out
+
+    assert cli.main(argv) == 0
+    assert "/ 0 misses" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_cli_matrix_over_full_registry_level1(tmp_path, capsys):
+    """The acceptance-shaped invocation, shrunk to level 1: every
+    registered platform, persistent cache, rerun -> 100% hits."""
+    from repro.campaign.__main__ import main
+    cache = str(tmp_path / "c.jsonl")
+    argv = ["--matrix", "--level", "1", "--iters", "2",
+            "--cache-path", cache]
+    assert main(argv) == 0
+    out = capsys.readouterr().out
+    for name in plat_mod.available_platforms():
+        assert name in out
+    assert main(argv) == 0
+    assert "100.0% hit rate" in capsys.readouterr().out

@@ -40,9 +40,9 @@ def _tiny(name="T1/softmax", op="softmax", shape=(64, 512), scale=60.0,
 # ---------------------------------------------------------------------------
 
 
-def test_registry_has_three_seed_targets():
+def test_registry_has_four_targets():
     names = plat_mod.available_platforms()
-    assert {"tpu_v5e", "tpu_v4", "gpu_sim"} <= set(names)
+    assert {"tpu_v5e", "tpu_v4", "gpu_sim", "metal_m2"} <= set(names)
 
 
 def test_resolve_accepts_none_name_and_instance():
@@ -108,8 +108,8 @@ def test_model_time_differs_across_platforms():
     cand = cand_mod.Candidate("matmul", {"block_m": 128, "block_n": 128,
                                          "block_k": 128})
     times = {p: cand_mod.model_time(cand, shapes, p)
-             for p in ("tpu_v5e", "tpu_v4", "gpu_sim")}
-    assert len(set(times.values())) == 3
+             for p in ("tpu_v5e", "tpu_v4", "gpu_sim", "metal_m2")}
+    assert len(set(times.values())) == 4
     assert all(t > 0 for t in times.values())
     # speedups are computed against the same platform's baseline
     for p in times:

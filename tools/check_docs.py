@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docs-consistency check (CI): the documentation must track the registry.
+
+Fails (exit 1, one line per problem) when:
+
+* a registered platform is missing from README.md's platform table, the
+  campaign CLI docs, or DESIGN.md;
+* a public name exported by ``repro.campaign`` is missing from docs/api.md.
+
+Run as ``PYTHONPATH=src python tools/check_docs.py`` from the repo root.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def platform_table_rows(readme: str) -> set:
+    """Platform names (`...` in the first cell) of README's table rows."""
+    names = set()
+    for line in readme.splitlines():
+        m = re.match(r"\|\s*`([a-z0-9_]+)`\s*\|", line)
+        if m:
+            names.add(m.group(1))
+    return names
+
+
+def main() -> int:
+    from repro import campaign
+    from repro.platforms import available_platforms
+
+    problems = []
+    readme = (ROOT / "README.md").read_text()
+    design = (ROOT / "DESIGN.md").read_text()
+    api = (ROOT / "docs" / "api.md").read_text()
+
+    table = platform_table_rows(readme)
+    for name in available_platforms():
+        if name not in table:
+            problems.append(
+                f"README.md: platform {name!r} missing from the platform "
+                "table (| `name` | ... | row)")
+        if name not in design:
+            problems.append(f"DESIGN.md: platform {name!r} never mentioned")
+
+    public = [n for n in vars(campaign)
+              if (not n.startswith("_") and n[0].isupper())
+              or n in ("run_campaign", "run_transfer_sweep",
+                       "run_transfer_matrix", "harvest_hints",
+                       "reference_sources", "all_pairs")]
+    for name in sorted(set(public)):
+        if name not in api:
+            problems.append(f"docs/api.md: repro.campaign.{name} "
+                            "undocumented")
+
+    for p in problems:
+        print(f"docs-consistency: {p}", file=sys.stderr)
+    if not problems:
+        n = len(available_platforms())
+        print(f"docs-consistency: OK ({n} platforms, "
+              f"{len(set(public))} campaign exports)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,20 @@
 """All-pairs transfer matrix (DESIGN.md §2) — the cross-target headline.
 
 Rows: matrix/<from>-><to>/uplift, value = total warm-minus-cold fast_1 of
-that ordered pair; matrix/<from>-><to>/warm_p1 and /cold_p1 carry the two
-absolute fast_1 values the uplift is the difference of. A failed leg emits
-a single matrix/<from>-><to>/error row. The final matrix/heatmap rows
-carry the rendered ASCII heat-map (one row per line, value in `derived`).
+that ordered pair; /warm_p1 and /cold_p1 carry the two absolute fast_1
+values the uplift is the difference of; /delta_iters is the
+iterations-to-correct delta (warm − cold; negative = the transferred
+reference converged in fewer iterations — the non-saturating signal). A
+failed leg emits a single matrix/<from>-><to>/error row. matrix/wall_s vs
+matrix/serial_sum_s quantify the job-graph overlap (wall must beat the
+serial sum of leg durations whenever >= 2 legs can run concurrently), and
+matrix/peak_legs is the scheduler's concurrency high-water mark. The final
+matrix/heatmap rows carry both rendered ASCII heat-maps (one row per line,
+value in `derived`).
 
-Runs on the matrix engine: one base campaign per platform (reused as the
-source leg of every pair it feeds and the cold leg of every pair targeting
-it), N·(N−1) warm legs, one shared VerificationCache and worker pool.
+Runs on the job-graph matrix engine: all base campaigns concurrent, each
+warm leg submitted the moment its two bases resolve, one shared
+VerificationCache and workload-worker pool.
 """
 from __future__ import annotations
 
@@ -36,7 +42,20 @@ def run(small: bool = True):
                      f"{rep['total']['warm']['1']:.3f}"))
         rows.append((f"matrix/{src}->{dst}/uplift", 0.0,
                      f"{rep['total']['uplift_fast1']:+.3f}"))
+        delta = rep["total"]["iters_to_correct"]["delta"]
+        rows.append((f"matrix/{src}->{dst}/delta_iters", 0.0,
+                     "n/a" if delta is None else f"{delta:+.2f}"))
+    tele = matrix.telemetry
+    rows.append(("matrix/wall_s", tele["wall_s"] * 1e6,
+                 f"{tele['wall_s']:.1f}s wall"))
+    rows.append(("matrix/serial_sum_s", tele["serial_sum_s"] * 1e6,
+                 f"{tele['serial_sum_s']:.1f}s summed leg time"))
+    rows.append(("matrix/peak_legs", 0.0,
+                 f"{tele['peak_concurrent_legs']} concurrent legs "
+                 f"(matrix_workers={tele['matrix_workers']}, "
+                 f"leg_workers={tele['leg_workers']})"))
     rows.append(("matrix/cache", 0.0, format_cache_stats(cache.stats())))
-    for i, line in enumerate(matrix.heatmap_text().splitlines()):
-        rows.append((f"matrix/heatmap/{i}", 0.0, line))
+    for metric in ("uplift_fast1", "delta_iters"):
+        for i, line in enumerate(matrix.heatmap_text(metric).splitlines()):
+            rows.append((f"matrix/heatmap/{metric}/{i}", 0.0, line))
     return rows

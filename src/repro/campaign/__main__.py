@@ -10,6 +10,8 @@ Examples::
       --transfer-from tpu_v5e                 # §6.2 transfer sweep
   python -m repro.campaign --matrix           # every ordered platform pair
   python -m repro.campaign --matrix --platforms tpu_v5e metal_m2
+  python -m repro.campaign --matrix --matrix-workers 4 --leg-workers 8
+  python -m repro.campaign --matrix --isolate --timeout 600
   python -m repro.campaign --log runs/c1.jsonl           # resumable
   python -m repro.campaign --log runs/c1.jsonl --report-only
   python -m repro.campaign --cache-path runs/verify.jsonl  # cross-process
@@ -67,6 +69,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--platforms", nargs="+", default=None,
                     metavar="PLATFORM",
                     help="restrict --matrix to these platforms (>= 2)")
+    ap.add_argument("--matrix-workers", type=int, default=None,
+                    help="how many --matrix campaign legs run concurrently "
+                         "(default: --workers)")
+    ap.add_argument("--leg-workers", type=int, default=None,
+                    help="total workload-verification worker budget shared "
+                         "by every in-flight --matrix leg "
+                         "(default: --workers)")
+    ap.add_argument("--isolate", action="store_true",
+                    help="run each --matrix leg in a forked child process "
+                         "so --timeout bounds the whole leg and a hung leg "
+                         "is killed instead of abandoned")
     ap.add_argument("--cache-path", default=None,
                     help="persistent JSONL verification cache shared "
                          "across processes (and across both sweep legs)")
@@ -103,6 +116,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                  "--platforms A B ... to restrict the platform set")
     if args.platforms is not None and not args.matrix:
         ap.error("--platforms only applies to --matrix")
+    for flag, value in (("--matrix-workers", args.matrix_workers),
+                        ("--leg-workers", args.leg_workers),
+                        ("--isolate", args.isolate or None)):
+        if value is not None and not args.matrix:
+            ap.error(f"{flag} only applies to --matrix")
     if args.platforms is not None:
         unknown = sorted(set(args.platforms) - set(available_platforms()))
         if unknown:
@@ -146,15 +164,28 @@ def main(argv: Optional[List[str]] = None) -> int:
         # journaling + resume on top.
         matrix = run_transfer_matrix(
             workloads, args.platforms, loop=loop, cache=cache,
-            max_workers=args.workers, timeout_s=args.timeout,
+            max_workers=args.workers,
+            matrix_workers=args.matrix_workers,
+            leg_workers=args.leg_workers,
+            isolation="process" if args.isolate else "thread",
+            timeout_s=args.timeout,
             log_path=args.log, resume=not args.no_resume)
+        tele = matrix.telemetry
         print(f"transfer matrix: {len(workloads)} workloads x "
               f"{len(matrix.legs)} ordered pairs over "
               f"{len(matrix.platforms)} platforms"
               + (f" -> {args.log}" if args.log else ""))
+        print(f"job graph: peak {tele['peak_concurrent_legs']} concurrent "
+              f"legs (matrix_workers={tele['matrix_workers']}, "
+              f"leg_workers={tele['leg_workers']}, "
+              f"isolation={tele['isolation']}); "
+              f"wall {tele['wall_s']:.1f}s vs "
+              f"{tele['serial_sum_s']:.1f}s serial leg-time")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
         print()
         print(matrix.heatmap_text())
+        print()
+        print(matrix.heatmap_text(metric="delta_iters"))
         for (src, dst), leg in sorted(matrix.legs.items()):
             if not leg.ok:
                 print(f"FAILED {src}->{dst}: {leg.error}", file=sys.stderr)

@@ -89,6 +89,36 @@ class VerificationCache:
             return {"entries": len(self._store), "hits": self.hits,
                     "misses": self.misses}
 
+    def absorb(self, other: "VerificationCache") -> None:
+        """Merge another cache's entries and hit/miss counters into this
+        one, in memory only — no persistence side effects even on a
+        persistent cache (the matrix uses this to fold the cache snapshots
+        process-isolated legs send back into the parent's telemetry; a
+        persistent leg cache already appended its entries to the shared
+        JSONL file itself)."""
+        with other._lock:
+            entries = dict(other._store)
+            hits, misses = other.hits, other.misses
+        with self._lock:
+            for key, result in entries.items():
+                self._store.setdefault(key, result)
+            self.hits += hits
+            self.misses += misses
+
+    # Locks don't pickle; campaign results (which carry their cache) must
+    # cross the process-isolation pipe, so drop the lock on the way out and
+    # mint a fresh one on the way in. The unpickled copy is a snapshot —
+    # mutating it does not feed back into the parent's cache.
+    def __getstate__(self) -> Dict[str, object]:
+        with self._lock:
+            state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state: Dict[str, object]) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
 
 class PersistentVerificationCache(VerificationCache):
     """On-disk (JSONL, append-only) verification cache.
@@ -140,3 +170,12 @@ class PersistentVerificationCache(VerificationCache):
                 return
             self._store[key] = result
         self._append(key, result)
+
+    def __getstate__(self) -> Dict[str, object]:
+        state = super().__getstate__()
+        del state["_io_lock"]
+        return state
+
+    def __setstate__(self, state: Dict[str, object]) -> None:
+        super().__setstate__(state)
+        self._io_lock = threading.Lock()

@@ -8,7 +8,10 @@ One JSON object per line. Event kinds:
                    (workload, iteration, phase, candidate, state, timing,
                    cache_key, recommendation, platform)
   workload_done    terminal per-workload record with the serialized final
-                   EvalResult — resume skips these workloads
+                   EvalResult and ``iters_to_correct`` (how many refinement
+                   iterations ran before the first CORRECT verification —
+                   the transfer matrix's non-saturating warm-vs-cold
+                   signal) — resume skips these workloads
   workload_error   scheduler-isolated failure (exception or timeout)
 
 Every event carries the hardware platform it ran against (also embedded in
@@ -75,6 +78,22 @@ def result_from_dict(d: Dict[str, Any]) -> EvalResult:
         profile=d.get("profile"),
         cache_key=d.get("cache_key"),
     )
+
+
+def iterations_to_correct(logs: Iterable[IterationLog]) -> Optional[int]:
+    """How many refinement iterations ran before (and including) the first
+    CORRECT verification — 1 means the initial candidate was already
+    correct; None means the workload never got there.
+
+    This is the transfer matrix's second heat-map metric: the deterministic
+    backend usually converges cold too given enough iterations, so final
+    fast_1 uplift saturates at 0 — but a transferred reference still shows
+    up as *fewer iterations spent* reaching correctness (warm − cold < 0).
+    """
+    for n, log in enumerate(logs, 1):
+        if log.result.correct:
+            return n
+    return None
 
 
 def iteration_event(workload: str, level: int, log: IterationLog,

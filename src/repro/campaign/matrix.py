@@ -1,10 +1,25 @@
-"""All-pairs cross-platform transfer matrix (DESIGN.md §2).
+"""All-pairs cross-platform transfer matrix as a dependency-aware job graph
+(DESIGN.md §2).
 
 The §6.2 transfer sweep (:mod:`repro.campaign.transfer`) measures ONE
 ordered platform pair. The matrix engine runs it over **every ordered pair
-of registered platforms** and aggregates the per-pair warm-minus-cold
-fast_1 uplift into a heat-map — the headline cross-target artifact of the
+of registered platforms** and aggregates two warm-minus-cold signals per
+pair into heat-maps — fast_1 uplift, and the non-saturating
+iterations-to-correct delta — the headline cross-target artifact of the
 paper's platform-agnosticism claim.
+
+Execution model: ONE job graph on a two-level scheduler, not two
+sequential for-loops. All N base campaigns are submitted at once and run
+concurrently; every warm leg is submitted immediately with
+``after=(base[src], base[dst])`` edges, so it starts the moment its two
+base campaigns resolve — while unrelated bases are still running. Sizing:
+
+* ``matrix_workers`` — how many campaign legs may be in flight at once
+  (the graph scheduler's budget);
+* ``leg_workers`` — the total workload-verification budget, ONE shared
+  :class:`Scheduler` every in-flight leg fans its workloads onto (the
+  scheduler's slot semaphore is global to the instance, so concurrent
+  campaigns share it instead of each spawning its own pool).
 
 Work sharing keeps N platforms at N + N·(N−1) campaigns instead of the
 naive 3·N·(N−1):
@@ -15,16 +30,29 @@ naive 3·N·(N−1):
 * one shared :class:`VerificationCache` serves every leg — the platform is
   part of the verification content address, so legs never collide, and a
   candidate two legs both visit is verified once;
-* one shared :class:`Scheduler` (worker pool / timeout policy) runs every
-  campaign, instead of each leg sizing its own pool;
 * warm legs are tagged ``LoopConfig.transfer_from``, so a shared event log
   keeps (A → B) and (C → B) warm results apart and resume works per leg.
 
-A leg that dies (platform misconfiguration, scheduler failure) is isolated
-into its :class:`MatrixLeg` ``error`` — the matrix completes and the
-heat-map renders the hole instead of crashing.
+Failure isolation: a leg that dies (platform misconfiguration, campaign
+crash) is isolated into its :class:`MatrixLeg` ``error``. A warm leg whose
+base campaign(s) failed records *which* platform's base failed — both
+names when both failed — instead of running on garbage.
 
-CLI: ``python -m repro.campaign --matrix [--platforms A B ...]``;
+Isolation mode: ``isolation="process"`` (CLI ``--isolate``) runs every leg
+in a forked child process, so ``timeout_s`` bounds each leg and a hung leg
+is actually SIGKILL-ed instead of abandoned. The trade-offs (picklable
+results, per-leg cache objects constructed post-fork, file-backed sharing
+only) are documented on :class:`repro.campaign.Scheduler`; pass a
+*persistent* cache (``--cache-path``) to keep cross-leg verification
+sharing through the JSONL file. One more fork caveat: the parent must not
+have executed jax computations before the matrix runs — the XLA runtime's
+threads and locks do not survive a fork and the children deadlock. The
+``--isolate`` CLI path satisfies this by construction (all verification
+happens inside the leg children); a long-lived driver process that already
+ran jax should shell out instead.
+
+CLI: ``python -m repro.campaign --matrix [--platforms A B ...]
+[--matrix-workers N] [--leg-workers N] [--isolate]``;
 benchmark: ``benchmarks/bench_transfer_matrix.py``.
 """
 from __future__ import annotations
@@ -42,6 +70,8 @@ from repro.core.refinement import LoopConfig
 from repro.core.synthesis import TemplateSearchBackend
 from repro.core.workload import Workload
 from repro.platforms import available_platforms, resolve_platform
+
+HEATMAP_METRICS = ("uplift_fast1", "delta_iters")
 
 
 def all_pairs(platforms: Sequence[str]) -> List[Tuple[str, str]]:
@@ -75,6 +105,16 @@ class MatrixLeg:
             return None
         return self.sweep.report()["total"]["uplift_fast1"]
 
+    @property
+    def delta_iters(self) -> Optional[float]:
+        """Mean iterations-to-correct delta (warm − cold) of this leg:
+        negative means the transferred reference reached correctness in
+        fewer iterations. None on a failed leg or when either leg never
+        produced a correct workload."""
+        if not self.ok:
+            return None
+        return self.sweep.report()["total"]["iters_to_correct"]["delta"]
+
 
 @dataclasses.dataclass
 class TransferMatrix:
@@ -83,12 +123,15 @@ class TransferMatrix:
     ``platforms`` is the sorted platform list the matrix ran over; ``legs``
     maps every ordered pair from :func:`all_pairs` to its leg. ``cache`` is
     the single verification cache all legs shared (its hit/miss counters
-    are the matrix's work-sharing telemetry).
+    are the matrix's work-sharing telemetry). ``telemetry`` is the job
+    graph's execution record: peak concurrent legs plus per-job
+    start/finish stamps — what overlap assertions read.
     """
     platforms: List[str]
     legs: Dict[Tuple[str, str], MatrixLeg]
     cache: VerificationCache
     log_path: Optional[Path] = None
+    telemetry: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def leg(self, from_platform: str, to_platform: str) -> MatrixLeg:
         return self.legs[(from_platform, to_platform)]
@@ -103,7 +146,8 @@ class TransferMatrix:
 
     def report(self) -> Dict[str, Any]:
         """Aggregate dict: per-pair leg reports (or errors), the best and
-        worst completed pairs by fast_1 uplift, and cache stats."""
+        worst completed pairs by fast_1 uplift, cache stats, and the job
+        graph telemetry."""
         pairs: Dict[str, Any] = {}
         for (src, dst), leg in sorted(self.legs.items()):
             key = f"{src}->{dst}"
@@ -119,27 +163,47 @@ class TransferMatrix:
             "best_pair": max(done, key=lambda kv: kv[1])[0] if done else None,
             "worst_pair": min(done, key=lambda kv: kv[1])[0] if done else None,
             "cache": self.cache.stats(),
+            "telemetry": self.telemetry,
         }
 
     # -- heat-map rendering --------------------------------------------------
 
-    def _cell(self, src: str, dst: str) -> str:
+    def _cell(self, src: str, dst: str,
+              metric: str = "uplift_fast1") -> str:
         if src == dst:
             return "·"
         leg = self.legs.get((src, dst))
         if leg is None or not leg.ok:
             return "ERR"
-        return f"{leg.uplift_fast1:+.3f}"
+        value = (leg.uplift_fast1 if metric == "uplift_fast1"
+                 else leg.delta_iters)
+        if value is None:       # metric undefined (e.g. nothing correct)
+            return "n/a"
+        return f"{value:+.3f}" if metric == "uplift_fast1" \
+            else f"{value:+.2f}"
 
-    def heatmap_text(self) -> str:
-        """ASCII heat-map: rows = source platform, columns = target,
-        cells = total fast_1 uplift (warm − cold); '·' diagonal, 'ERR' for
-        a failed leg."""
+    _TITLES = {
+        "uplift_fast1": "fast_1 uplift (warm − cold)",
+        "delta_iters": "iterations-to-correct delta (warm − cold)",
+    }
+
+    def heatmap_text(self, metric: str = "uplift_fast1") -> str:
+        """ASCII heat-map: rows = source platform, columns = target.
+
+        ``metric`` selects the cell value: ``"uplift_fast1"`` (total warm −
+        cold fast_1) or ``"delta_iters"`` (mean warm − cold iterations to
+        the first correct result — negative is better, and unlike fast_1
+        uplift it does not saturate at 0 when both legs eventually
+        converge). '·' diagonal, 'ERR' failed leg, 'n/a' undefined metric.
+        """
+        if metric not in HEATMAP_METRICS:
+            raise ValueError(f"metric must be one of {HEATMAP_METRICS}, "
+                             f"got {metric!r}")
         names = list(self.platforms)
         width = max([len("from \\ to")] + [len(n) for n in names])
         cell_w = max(8, max(len(n) for n in names))
         lines = [
-            f"transfer matrix — fast_1 uplift (warm − cold), "
+            f"transfer matrix — {self._TITLES[metric]}, "
             f"{len(names)} platforms, {len(self.legs)} pairs"
             + (f", {self.n_failed} failed" if self.n_failed else ""),
         ]
@@ -149,17 +213,21 @@ class TransferMatrix:
         lines.append("-" * len(header))
         for src in names:
             row = src.ljust(width) + "  " + "  ".join(
-                self._cell(src, dst).rjust(cell_w) for dst in names)
+                self._cell(src, dst, metric).rjust(cell_w) for dst in names)
             lines.append(row)
         return "\n".join(lines)
 
-    def heatmap_markdown(self) -> str:
+    def heatmap_markdown(self, metric: str = "uplift_fast1") -> str:
         """The same heat-map as a GitHub-flavored markdown table."""
+        if metric not in HEATMAP_METRICS:
+            raise ValueError(f"metric must be one of {HEATMAP_METRICS}, "
+                             f"got {metric!r}")
         names = list(self.platforms)
         lines = ["| from \\ to | " + " | ".join(names) + " |",
                  "|---" * (len(names) + 1) + "|"]
         for src in names:
-            cells = " | ".join(self._cell(src, dst) for dst in names)
+            cells = " | ".join(self._cell(src, dst, metric)
+                               for dst in names)
             lines.append(f"| **{src}** | {cells} |")
         return "\n".join(lines)
 
@@ -169,10 +237,14 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                         loop: Optional[LoopConfig] = None,
                         cache: Optional[VerificationCache] = None,
                         max_workers: int = 4,
+                        matrix_workers: Optional[int] = None,
+                        leg_workers: Optional[int] = None,
                         timeout_s: Optional[float] = None,
+                        isolation: str = "thread",
                         log_path: Optional[Union[str, Path]] = None,
                         resume: bool = True) -> TransferMatrix:
-    """Run the §6.2 transfer sweep over every ordered platform pair.
+    """Run the §6.2 transfer sweep over every ordered platform pair as one
+    dependency-aware job graph.
 
     Args:
         workloads: KernelBench workloads, shared by every leg.
@@ -182,9 +254,24 @@ def run_transfer_matrix(workloads: Sequence[Workload],
             ``transfer_from`` are overridden per leg.
         cache: shared verification cache for ALL legs (open a persistent
             one with ``VerificationCache.open`` to share across processes
-            and reruns); a fresh in-memory cache when omitted.
-        max_workers / timeout_s: sizing of the ONE worker pool every
-            campaign leg runs on.
+            and reruns); a fresh in-memory cache when omitted. In process
+            isolation each leg re-opens the cache's path inside its child
+            (lock-bearing objects must be born after the fork), so only a
+            persistent cache shares verifications across legs there.
+        max_workers: default for both pool levels when the explicit knobs
+            are not given.
+        matrix_workers: how many campaign legs run concurrently (the graph
+            scheduler's budget); default ``max_workers``.
+        leg_workers: total workload-verification slots, shared by every
+            in-flight leg through one scheduler; default ``max_workers``.
+            In process isolation a child cannot share the parent's
+            semaphore, so the total is preserved by giving each leg
+            ``leg_workers // matrix_workers`` slots of its own.
+        timeout_s: per-workload timeout inside each leg; with
+            ``isolation="process"`` it additionally bounds each *leg*,
+            whose child process is killed on expiry.
+        isolation: ``"thread"`` (default) or ``"process"`` — forwarded to
+            the graph scheduler (see :class:`repro.campaign.Scheduler`).
         log_path / resume: one JSONL event log shared by every leg
             (platform- and transfer_from-tagged); resuming skips whatever
             legs already finished.
@@ -194,9 +281,11 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         ``all_pairs(platforms)``. Per-leg failures are recorded, never
         raised.
 
-    Base campaigns run first, one per platform — each is reused as the
-    source leg of every pair it feeds and the cold leg of every pair that
-    targets it — then the N·(N−1) warm legs.
+    Scheduling: the N base campaigns (each reused as the source leg of
+    every pair it feeds and the cold leg of every pair targeting it) are
+    all submitted up front and run concurrently; each of the N·(N−1) warm
+    legs is submitted with ``after`` edges on its two base campaigns and
+    starts the moment both resolve — not when every base has finished.
     """
     names = sorted(platforms) if platforms is not None \
         else available_platforms()
@@ -206,54 +295,129 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         raise ValueError(f"duplicate platforms in {names}")
     base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
-    sched = Scheduler(max_workers=max_workers, timeout_s=timeout_s)
-    common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
-                  log_path=log_path, resume=resume, scheduler=sched)
+    leg_workers = leg_workers if leg_workers is not None else max_workers
+    matrix_workers = matrix_workers if matrix_workers is not None \
+        else max_workers
+    graph = Scheduler(max_workers=matrix_workers,
+                      timeout_s=timeout_s if isolation == "process" else None,
+                      isolation=isolation)
+    if isolation != "process":
+        work_sched = Scheduler(max_workers=leg_workers, timeout_s=timeout_s)
+        leg_pool_width = leg_workers
+    else:
+        # a forked child cannot share the parent's slot semaphore, so keep
+        # leg_workers a TOTAL budget by splitting it across the legs that
+        # can be in flight at once (each child sizes its own pool)
+        work_sched = None
+        leg_pool_width = max(1, leg_workers // matrix_workers)
+    cache_path = getattr(cache, "path", None)
 
-    # Phase 1 — one base campaign per platform: source AND cold leg at once.
-    campaigns: Dict[str, CampaignResult] = {}
-    hints: Dict[str, Dict[str, Dict[str, Any]]] = {}
-    refs: Dict[str, Dict[str, Tuple[str, str]]] = {}
-    errors: Dict[str, str] = {}
-    for name in names:
-        try:
+    def leg_cache() -> VerificationCache:
+        # thread mode: the one shared cache object. process mode: a cache
+        # constructed INSIDE the leg's forked child — a lock copied from
+        # another thread mid-hold would deadlock the child — re-opening the
+        # persistent path when there is one (the JSONL file is the shared
+        # medium across processes).
+        if isolation != "process":
+            return cache
+        return VerificationCache.open(cache_path) if cache_path \
+            else VerificationCache()
+
+    common = dict(max_workers=leg_pool_width, timeout_s=timeout_s,
+                  log_path=log_path, resume=resume, scheduler=work_sched)
+
+    # Phase 1 — submit one base campaign per platform, all at once. Each
+    # doubles as source AND cold leg of every pair that touches it.
+    def base_fn(name: str):
+        def run() -> Tuple[CampaignResult, Dict, Dict]:
             plat = resolve_platform(name)
             result = run_campaign(
                 workloads,
                 dataclasses.replace(base, platform=plat.name,
                                     use_reference=False, transfer_from=None),
-                **common)
-            campaigns[name] = result
-            hints[name] = harvest_hints(result)
-            refs[name] = reference_sources(result, plat.name)
-        except Exception as exc:  # noqa: BLE001 — isolate per platform
-            errors[name] = f"{type(exc).__name__}: {exc}"
+                cache=leg_cache(), **common)
+            return (result, harvest_hints(result),
+                    reference_sources(result, plat.name))
+        return run
 
-    # Phase 2 — warm legs for every ordered pair.
-    legs: Dict[Tuple[str, str], MatrixLeg] = {}
-    for src, dst in all_pairs(names):
-        fail = errors.get(src) or errors.get(dst)
-        if fail:
-            legs[(src, dst)] = MatrixLeg(src, dst, error=fail)
-            continue
-        try:
+    base_jobs = {name: graph.submit(f"base[{name}]", base_fn(name))
+                 for name in names}
+
+    # Phase 2 — submit every warm leg NOW, gated on its two bases. The
+    # factory lambda binds the target platform and source hints via
+    # default arguments: legs run concurrently, so closing over loop
+    # variables by reference would hand some legs another leg's platform.
+    def warm_fn(src: str, dst: str):
+        def run() -> CampaignResult:
+            failed = [p for p in (src, dst)
+                      if base_jobs[p].error is not None]
+            if failed:
+                raise RuntimeError("; ".join(
+                    f"base campaign [{p}] failed: {base_jobs[p].error}"
+                    for p in failed))
             dst_plat = resolve_platform(dst)
-            warm = run_campaign(
+            src_hints = base_jobs[src].value[1]
+            return run_campaign(
                 workloads,
                 dataclasses.replace(base, platform=dst_plat.name,
                                     use_reference=True, transfer_from=src),
-                agent_factory=lambda: TemplateSearchBackend(
-                    platform=dst_plat, reference_hints=hints[src]),
-                **common)
-            sweep = TransferSweepResult(
-                from_platform=src, to_platform=dst, source=campaigns[src],
-                cold=campaigns[dst], warm=warm, hints=hints[src],
-                references=refs[src],
-                log_path=Path(log_path) if log_path else None)
-            legs[(src, dst)] = MatrixLeg(src, dst, sweep=sweep)
-        except Exception as exc:  # noqa: BLE001 — isolate per leg
-            legs[(src, dst)] = MatrixLeg(
-                src, dst, error=f"{type(exc).__name__}: {exc}")
+                agent_factory=lambda p=dst_plat, h=src_hints:
+                    TemplateSearchBackend(platform=p, reference_hints=h),
+                cache=leg_cache(), **common)
+        return run
 
+    warm_jobs = {
+        (src, dst): graph.submit(
+            f"warm[{src}->{dst}]", warm_fn(src, dst),
+            after=(base_jobs[src], base_jobs[dst]))
+        for src, dst in all_pairs(names)}
+
+    graph.wait(list(base_jobs.values()) + list(warm_jobs.values()))
+
+    # Phase 3 — fold handles into legs (in the coordinator: sweeps built
+    # here share the base CampaignResult objects, so (A → B).source IS
+    # (B → A).cold even in process mode).
+    campaigns: Dict[str, CampaignResult] = {}
+    hints: Dict[str, Dict[str, Dict[str, Any]]] = {}
+    refs: Dict[str, Dict[str, Tuple[str, str]]] = {}
+    for name, job in base_jobs.items():
+        if job.error is None:
+            campaigns[name], hints[name], refs[name] = job.value
+            if isolation == "process":
+                # fold the child's cache snapshot (it rode back on the
+                # CampaignResult) into the parent's telemetry
+                cache.absorb(job.value[0].cache)
+    legs: Dict[Tuple[str, str], MatrixLeg] = {}
+    for (src, dst), job in warm_jobs.items():
+        if job.error is not None:
+            legs[(src, dst)] = MatrixLeg(src, dst, error=job.error)
+            continue
+        if isolation == "process":
+            cache.absorb(job.value.cache)
+        sweep = TransferSweepResult(
+            from_platform=src, to_platform=dst, source=campaigns[src],
+            cold=campaigns[dst], warm=job.value, hints=hints[src],
+            references=refs[src],
+            log_path=Path(log_path) if log_path else None)
+        legs[(src, dst)] = MatrixLeg(src, dst, sweep=sweep)
+
+    jobs = list(base_jobs.values()) + list(warm_jobs.values())
+    telemetry = {
+        "matrix_workers": matrix_workers,
+        "leg_workers": leg_workers,
+        "isolation": isolation,
+        "peak_concurrent_legs": graph.telemetry()["peak_concurrent"],
+        "jobs": {job.name: {"started_at": job.started_at,
+                            "finished_at": job.finished_at,
+                            "duration_s": job.duration_s,
+                            "error": job.error}
+                 for job in jobs},
+        "serial_sum_s": sum(job.duration_s for job in jobs),
+        "wall_s": (max((j.finished_at for j in jobs
+                        if j.finished_at is not None), default=0.0)
+                   - min((j.started_at for j in jobs
+                          if j.started_at is not None), default=0.0)),
+    }
     return TransferMatrix(platforms=names, legs=legs, cache=cache,
-                          log_path=Path(log_path) if log_path else None)
+                          log_path=Path(log_path) if log_path else None,
+                          telemetry=telemetry)

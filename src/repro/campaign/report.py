@@ -52,10 +52,13 @@ def report_from_events(events: Iterable[Dict[str, Any]],
             cache_stats = ev.get("cache")
     finals: Dict[int, List[EvalResult]] = {}
     names: Dict[int, List[str]] = {}
+    iters: Dict[int, List[int]] = {}
     for name, ev in terminal.items():
         level = int(ev.get("level", 0))
         if ev["event"] == "workload_done":
             result = result_from_dict(ev["final"])
+            if ev.get("iters_to_correct") is not None:
+                iters.setdefault(level, []).append(ev["iters_to_correct"])
         else:
             result = EvalResult(state=ExecutionState.GENERATION_FAILURE,
                                 error=ev.get("error"))
@@ -64,6 +67,7 @@ def report_from_events(events: Iterable[Dict[str, Any]],
     levels = {}
     for level in sorted(finals):
         rs = finals[level]
+        it = iters.get(level, [])
         levels[level] = {
             "n": len(rs),
             "workloads": names[level],
@@ -71,6 +75,10 @@ def report_from_events(events: Iterable[Dict[str, Any]],
                        for p, v in fast_p_curve(rs, thresholds).items()},
             "states": state_histogram(rs),
             "mean_best_model_time_us": _mean_time_us(rs),
+            # mean refinement iterations until the first CORRECT result
+            # (over workloads that got there) — the transfer matrix's
+            # warm-vs-cold delta signal, here per single campaign
+            "mean_iters_to_correct": sum(it) / len(it) if it else None,
         }
     all_rs = [r for rs in finals.values() for r in rs]
     return {
@@ -103,6 +111,9 @@ def format_report(report: Dict[str, Any]) -> str:
         if stats["mean_best_model_time_us"]:
             lines.append("  mean best model time: "
                          f"{stats['mean_best_model_time_us']:.2f} us")
+        if stats.get("mean_iters_to_correct") is not None:
+            lines.append("  mean iters to correct: "
+                         f"{stats['mean_iters_to_correct']:.2f}")
     tot = report["total"]
     fp = "  ".join(f"fast_{p}={v:.3f}" for p, v in tot["fast_p"].items())
     lines.append(f"total  (n={tot['n']})")

@@ -61,6 +61,11 @@ class WorkloadRun:
     error: Optional[str] = None
     skipped: bool = False                          # resumed from the log
     duration_s: float = 0.0
+    # refinement iterations until the first CORRECT verification (1 = the
+    # initial candidate was already correct; None = never correct). Survives
+    # resume via the workload_done event — the transfer sweep's
+    # iterations-to-correct delta is computed from this.
+    iters_to_correct: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -184,7 +189,8 @@ class Campaign:
                 continue
             runs[name] = WorkloadRun(
                 workload=name, level=by_name[name].level,
-                final=ev_mod.result_from_dict(ev["final"]), skipped=True)
+                final=ev_mod.result_from_dict(ev["final"]), skipped=True,
+                iters_to_correct=ev.get("iters_to_correct"))
 
         todo = [wl for wl in self.workloads if wl.name not in runs]
         if self.log is not None:
@@ -200,14 +206,17 @@ class Campaign:
             if job.ok:
                 outcome: RefinementOutcome = job.value
                 final = outcome.final
+                itc = ev_mod.iterations_to_correct(outcome.logs)
                 runs[job.name] = WorkloadRun(
                     workload=job.name, level=wl.level, outcome=outcome,
-                    final=final, duration_s=job.duration_s)
+                    final=final, duration_s=job.duration_s,
+                    iters_to_correct=itc)
                 if self.log is not None:
                     self.log.append({
                         "event": "workload_done", "workload": job.name,
                         "level": wl.level, "duration_s": job.duration_s,
                         "iterations": len(outcome.logs),
+                        "iters_to_correct": itc,
                         "io": verif_mod.io_signature(wl),
                         "platform": self.cfg.loop.platform,
                         "loop": dataclasses.asdict(self.cfg.loop),

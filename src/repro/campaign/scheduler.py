@@ -1,32 +1,70 @@
-"""Worker-pool scheduler with per-job timeout and failure isolation.
+"""Dependency-aware worker-pool scheduler with per-job timeout, failure
+isolation, and an opt-in process-isolation mode.
 
-Threads are the right substrate here: verification time is dominated by jax
-trace/compile/execute, which release the GIL, and candidate programs close
-over unpicklable jax callables, so processes would buy latency, not
-throughput. The pool is hand-rolled on *daemon* threads rather than
-``ThreadPoolExecutor`` deliberately: the executor joins its non-daemon
-workers at interpreter shutdown, so one genuinely hung kernel would block
-process exit forever even after its timeout fired. Daemon workers let the
-process exit the moment the campaign is done.
+Two layers of API:
+
+* ``run(jobs)`` — the original flat interface: fan a list of named thunks
+  over the pool, collect ``JobResult``s in submission order.
+* ``submit(name, fn, after=...)`` / ``wait(handles)`` — dependency-aware
+  submission. A job submitted with ``after=(a, b)`` starts the moment BOTH
+  ``a`` and ``b`` resolve (success *or* failure — dependents read their
+  dependencies' ``value``/``error`` off the handle and decide for
+  themselves), not when the caller gets around to waiting. The transfer
+  matrix uses this to launch every warm leg as soon as its two base
+  campaigns finish, while unrelated base campaigns are still running.
+
+Concurrency budget. One ``Scheduler`` instance holds ONE slot semaphore
+(``max_workers`` wide) shared by every ``run``/``submit`` call on it, from
+any thread — so several campaigns fanning workloads onto a shared scheduler
+get ``max_workers`` slots *total*, not each. The pool is re-entrant: a job
+that calls ``run``/``wait`` on its own scheduler releases its slot while it
+blocks and re-acquires afterwards, so the budget counts only jobs actually
+computing and nested fan-out cannot deadlock the pool. ``telemetry()``
+reports the high-water mark of concurrently running jobs.
+
+Thread mode (default). Workers are *daemon* threads — one per job, gated
+by the slot semaphore. A queued job parks its (cheap, mostly-unmapped)
+thread on a 0.25 s semaphore poll; that is the right trade at campaign
+scale (tens to low hundreds of jobs, each seconds long). A graph of many
+thousands of short jobs would want a dispatcher feeding a fixed pool
+instead — extend here if campaigns ever reach that shape. Daemon threads
+rather than a ``ThreadPoolExecutor``: the executor
+joins its non-daemon workers at interpreter shutdown, so one genuinely hung
+kernel would block process exit forever even after its timeout fired.
+Verification time is dominated by jax trace/compile/execute, which release
+the GIL, and candidate programs close over unpicklable jax callables — so
+threads are the right default substrate. The trade-off: a timed-out job's
+thread cannot be force-killed; it is abandoned (it dies with the process),
+its slot permanently occupied, which the result's error documents. A job
+starved of a slot because the whole pool is wedged on hung jobs is
+cancelled (it never runs) and reported as such; a job still waiting on its
+``after`` dependencies is *not* starved and never cancelled this way.
+
+Process mode (``isolation="process"``). Each job's thunk runs in a forked
+child process, so a timed-out job is actually ``SIGKILL``-ed instead of
+abandoned and its slot comes back (ROADMAP open item). The cost: the job's
+return value must be picklable (an unpicklable result is reported as the
+job's error), and in-memory side effects — shared caches, dicts mutated by
+the thunk — die with the child; only file-backed state (JSONL event logs,
+persistent verification caches) survives. Fork-only: objects captured by
+the thunk are inherited by the child, never pickled. Locks copied mid-hold
+from *other* threads are the classic fork hazard — construct lock-bearing
+state (caches, event logs) inside the thunk, as the matrix does.
 
 One exploding or hung job never takes down the campaign — its error (or a
 timeout marker) is recorded in its :class:`JobResult` and every other job
 completes normally. Timeouts are measured from when a job actually starts
-executing, not from when the coordinator happens to look at it, so K
-simultaneously hung jobs are all flagged ~timeout_s after they hang rather
-than serially K×timeout_s later. A timed-out job's thread cannot be
-force-killed; it is abandoned (and dies with the process), which is the
-standard thread trade-off and is documented in the result's error. A job
-starved of a worker slot because the whole pool is wedged on hung jobs is
-cancelled (it never runs) and reported as such.
+executing, so K simultaneously hung jobs are all flagged ~timeout_s after
+they hang rather than serially K×timeout_s later.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+ISOLATION_MODES = ("thread", "process")
 
 
 @dataclasses.dataclass
@@ -35,6 +73,10 @@ class JobResult:
     value: Any = None
     error: Optional[str] = None
     duration_s: float = 0.0
+    # perf_counter stamps (None for a job that never started): what overlap
+    # tests and the matrix telemetry read.
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
 
     @property
     def ok(self) -> bool:
@@ -42,83 +84,298 @@ class JobResult:
 
 
 class _Job:
-    """One unit of work plus its completion state."""
+    """One unit of work plus its completion state — also the handle
+    ``submit`` returns. After ``done`` is set, ``value``/``error`` are
+    final and safe to read from any thread (dependents do)."""
 
-    def __init__(self, name: str, fn: Callable[[], Any]) -> None:
+    def __init__(self, name: str, fn: Callable[[], Any],
+                 after: Tuple["_Job", ...] = ()) -> None:
         self.name = name
         self.fn = fn
+        self.after = after
         self.done = threading.Event()
         self.value: Any = None
         self.error: Optional[str] = None
         self.duration_s = 0.0
         self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
         self.cancelled = False
         self._lock = threading.Lock()
 
-    def try_cancel(self) -> bool:
-        """Cancel iff the job has not started; a cancelled job never runs."""
+    def try_cancel(self, reason: str = "cancelled") -> bool:
+        """Cancel iff the job has not started; a cancelled job never runs.
+
+        Stamps ``error`` so EVERY resolution path — the generic
+        ``done.wait()`` path included — agrees the job failed; without the
+        stamp a cancelled job would resolve as ``ok=True, value=None``.
+        """
         with self._lock:
             if self.started_at is None and not self.done.is_set():
                 self.cancelled = True
+                self.error = reason
                 self.done.set()
                 return True
             return False
 
 
+JobHandle = _Job
+
+
 class Scheduler:
-    """Fan a list of named jobs out over a daemon-thread worker pool."""
+    """Fan named jobs out over a bounded worker pool; see module docstring.
+
+    Args:
+        max_workers: slot budget shared by every job submitted to this
+            instance, across all threads and nested fan-out.
+        timeout_s: per-job timeout measured from job start. Thread mode
+            abandons the worker thread on expiry; process mode kills the
+            child process and frees the slot.
+        isolation: ``"thread"`` (default) or ``"process"`` (fork per job;
+            timeout-killable, picklable results required).
+    """
 
     def __init__(self, max_workers: int = 4,
-                 timeout_s: Optional[float] = None) -> None:
+                 timeout_s: Optional[float] = None,
+                 isolation: str = "thread") -> None:
+        if isolation not in ISOLATION_MODES:
+            raise ValueError(
+                f"isolation must be one of {ISOLATION_MODES}, "
+                f"got {isolation!r}")
         self.max_workers = max(1, int(max_workers))
         self.timeout_s = timeout_s
+        self.isolation = isolation
+        self._slots = threading.Semaphore(self.max_workers)
+        self._local = threading.local()      # .holds_slot on worker threads
+        # last observed pool activity (job submitted/started/finished):
+        # what the wedged-pool cancellation path measures staleness against
+        self._progress = {"t": time.perf_counter()}
+        self._meter_lock = threading.Lock()
+        self._running = 0
+        self._peak = 0
+        self._completed = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, name: str, fn: Callable[[], Any], *,
+               after: Sequence["_Job"] = ()) -> _Job:
+        """Submit one job; returns its handle immediately.
+
+        ``after``: handles this job must wait for. Dependencies are
+        *ordering only* — the job runs even if a dependency failed; read
+        ``dep.error``/``dep.value`` inside ``fn`` to react (the matrix
+        turns failed-base errors into attributed leg errors this way).
+        """
+        job = _Job(name, fn, after=tuple(after))
+        self._progress["t"] = time.perf_counter()
+        threading.Thread(target=self._worker, args=(job,),
+                         daemon=True).start()
+        return job
+
+    def wait(self, jobs: Sequence[_Job],
+             on_result: Optional[Callable[[JobResult], None]] = None
+             ) -> List[JobResult]:
+        """Block until every handle resolves; results in ``jobs`` order.
+
+        Re-entrant: when called from inside a job of this same scheduler,
+        the caller's slot is released for the duration of the wait (and
+        re-acquired after), so nested fan-out cannot deadlock the pool.
+        ``on_result`` is invoked from the waiting thread as each job
+        resolves, in ``jobs`` order.
+
+        With thread-mode timeouts and ``after`` edges, wait on every job
+        of the graph (as the matrix does), not just the sinks: a job
+        queued behind a wedged pool is cancelled by *its* waiter's
+        starvation check, and a multi-hop chain whose head hangs needs
+        each link observed to propagate the timeout.
+        """
+        yielded = getattr(self._local, "holds_slot", False)
+        if yielded:
+            self._local.holds_slot = False
+            self._slots.release()
+        try:
+            results: List[JobResult] = []
+            for job in jobs:
+                res = self._await(job)
+                results.append(res)
+                if on_result is not None:
+                    on_result(res)
+            return results
+        finally:
+            if yielded:
+                self._slots.acquire()
+                self._local.holds_slot = True
 
     def run(self, jobs: Sequence[Tuple[str, Callable[[], Any]]],
             on_result: Optional[Callable[[JobResult], None]] = None
             ) -> List[JobResult]:
-        """Execute all jobs; returns results in submission order.
+        """Execute all (name, thunk) jobs; results in submission order."""
+        return self.wait([self.submit(name, fn) for name, fn in jobs],
+                         on_result=on_result)
 
-        ``on_result`` (optional) is invoked from the coordinating thread as
-        each job resolves — the campaign uses it for progress events.
-        """
-        progress = {"t": time.perf_counter()}   # last start or finish seen
-        work: "queue.SimpleQueue[Optional[_Job]]" = queue.SimpleQueue()
-        job_list = [_Job(name, fn) for name, fn in jobs]
-        for job in job_list:
-            work.put(job)
-        for _ in range(self.max_workers):
-            work.put(None)                      # one shutdown token each
+    def telemetry(self) -> Dict[str, int]:
+        """Pool-utilization snapshot: ``running`` jobs now,
+        ``peak_concurrent`` high-water mark, ``completed`` total. A job
+        blocked in a nested ``wait`` still counts as running (it is
+        in flight) even though it holds no slot."""
+        with self._meter_lock:
+            return {"max_workers": self.max_workers,
+                    "running": self._running,
+                    "peak_concurrent": self._peak,
+                    "completed": self._completed}
 
-        def worker() -> None:
-            while True:
-                job = work.get()
-                if job is None:
+    # -- worker --------------------------------------------------------------
+
+    def _worker(self, job: _Job) -> None:
+        for dep in job.after:
+            while not dep.done.wait(timeout=0.25):
+                # thread mode cannot kill a hung dependency, but it must
+                # not strand dependents either: once the dependency blows
+                # its timeout, flag it resolved-as-failed so this job (and
+                # every waiter) proceeds. Without this, a hung dependency's
+                # done event never fires and wait() deadlocks.
+                if self.timeout_s is not None \
+                        and self.isolation != "process" \
+                        and dep.started_at is not None \
+                        and time.perf_counter() - dep.started_at \
+                        >= self.timeout_s:
+                    # (process mode never needs this: the dependency's own
+                    # worker kills the child and sets done itself)
+                    self._flag_timeout(dep)
+        # acquire in short slices so a job cancelled while queued neither
+        # runs nor leaks a thread blocked on the semaphore forever
+        while not self._slots.acquire(timeout=0.25):
+            if job.done.is_set():
+                return
+        if job.done.is_set():               # cancelled between poll & acquire
+            self._slots.release()
+            return
+        self._local.holds_slot = True
+        try:
+            with job._lock:
+                if job.cancelled:
                     return
-                with job._lock:
-                    if job.cancelled:
-                        continue
-                    job.started_at = progress["t"] = time.perf_counter()
-                try:
+                job.started_at = self._progress["t"] = time.perf_counter()
+            with self._meter_lock:
+                self._running += 1
+                self._peak = max(self._peak, self._running)
+            try:
+                if self.isolation == "process":
+                    job.value = self._run_in_child(job)
+                else:
                     job.value = job.fn()
-                except BaseException as exc:  # noqa: BLE001 — isolate
-                    job.error = f"{type(exc).__name__}: {exc}"
-                now = progress["t"] = time.perf_counter()
-                job.duration_s = now - job.started_at
-                job.done.set()
+            except BaseException as exc:  # noqa: BLE001 — isolate
+                job.error = f"{type(exc).__name__}: {exc}"
+            now = self._progress["t"] = time.perf_counter()
+            job.duration_s = now - job.started_at
+            job.finished_at = now
+            with self._meter_lock:
+                self._running -= 1
+                self._completed += 1
+            job.done.set()
+        finally:
+            self._local.holds_slot = False
+            self._slots.release()
 
-        for _ in range(min(self.max_workers, len(job_list))):
-            threading.Thread(target=worker, daemon=True).start()
+    def _run_in_child(self, job: _Job) -> Any:
+        """Run ``job.fn`` in a forked child; kill it on timeout.
 
-        results: List[JobResult] = []
-        for job in job_list:
-            res = self._await(job, progress)
-            results.append(res)
-            if on_result is not None:
-                on_result(res)
-        return results
+        The child sends ``("ok", value)`` or ``("error", message)`` over a
+        pipe. The parent polls the pipe *while* the child runs (receiving
+        before join, so a large result can never deadlock the pipe buffer)
+        and SIGKILLs the child when ``timeout_s`` expires.
+        """
+        import multiprocessing
+        ctx = multiprocessing.get_context("fork")
+        recv, send = ctx.Pipe(duplex=False)
 
-    def _await(self, job: _Job, progress: Dict[str, float]) -> JobResult:
-        if self.timeout_s is None:
+        def child() -> None:
+            try:
+                value = job.fn()
+                try:
+                    send.send(("ok", value))
+                except Exception as exc:  # unpicklable result
+                    send.send(("error",
+                               f"result not picklable: "
+                               f"{type(exc).__name__}: {exc}"))
+            except BaseException as exc:  # noqa: BLE001 — isolate
+                try:
+                    send.send(("error", f"{type(exc).__name__}: {exc}"))
+                except Exception:
+                    pass
+            finally:
+                send.close()
+
+        proc = ctx.Process(target=child, daemon=True)
+        proc.start()
+        send.close()
+        deadline = (None if self.timeout_s is None
+                    else time.perf_counter() + self.timeout_s)
+        msg = None
+        while msg is None:
+            step = 0.1
+            if deadline is not None:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                step = min(step, remaining)
+            if recv.poll(step):
+                try:
+                    msg = recv.recv()
+                except EOFError:
+                    break
+                continue
+            if not proc.is_alive():
+                if recv.poll(0):        # drain a result buffered at exit
+                    try:
+                        msg = recv.recv()
+                    except EOFError:
+                        pass
+                break
+        if msg is None and proc.is_alive():
+            pid = proc.pid
+            proc.kill()
+            proc.join(10.0)
+            job.error = (f"timeout after {self.timeout_s:.0f}s "
+                         f"(worker process pid={pid} killed)")
+            return None
+        proc.join(10.0)
+        if msg is None:
+            job.error = (f"worker process died without a result "
+                         f"(exit code {proc.exitcode})")
+            return None
+        tag, payload = msg
+        if tag == "ok":
+            return payload
+        job.error = payload
+        return None
+
+    # -- resolution ----------------------------------------------------------
+
+    def _flag_timeout(self, job: _Job) -> None:
+        """Mark a started-but-hung job resolved as a timeout failure.
+
+        The worker thread itself is abandoned (it cannot be killed and
+        still holds its slot); stamping error + done here makes every
+        observer — waiters and dependents alike — agree the job failed,
+        instead of each waiter privately timing out while dependents hang
+        forever on a done event nobody will ever set. If the abandoned
+        thread eventually finishes anyway, ``error`` stays set, so the job
+        still resolves as failed everywhere.
+        """
+        with job._lock:
+            if job.done.is_set():
+                return
+            job.error = (f"timeout after {self.timeout_s:.0f}s "
+                         "(worker thread abandoned)")
+            job.finished_at = time.perf_counter()
+            job.duration_s = job.finished_at - (job.started_at
+                                                or job.finished_at)
+            job.done.set()
+
+    def _await(self, job: _Job) -> JobResult:
+        if self.timeout_s is None or self.isolation == "process":
+            # process mode enforces the timeout in the worker (the child is
+            # killed and the slot freed), so the waiter just waits
             job.done.wait()
             return self._resolve(job)
         while True:
@@ -127,27 +384,33 @@ class Scheduler:
                 remaining = self.timeout_s - (time.perf_counter() - started)
                 if job.done.wait(timeout=max(0.0, remaining)):
                     return self._resolve(job)
-                return JobResult(
-                    job.name,
-                    error=(f"timeout after {self.timeout_s:.0f}s "
-                           "(worker thread abandoned)"),
-                    duration_s=time.perf_counter() - started)
+                self._flag_timeout(job)
+                return self._resolve(job)
             # queued: wait a quantum for a worker slot; give up only once
-            # the pool has shown no progress (no job starting or finishing)
-            # for a full timeout — i.e. every worker is wedged.
+            # the pool has shown no progress (no job submitted, starting or
+            # finishing) for a full timeout — i.e. every worker is wedged.
+            # A job still waiting on `after` dependencies is not starved:
+            # it is not competing for a slot yet, so it is never cancelled
+            # here (its dependencies either finish — progress — or are hung
+            # jobs that get flagged themselves).
             if job.done.wait(timeout=min(1.0, self.timeout_s)):
                 return self._resolve(job)
             if job.started_at is None \
-                    and time.perf_counter() - progress["t"] >= self.timeout_s \
-                    and job.try_cancel():
-                return JobResult(
-                    job.name, error=(f"never started within "
-                                     f"{self.timeout_s:.0f}s of last pool "
-                                     "progress (workers wedged); cancelled"))
+                    and all(dep.done.is_set() for dep in job.after) \
+                    and time.perf_counter() - self._progress["t"] \
+                    >= self.timeout_s \
+                    and job.try_cancel(
+                        f"never started within {self.timeout_s:.0f}s of "
+                        "last pool progress (workers wedged); cancelled"):
+                return self._resolve(job)
 
     def _resolve(self, job: _Job) -> JobResult:
         if job.error is not None:
             return JobResult(job.name, error=job.error,
-                             duration_s=job.duration_s)
+                             duration_s=job.duration_s,
+                             started_at=job.started_at,
+                             finished_at=job.finished_at)
         return JobResult(job.name, value=job.value,
-                         duration_s=job.duration_s)
+                         duration_s=job.duration_s,
+                         started_at=job.started_at,
+                         finished_at=job.finished_at)

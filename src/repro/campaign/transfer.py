@@ -96,8 +96,45 @@ class TransferSweepResult:
             by.setdefault(run.level, []).append(final)
         return by
 
+    def _iters_by_level(self, result: CampaignResult
+                        ) -> Dict[int, Dict[str, int]]:
+        """Level -> {workload: iterations-to-correct} of the workloads
+        that reached CORRECT (never-correct workloads contribute
+        nothing)."""
+        by: Dict[int, Dict[str, int]] = {}
+        for run in result.runs:
+            if run.iters_to_correct is not None:
+                by.setdefault(run.level, {})[run.workload] = \
+                    run.iters_to_correct
+        return by
+
+    @staticmethod
+    def _iters_stats(cold: Dict[str, int],
+                     warm: Dict[str, int]) -> Dict[str, Any]:
+        """Mean iterations-to-correct per leg plus the warm − cold delta —
+        the non-saturating transfer signal (negative = the transferred
+        reference reached correctness in fewer iterations).
+
+        The delta is *paired*: averaged over workloads correct in BOTH
+        legs, so the two means cover the same population. Leg means over
+        mismatched populations can flip the sign — a workload only the
+        warm leg rescued (the strongest transfer win) would otherwise drag
+        the warm mean up and read as a regression. ``n_paired`` says how
+        many workloads the delta is over; None when there are none (or a
+        leg mean when that leg had no correct workload).
+        """
+        c = sum(cold.values()) / len(cold) if cold else None
+        w = sum(warm.values()) / len(warm) if warm else None
+        paired = sorted(set(cold) & set(warm))
+        delta = (sum(warm[k] - cold[k] for k in paired) / len(paired)
+                 if paired else None)
+        return {"cold": c, "warm": w, "delta": delta,
+                "n_paired": len(paired)}
+
     def report(self, thresholds=TRANSFER_THRESHOLDS) -> Dict[str, Any]:
         cold_lv, warm_lv = self._by_level(self.cold), self._by_level(self.warm)
+        cold_it, warm_it = (self._iters_by_level(self.cold),
+                            self._iters_by_level(self.warm))
         levels: Dict[int, Dict[str, Any]] = {}
         for level in sorted(set(cold_lv) | set(warm_lv)):
             c, w = cold_lv.get(level, []), warm_lv.get(level, [])
@@ -106,6 +143,8 @@ class TransferSweepResult:
                 "cold": {f"{p:g}": fast_p(c, p) for p in thresholds},
                 "warm": {f"{p:g}": fast_p(w, p) for p in thresholds},
                 "uplift_fast1": fast_p(w, 1.0) - fast_p(c, 1.0),
+                "iters_to_correct": self._iters_stats(
+                    cold_it.get(level, {}), warm_it.get(level, {})),
             }
         cold_all = [r for rs in cold_lv.values() for r in rs]
         warm_all = [r for rs in warm_lv.values() for r in rs]
@@ -120,8 +159,21 @@ class TransferSweepResult:
                 "warm": {f"{p:g}": fast_p(warm_all, p) for p in thresholds},
                 "uplift_fast1": (fast_p(warm_all, 1.0)
                                  - fast_p(cold_all, 1.0)),
+                "iters_to_correct": self._iters_stats(
+                    {k: v for it in cold_it.values()
+                     for k, v in it.items()},
+                    {k: v for it in warm_it.values()
+                     for k, v in it.items()}),
             },
         }
+
+    @staticmethod
+    def _iters_line(stats: Dict[str, Any]) -> str:
+        it = stats["iters_to_correct"]
+        fmt = (lambda v: "n/a" if v is None else f"{v:.2f}")
+        delta = "n/a" if it["delta"] is None else f"{it['delta']:+.2f}"
+        return (f"  iters-to-correct: cold={fmt(it['cold'])} "
+                f"warm={fmt(it['warm'])} (delta {delta})")
 
     def report_text(self) -> str:
         rep = self.report()
@@ -137,12 +189,14 @@ class TransferSweepResult:
                                for p, v in stats[leg].items())
                 lines.append(f"  {leg:4s}: {fp}")
             lines.append(f"  fast_1 uplift: {stats['uplift_fast1']:+.3f}")
+            lines.append(self._iters_line(stats))
         tot = rep["total"]
         lines.append(f"total  (n={tot['n']})")
         for leg in ("cold", "warm"):
             fp = "  ".join(f"fast_{p}={v:.3f}" for p, v in tot[leg].items())
             lines.append(f"  {leg:4s}: {fp}")
         lines.append(f"  fast_1 uplift: {tot['uplift_fast1']:+.3f}")
+        lines.append(self._iters_line(tot))
         return "\n".join(lines)
 
 

@@ -1,8 +1,15 @@
-"""Transfer-matrix engine (DESIGN.md §2): all-pairs enumeration, cache
-sharing, heat-map rendering with failed legs, the metal_m2 target, the
-same-platform transfer guard, and the --matrix CLI."""
+"""Transfer-matrix engine (DESIGN.md §2): all-pairs enumeration, the
+dependency-aware job graph (base overlap, warm-leg ordering, per-leg
+factory binding, attributed base failures, resume, process isolation),
+cache sharing, heat-map rendering with failed legs, the metal_m2 target,
+the same-platform transfer guard, and the --matrix CLI."""
 import dataclasses
 import json
+import os
+import threading
+import time
+from pathlib import Path
+from types import SimpleNamespace
 
 import pytest
 
@@ -167,6 +174,252 @@ def test_campaign_accepts_injected_scheduler():
                                        platform="metal_m2"),
                       scheduler=sched)
     assert r1.runs[0].final.correct and r2.runs[0].final.correct
+
+
+# ---------------------------------------------------------------------------
+# Job graph: overlap, ordering, per-leg binding, attribution, resume
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_overlaps_bases_and_orders_warm_legs():
+    """Acceptance: on a 4-worker pool the base campaigns demonstrably run
+    concurrently (telemetry peak >= 2, overlapping intervals, wall-clock
+    below the serial sum of leg durations), and no warm leg starts before
+    both of its base campaigns finished."""
+    wls = [_tiny(), _tiny("T1/swish", op="swish", scale=1.0)]
+    names = ["gpu_sim", "tpu_v5e"]
+    matrix = run_transfer_matrix(wls, names,
+                                 loop=LoopConfig(num_iterations=3),
+                                 max_workers=4)
+    assert matrix.n_failed == 0
+    tele = matrix.telemetry
+    assert tele["peak_concurrent_legs"] >= 2
+    jobs = tele["jobs"]
+    b1, b2 = jobs["base[gpu_sim]"], jobs["base[tpu_v5e]"]
+    assert max(b1["started_at"], b2["started_at"]) \
+        < min(b1["finished_at"], b2["finished_at"])
+    for src, dst in all_pairs(names):
+        warm = jobs[f"warm[{src}->{dst}]"]
+        assert warm["started_at"] >= jobs[f"base[{src}]"]["finished_at"]
+        assert warm["started_at"] >= jobs[f"base[{dst}]"]["finished_at"]
+    assert tele["wall_s"] < tele["serial_sum_s"]
+
+
+def test_warm_leg_starts_before_unrelated_slow_base_finishes(monkeypatch):
+    """Warm legs are gated on THEIR two bases only: with a straggler third
+    base, the pair of fast bases' warm legs complete while it still runs."""
+    import repro.campaign.matrix as matrix_mod
+
+    def fake_run_campaign(workloads, loop, **kw):
+        time.sleep(1.0 if loop.platform == "tpu_v4" else 0.05)
+        return SimpleNamespace(runs=[])
+
+    monkeypatch.setattr(matrix_mod, "run_campaign", fake_run_campaign)
+    monkeypatch.setattr(matrix_mod, "harvest_hints", lambda result: {})
+    monkeypatch.setattr(matrix_mod, "reference_sources",
+                        lambda result, name: {})
+    matrix = matrix_mod.run_transfer_matrix(
+        [_tiny()], ["gpu_sim", "metal_m2", "tpu_v4"], max_workers=8)
+    jobs = matrix.telemetry["jobs"]
+    slow_end = jobs["base[tpu_v4]"]["finished_at"]
+    for pair in (("gpu_sim", "metal_m2"), ("metal_m2", "gpu_sim")):
+        fast_warm = jobs[f"warm[{pair[0]}->{pair[1]}]"]
+        assert fast_warm["finished_at"] < slow_end
+
+
+def test_warm_leg_factories_bind_their_own_platform_and_hints(monkeypatch):
+    """Regression for the loop-variable capture bug: with legs running
+    concurrently, every warm leg's backend must be constructed for ITS
+    target platform with ITS source's hints — a by-reference closure handed
+    several legs the last iteration's platform."""
+    import repro.campaign.matrix as matrix_mod
+    created = []
+    lock = threading.Lock()
+    real_backend = matrix_mod.TemplateSearchBackend
+    real_harvest = matrix_mod.harvest_hints
+
+    class Recorder(real_backend):
+        def __init__(self, platform=None, reference_hints=None):
+            with lock:
+                created.append((plat_mod.resolve_platform(platform).name,
+                                (reference_hints or {}).get("__src__")))
+            super().__init__(platform=platform,
+                             reference_hints=reference_hints)
+
+    def tagged_harvest(result):
+        hints = real_harvest(result)
+        # stamp which platform's base produced these hints ("__src__" never
+        # matches a workload name, so the backend ignores it)
+        hints["__src__"] = result.runs[0].final.profile["platform"]
+        return hints
+
+    monkeypatch.setattr(matrix_mod, "TemplateSearchBackend", Recorder)
+    monkeypatch.setattr(matrix_mod, "harvest_hints", tagged_harvest)
+    names = ["gpu_sim", "metal_m2", "tpu_v5e"]
+    matrix = run_transfer_matrix(
+        [_tiny("T1/swish", op="swish", scale=1.0)], names,
+        loop=LoopConfig(num_iterations=2), max_workers=4)
+    assert matrix.n_failed == 0
+    assert matrix.telemetry["peak_concurrent_legs"] >= 2
+    # each backend was built for (target platform, source hints) of exactly
+    # one ordered pair, and every pair is covered
+    assert {(src, dst) for dst, src in created} == set(all_pairs(names))
+
+
+def test_base_failure_attributed_to_failing_platform_names():
+    """A warm leg whose base campaign(s) died must say WHICH platform's
+    base failed — and name both when both did."""
+    wls = [_tiny("T1/swish", op="swish", scale=1.0)]
+    matrix = run_transfer_matrix(
+        wls, ["tpu_v5e", "zz_bogus_a", "zz_bogus_b"],
+        loop=LoopConfig(num_iterations=2), max_workers=2)
+    both = matrix.legs[("zz_bogus_a", "zz_bogus_b")].error
+    assert "base campaign [zz_bogus_a] failed" in both
+    assert "base campaign [zz_bogus_b] failed" in both
+    one = matrix.legs[("zz_bogus_a", "tpu_v5e")].error
+    assert "base campaign [zz_bogus_a] failed" in one
+    assert "base campaign [tpu_v5e]" not in one
+    assert matrix.legs[("tpu_v5e", "zz_bogus_b")].error.startswith(
+        "RuntimeError: base campaign [zz_bogus_b] failed")
+
+
+def test_matrix_resume_with_half_prefilled_log(tmp_path):
+    """Per-leg resume survives the job-graph rewrite: a log holding only
+    the legs that ran ON one platform (its base + every warm leg targeting
+    it) resumes exactly those, re-runs the rest, and reproduces the
+    uninterrupted matrix."""
+    wls = [_tiny(), _tiny("T1/swish", op="swish", scale=1.0)]
+    names = ["metal_m2", "tpu_v5e"]
+    loop = LoopConfig(num_iterations=2)
+    full_log = tmp_path / "full.jsonl"
+    first = run_transfer_matrix(wls, names, loop=loop, max_workers=2,
+                                log_path=full_log)
+    assert first.n_failed == 0
+    events = [json.loads(line)
+              for line in full_log.read_text().splitlines()]
+    half = [ev for ev in events
+            if (ev.get("loop") or {}).get("platform") == "metal_m2"]
+    assert any(ev.get("event") == "workload_done" for ev in half)
+    half_log = tmp_path / "half.jsonl"
+    half_log.write_text("\n".join(json.dumps(ev) for ev in half) + "\n")
+
+    second = run_transfer_matrix(wls, names, loop=loop, max_workers=2,
+                                 log_path=half_log)
+    assert second.n_failed == 0
+    onto_metal = second.legs[("tpu_v5e", "metal_m2")]
+    assert onto_metal.sweep.cold.n_skipped == len(wls)   # base[metal_m2]
+    assert onto_metal.sweep.warm.n_skipped == len(wls)   # warm tpu->metal
+    onto_tpu = second.legs[("metal_m2", "tpu_v5e")]
+    assert onto_tpu.sweep.cold.n_skipped == 0            # base[tpu_v5e]
+    assert onto_tpu.sweep.warm.n_skipped == 0
+    # resumed legs report identically to the uninterrupted run — including
+    # iters_to_correct, which must be restored from the log, not lost
+    assert second.report()["pairs"] == first.report()["pairs"]
+
+
+@pytest.mark.slow
+def test_matrix_process_isolation_end_to_end(tmp_path):
+    """--isolate mode: every leg in a forked child, results pickled back,
+    child cache snapshots folded into the parent's telemetry.
+
+    Runs in a fresh interpreter: forking is only safe before the parent
+    has executed jax computations (the XLA runtime's threads/locks do not
+    survive a fork) — which holds for the real ``--isolate`` CLI path,
+    where all verification happens inside the leg children, but not for
+    this pytest process after earlier tests ran jax.
+    """
+    import subprocess
+    import sys
+    path = tmp_path / "v.jsonl"
+    code = (
+        "from repro.campaign import VerificationCache, run_transfer_matrix\n"
+        "from repro.core import LoopConfig\n"
+        "from repro.core.workload import Workload, randn\n"
+        "from repro.kernels import ref\n"
+        "wl = Workload(name='T1/swish', level=1, op='swish',\n"
+        "              ref_fn=ref.swish,\n"
+        "              input_fn=lambda rng: {'x': randn(rng, (64, 512),\n"
+        "                                               1.0)},\n"
+        "              input_shapes={'x': (64, 512)})\n"
+        f"cache = VerificationCache.open({str(path)!r})\n"
+        "m = run_transfer_matrix([wl], ['metal_m2', 'tpu_v5e'],\n"
+        "                        loop=LoopConfig(num_iterations=2),\n"
+        "                        max_workers=2, isolation='process',\n"
+        "                        cache=cache)\n"
+        "assert m.n_failed == 0, m.report()\n"
+        "assert m.telemetry['isolation'] == 'process'\n"
+        "for leg in m.legs.values():\n"
+        "    assert leg.sweep.warm.runs[0].final.correct\n"
+        "stats = m.cache.stats()\n"
+        "assert stats['entries'] > 0, stats\n"
+        "print('PROCESS_MATRIX_OK', stats['entries'])\n")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=300, cwd=str(Path(__file__).resolve().parents[1]),
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep + str(
+                 Path(__file__).resolve().parents[1])})
+    assert proc.returncode == 0, proc.stderr
+    assert "PROCESS_MATRIX_OK" in proc.stdout
+    # the persistent file is the cross-process medium: this process sees
+    # every entry the leg children appended
+    assert len(VerificationCache.open(path)) > 0
+
+
+def test_iters_delta_is_paired_over_workloads_correct_in_both_legs():
+    """A workload only the warm leg rescued must not drag the warm mean up
+    and flip the delta's sign: the delta pairs workloads correct in BOTH
+    legs."""
+    from repro.campaign.runner import WorkloadRun
+    from repro.campaign.transfer import TransferSweepResult
+    from repro.core.states import EvalResult, ExecutionState
+
+    def fake_result(iters):        # workload -> iters_to_correct (or None)
+        runs = [WorkloadRun(workload=name, level=1, iters_to_correct=it)
+                for name, it in iters.items()]
+        return SimpleNamespace(runs=runs, finals=lambda: [
+            EvalResult(ExecutionState.CORRECT if r.iters_to_correct
+                       else ExecutionState.GENERATION_FAILURE)
+            for r in runs])
+
+    sweep = TransferSweepResult(
+        from_platform="a", to_platform="b",
+        source=fake_result({}),
+        # W1 correct in both (warm faster); W2 rescued by warm only
+        cold=fake_result({"W1": 2, "W2": None}),
+        warm=fake_result({"W1": 1, "W2": 4}),
+        hints={})
+    it = sweep.report()["total"]["iters_to_correct"]
+    assert it["cold"] == 2.0
+    assert it["warm"] == 2.5          # leg means still cover each leg
+    assert it["n_paired"] == 1
+    assert it["delta"] == -1.0        # paired: W1 only — transfer helped
+
+
+def test_matrix_reports_iteration_delta_metric():
+    """The softmax workload needs refinement iterations cold (numerically
+    naive candidates fail on large-magnitude inputs) but lands correct
+    earlier warm via the transferred online-softmax hint: the
+    iterations-to-correct delta is negative where fast_1 uplift saturates
+    at zero."""
+    wls = [_tiny()]                       # softmax, scale=60
+    names = ["metal_m2", "tpu_v5e"]
+    matrix = run_transfer_matrix(wls, names,
+                                 loop=LoopConfig(num_iterations=4),
+                                 max_workers=2)
+    assert matrix.n_failed == 0
+    for pair in all_pairs(names):
+        leg = matrix.legs[pair]
+        it = leg.sweep.report()["total"]["iters_to_correct"]
+        assert it["cold"] is not None and it["warm"] is not None
+        assert leg.delta_iters == it["delta"] == it["warm"] - it["cold"]
+        assert leg.delta_iters < 0
+    text = matrix.heatmap_text(metric="delta_iters")
+    assert "iterations-to-correct delta" in text
+    md = matrix.heatmap_markdown(metric="delta_iters")
+    assert "| **metal_m2** |" in md
+    with pytest.raises(ValueError, match="metric"):
+        matrix.heatmap_text(metric="bogus")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,281 @@
+"""Dependency-aware scheduler (DESIGN.md §2): submit/wait handles, after=
+edges, the re-entrant global worker budget, cancellation stamping, and the
+process-isolation mode (timeout actually kills a hung job)."""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.campaign.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# submit / wait / after
+# ---------------------------------------------------------------------------
+
+
+def test_submit_wait_returns_values_and_isolates_errors():
+    sched = Scheduler(max_workers=2)
+    ok = sched.submit("ok", lambda: 41)
+    boom = sched.submit("boom", lambda: (_ for _ in ()).throw(
+        RuntimeError("exploded")))
+    results = {r.name: r for r in sched.wait([ok, boom])}
+    assert results["ok"].ok and results["ok"].value == 41
+    assert not results["boom"].ok
+    assert "RuntimeError: exploded" in results["boom"].error
+    assert results["ok"].started_at is not None
+    assert results["ok"].finished_at >= results["ok"].started_at
+
+
+def test_dependent_job_starts_only_after_all_dependencies():
+    sched = Scheduler(max_workers=4)
+    a = sched.submit("a", lambda: time.sleep(0.15) or "a")
+    b = sched.submit("b", lambda: time.sleep(0.05) or "b")
+    c = sched.submit("c", lambda: "c", after=(a, b))
+    sched.wait([a, b, c])
+    assert c.started_at >= a.finished_at
+    assert c.started_at >= b.finished_at
+
+
+def test_dependent_starts_as_soon_as_its_deps_resolve_not_after_all_jobs():
+    """The matrix requirement: a warm leg gated on two fast bases must run
+    while an unrelated slow base is still executing."""
+    sched = Scheduler(max_workers=4)
+    slow_gate = threading.Event()
+    fast_a = sched.submit("fast_a", lambda: "a")
+    fast_b = sched.submit("fast_b", lambda: "b")
+    slow = sched.submit("slow", lambda: slow_gate.wait(10.0))
+    dep_done = threading.Event()
+    dep = sched.submit("dep", dep_done.set, after=(fast_a, fast_b))
+    # the dependent must complete while 'slow' is still running
+    assert dep_done.wait(5.0)
+    assert not slow.done.is_set()
+    slow_gate.set()
+    sched.wait([fast_a, fast_b, slow, dep])
+
+
+def test_dependency_failure_is_visible_to_dependent_not_fatal():
+    """after= edges are ordering only: the dependent runs and reads the
+    dependency's error off the handle (how the matrix attributes failed
+    bases)."""
+    sched = Scheduler(max_workers=2)
+    bad = sched.submit("bad", lambda: (_ for _ in ()).throw(
+        ValueError("base died")))
+    seen = {}
+
+    def dependent():
+        seen["dep_error"] = bad.error
+        return "ran"
+
+    dep = sched.submit("dep", dependent, after=(bad,))
+    results = {r.name: r for r in sched.wait([bad, dep])}
+    assert not results["bad"].ok
+    assert results["dep"].ok and results["dep"].value == "ran"
+    assert "base died" in seen["dep_error"]
+
+
+def test_hung_dependency_does_not_strand_dependents():
+    """Regression: in thread mode a timed-out dependency's done event used
+    to never fire, so a job gated on it (and any wait() over the graph)
+    deadlocked. The dependency must resolve as a timeout failure that the
+    dependent can observe and react to."""
+    sched = Scheduler(max_workers=2, timeout_s=0.3)
+    gate = threading.Event()
+    hung = sched.submit("hung", lambda: gate.wait(60.0))
+    seen = {}
+
+    def dependent():
+        seen["dep_error"] = hung.error
+        return "ran"
+
+    dep = sched.submit("dep", dependent, after=(hung,))
+    t0 = time.time()
+    results = {r.name: r for r in sched.wait([hung, dep])}
+    gate.set()
+    assert time.time() - t0 < 10.0          # resolved, not deadlocked
+    assert not results["hung"].ok and "timeout" in results["hung"].error
+    assert results["dep"].ok and results["dep"].value == "ran"
+    assert "timeout" in seen["dep_error"]
+
+
+def test_run_returns_results_in_submission_order():
+    sched = Scheduler(max_workers=4)
+    results = sched.run([(f"j{i}", (lambda i=i: i)) for i in range(8)])
+    assert [r.name for r in results] == [f"j{i}" for i in range(8)]
+    assert [r.value for r in results] == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# Global worker budget + re-entrancy
+# ---------------------------------------------------------------------------
+
+
+def test_nested_fanout_is_bounded_and_deadlock_free():
+    """Jobs that fan sub-jobs onto their own scheduler: leaf concurrency
+    never exceeds max_workers (the budget is global, and waiting parents
+    yield their slot) and everything completes."""
+    sched = Scheduler(max_workers=2)
+    lock = threading.Lock()
+    state = {"running": 0, "peak": 0}
+
+    def leaf():
+        with lock:
+            state["running"] += 1
+            state["peak"] = max(state["peak"], state["running"])
+        time.sleep(0.03)
+        with lock:
+            state["running"] -= 1
+        return 1
+
+    def outer():
+        return sum(r.value
+                   for r in sched.run([(f"leaf", leaf) for _ in range(3)]))
+
+    results = sched.run([(f"outer{i}", outer) for i in range(4)])
+    assert [r.value for r in results] == [3, 3, 3, 3]
+    assert state["peak"] <= 2
+    assert sched.telemetry()["completed"] == 16
+
+
+def test_concurrent_run_calls_share_one_budget():
+    """Two threads driving the same scheduler get max_workers slots total,
+    not max_workers each — the matrix's shared workload pool contract."""
+    sched = Scheduler(max_workers=2)
+    lock = threading.Lock()
+    state = {"running": 0, "peak": 0}
+
+    def leaf():
+        with lock:
+            state["running"] += 1
+            state["peak"] = max(state["peak"], state["running"])
+        time.sleep(0.03)
+        with lock:
+            state["running"] -= 1
+
+    threads = [threading.Thread(
+        target=lambda: sched.run([("l", leaf) for _ in range(4)]))
+        for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert state["peak"] <= 2
+    assert sched.telemetry()["completed"] == 12
+
+
+def test_telemetry_tracks_peak_concurrency():
+    sched = Scheduler(max_workers=3)
+    gate = threading.Event()
+    jobs = [sched.submit(f"j{i}", lambda: gate.wait(5.0)) for i in range(3)]
+    deadline = time.time() + 5.0
+    while sched.telemetry()["running"] < 3 and time.time() < deadline:
+        time.sleep(0.01)
+    assert sched.telemetry()["running"] == 3
+    gate.set()
+    sched.wait(jobs)
+    tele = sched.telemetry()
+    assert tele["peak_concurrent"] == 3 and tele["completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Cancellation stamping (every resolution path agrees)
+# ---------------------------------------------------------------------------
+
+
+def test_try_cancel_stamps_error_on_generic_wait_path():
+    """A job cancelled while queued must resolve ok=False through the
+    plain done.wait() path too — without the stamp it came back as
+    ok=True, value=None."""
+    sched = Scheduler(max_workers=1)          # no timeout: generic path
+    gate = threading.Event()
+    blocker = sched.submit("blocker", lambda: gate.wait(10.0))
+    queued = sched.submit("queued", lambda: 99)
+    time.sleep(0.05)
+    assert queued.try_cancel()
+    res = sched.wait([queued])[0]
+    assert not res.ok
+    assert res.error == "cancelled"
+    assert res.value is None
+    gate.set()
+    assert sched.wait([blocker])[0].ok
+    # ... and a cancelled job never runs, even once a slot frees up
+    time.sleep(0.3)
+    assert queued.value is None
+
+
+def test_try_cancel_refuses_started_job():
+    sched = Scheduler(max_workers=1)
+    gate = threading.Event()
+    running = sched.submit("running", lambda: gate.wait(10.0) and "done")
+    deadline = time.time() + 5.0
+    while running.started_at is None and time.time() < deadline:
+        time.sleep(0.01)
+    assert not running.try_cancel()
+    gate.set()
+    assert sched.wait([running])[0].ok
+
+
+# ---------------------------------------------------------------------------
+# Process isolation
+# ---------------------------------------------------------------------------
+
+
+def test_process_isolation_returns_values_and_isolates_errors():
+    sched = Scheduler(max_workers=2, isolation="process")
+    results = {r.name: r for r in sched.run([
+        ("ok", lambda: {"answer": 42}),
+        ("boom", lambda: (_ for _ in ()).throw(ValueError("child died"))),
+    ])}
+    assert results["ok"].ok and results["ok"].value == {"answer": 42}
+    assert not results["boom"].ok
+    assert "ValueError: child died" in results["boom"].error
+
+
+def test_process_isolation_timeout_kills_hung_job(tmp_path):
+    """The point of process mode: a timed-out job is SIGKILL-ed, not
+    abandoned — the hung worker is genuinely gone afterwards."""
+    pid_file = tmp_path / "hung.pid"
+
+    def hang():
+        pid_file.write_text(str(os.getpid()))
+        time.sleep(120)
+
+    sched = Scheduler(max_workers=2, timeout_s=1.0, isolation="process")
+    results = {r.name: r for r in sched.run([
+        ("hang", hang), ("ok", lambda: 1)])}
+    assert results["ok"].ok
+    assert not results["hang"].ok
+    assert "killed" in results["hang"].error
+    pid = int(pid_file.read_text())
+    deadline = time.time() + 10.0
+    while time.time() < deadline:
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            break
+        time.sleep(0.1)
+    else:
+        pytest.fail(f"hung child pid={pid} still alive after timeout kill")
+
+
+def test_process_isolation_slot_freed_after_kill():
+    """Unlike an abandoned thread, a killed child gives its slot back: a
+    1-wide pool survives a hung job and still runs the next one."""
+    sched = Scheduler(max_workers=1, timeout_s=0.5, isolation="process")
+    results = sched.run([("hang", lambda: time.sleep(60)),
+                         ("next", lambda: "ran")])
+    assert not results[0].ok and "killed" in results[0].error
+    assert results[1].ok and results[1].value == "ran"
+
+
+def test_process_isolation_unpicklable_result_reported():
+    sched = Scheduler(max_workers=1, isolation="process")
+    res = sched.run([("lock", lambda: threading.Lock())])[0]
+    assert not res.ok
+    assert "not picklable" in res.error
+
+
+def test_invalid_isolation_mode_rejected():
+    with pytest.raises(ValueError, match="isolation"):
+        Scheduler(isolation="fiber")

@@ -1,11 +1,14 @@
 #!/usr/bin/env python
-"""Docs-consistency check (CI): the documentation must track the registry.
+"""Docs-consistency check (CI): the documentation must track the code.
 
 Fails (exit 1, one line per problem) when:
 
 * a registered platform is missing from README.md's platform table, the
   campaign CLI docs, or DESIGN.md;
-* a public name exported by ``repro.campaign`` is missing from docs/api.md.
+* a public name exported by ``repro.campaign`` is missing from docs/api.md;
+* a ``python -m repro.campaign`` CLI flag (introspected from the live
+  argument parser, so new flags are covered automatically) is missing from
+  README.md or docs/api.md.
 
 Run as ``PYTHONPATH=src python tools/check_docs.py`` from the repo root.
 """
@@ -46,6 +49,19 @@ def main() -> int:
         if name not in design:
             problems.append(f"DESIGN.md: platform {name!r} never mentioned")
 
+    from repro.campaign.__main__ import build_parser
+    flags = sorted({opt for action in build_parser()._actions
+                    for opt in action.option_strings
+                    if opt.startswith("--") and opt != "--help"})
+    for flag in flags:
+        # word-boundary match: documenting --matrix-workers must not count
+        # as documenting --workers (or --matrix)
+        pattern = re.compile(re.escape(flag) + r"(?![\w-])")
+        for doc_name, text in (("README.md", readme), ("docs/api.md", api)):
+            if not pattern.search(text):
+                problems.append(
+                    f"{doc_name}: campaign CLI flag {flag} undocumented")
+
     public = [n for n in vars(campaign)
               if (not n.startswith("_") and n[0].isupper())
               or n in ("run_campaign", "run_transfer_sweep",
@@ -61,7 +77,8 @@ def main() -> int:
     if not problems:
         n = len(available_platforms())
         print(f"docs-consistency: OK ({n} platforms, "
-              f"{len(set(public))} campaign exports)")
+              f"{len(set(public))} campaign exports, "
+              f"{len(flags)} CLI flags)")
     return 1 if problems else 0
 
 

@@ -1,0 +1,72 @@
+"""Run an LLM-backed synthesis campaign end to end — offline.
+
+The full production data path (prompt -> transport -> completion -> exec ->
+callable verification -> feedback), driven by the deterministic
+MockTransport so it runs anywhere with zero network: each completion echoes
+the workload's reference oracle as a fenced code block, exactly what the
+session layer, rate limiter, and usage accounting see in production. The
+CI fast lane executes this script as the LLM smoke test.
+
+Usage::
+
+  PYTHONPATH=src python examples/llm_campaign.py [runs-dir]
+
+The first run records the prompt->completion session to
+``<runs-dir>/llm-session.jsonl``; the second half of the script replays it
+byte-for-byte with ZERO live transport calls — the same
+``--record``/``--replay`` workflow the campaign CLI exposes
+(``python -m repro.campaign --backend llm --replay ...``).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.campaign import Scheduler, run_campaign
+from repro.core import LoopConfig, kernelbench
+from repro.llm import MockTransport, build_llm_context, format_usage
+
+
+def main() -> None:
+    runs = Path(sys.argv[1] if len(sys.argv) > 1 else "runs-llm")
+    runs.mkdir(parents=True, exist_ok=True)
+    session = runs / "llm-session.jsonl"
+    workloads = kernelbench.suite(1, small=True)
+    loop = LoopConfig(num_iterations=2, platform="tpu_v5e")
+
+    # -- leg 1: record — MockTransport completions captured to JSONL --------
+    # transport pinned explicitly: this script promises zero network, so a
+    # stray KFORGE_LLM_ENDPOINT in the environment must not flip it (or
+    # CI) onto a live billed endpoint
+    ctx = build_llm_context(transport=MockTransport(), record=str(session),
+                            rpm=100_000, tpm=10_000_000)
+    sched = Scheduler(max_workers=4)     # sessions yield slots while pacing
+    result = run_campaign(
+        workloads, loop, scheduler=sched,
+        agent_factory=ctx.agent_factory(platform=loop.platform,
+                                        scheduler=sched),
+        usage=ctx.usage, log_path=runs / "llm-campaign.jsonl")
+    states = [r.state.value for r in result.finals()]
+    print(f"recorded campaign: {len(result.runs)} workloads -> "
+          f"{states.count('correct')} correct")
+    print(f"llm usage: {format_usage(result.llm_usage)}")
+    live_calls = ctx.transport.inner.calls
+    print(f"session: {len(ctx.transport)} prompts recorded to {session} "
+          f"({live_calls} live transport calls)")
+
+    # -- leg 2: replay — byte-for-byte, zero live calls ---------------------
+    replay_ctx = build_llm_context(replay=str(session))
+    replayed = run_campaign(
+        workloads, loop,
+        agent_factory=replay_ctx.agent_factory(platform=loop.platform),
+        usage=replay_ctx.usage)
+    rep_states = [r.state.value for r in replayed.finals()]
+    assert rep_states == states, (rep_states, states)
+    assert replay_ctx.transport.inner is None          # no live channel at all
+    print(f"replayed campaign: identical results, "
+          f"{replay_ctx.transport.served_from_file} completions served "
+          "from the session file, 0 live calls")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ wl = kernelbench.by_name("L3/starcoder2_attn_block", small=True)
 print("=" * 70)
 print("1. The synthesis prompt (what a production LLM backend receives):")
 print("=" * 70)
-backend = LLMBackend()
+backend = LLMBackend(prompt_only=True)
 prompt = backend.build_prompt(wl, prev=None, prev_result=None,
                               recommendation=None, use_reference=True)
 print(prompt[:2200], "\n[... truncated ...]\n")

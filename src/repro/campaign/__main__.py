@@ -15,6 +15,10 @@ Examples::
   python -m repro.campaign --log runs/c1.jsonl           # resumable
   python -m repro.campaign --log runs/c1.jsonl --report-only
   python -m repro.campaign --cache-path runs/verify.jsonl  # cross-process
+  python -m repro.campaign --backend llm --record runs/s1.jsonl
+  python -m repro.campaign --backend llm --replay runs/s1.jsonl \
+      --platform metal_m2                 # deterministic, 0 live calls
+  python -m repro.campaign --matrix --backend llm --rpm 60 --tpm 200000
 """
 from __future__ import annotations
 
@@ -28,6 +32,7 @@ from repro.campaign.report import (distinct_loop_configs, format_report,
                                    report_from_events)
 from repro.campaign.matrix import run_transfer_matrix
 from repro.campaign.runner import Campaign, CampaignConfig
+from repro.campaign.scheduler import Scheduler
 from repro.campaign.transfer import run_transfer_sweep
 from repro.core import kernelbench
 from repro.core.refinement import LoopConfig
@@ -80,6 +85,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run each --matrix leg in a forked child process "
                          "so --timeout bounds the whole leg and a hung leg "
                          "is killed instead of abandoned")
+    ap.add_argument("--backend", choices=("template", "llm"),
+                    default="template",
+                    help="generation agent: the offline template search "
+                         "(default) or LLM sessions over the repro.llm "
+                         "transport layer (MockTransport unless "
+                         "KFORGE_LLM_ENDPOINT or --replay selects another)")
+    ap.add_argument("--record", default=None, metavar="SESSION",
+                    help="(--backend llm) record every prompt->completion "
+                         "pair into this JSONL session file (resume-safe: "
+                         "recorded keys are never re-spent)")
+    ap.add_argument("--replay", default=None, metavar="SESSION",
+                    help="(--backend llm) replay a recorded session "
+                         "byte-for-byte with ZERO live calls")
+    ap.add_argument("--rpm", type=float, default=None,
+                    help="(--backend llm) shared requests-per-minute "
+                         "budget across all workers/legs")
+    ap.add_argument("--tpm", type=float, default=None,
+                    help="(--backend llm) shared tokens-per-minute budget "
+                         "across all workers/legs")
     ap.add_argument("--cache-path", default=None,
                     help="persistent JSONL verification cache shared "
                          "across processes (and across both sweep legs)")
@@ -121,6 +145,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                         ("--isolate", args.isolate or None)):
         if value is not None and not args.matrix:
             ap.error(f"{flag} only applies to --matrix")
+    for flag, value in (("--record", args.record), ("--replay", args.replay),
+                        ("--rpm", args.rpm), ("--tpm", args.tpm)):
+        if value is not None and args.backend != "llm":
+            ap.error(f"{flag} only applies to --backend llm")
+    if args.record and args.replay:
+        ap.error("--record and --replay are mutually exclusive (a replayed "
+                 "session makes no live calls to record)")
+    if args.backend == "llm" and args.isolate:
+        ap.error("--backend llm cannot run with --isolate: the shared "
+                 "transport/rate-limiter state does not survive per-leg "
+                 "forks; drop --isolate for LLM matrices")
     if args.platforms is not None:
         unknown = sorted(set(args.platforms) - set(available_platforms()))
         if unknown:
@@ -157,6 +192,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     cache = (VerificationCache.open(args.cache_path)
              if args.cache_path else VerificationCache())
 
+    llm_ctx = None
+    if args.backend == "llm":
+        from repro.llm import TransportError, build_llm_context
+        try:
+            llm_ctx = build_llm_context(record=args.record,
+                                        replay=args.replay,
+                                        rpm=args.rpm, tpm=args.tpm)
+        except (TransportError, ValueError) as exc:
+            # ValueError: e.g. --rpm 0 / --tpm 0 (budgets must be positive)
+            ap.error(str(exc))
+
     if args.matrix:
         # No default event log for the matrix: with only --cache-path, a
         # rerun re-verifies every leg against the persistent cache (100%
@@ -169,11 +215,13 @@ def main(argv: Optional[List[str]] = None) -> int:
             leg_workers=args.leg_workers,
             isolation="process" if args.isolate else "thread",
             timeout_s=args.timeout,
-            log_path=args.log, resume=not args.no_resume)
+            log_path=args.log, resume=not args.no_resume,
+            backend=args.backend, llm=llm_ctx)
         tele = matrix.telemetry
         print(f"transfer matrix: {len(workloads)} workloads x "
               f"{len(matrix.legs)} ordered pairs over "
-              f"{len(matrix.platforms)} platforms"
+              f"{len(matrix.platforms)} platforms "
+              f"({tele['backend']} backend)"
               + (f" -> {args.log}" if args.log else ""))
         print(f"job graph: peak {tele['peak_concurrent_legs']} concurrent "
               f"legs (matrix_workers={tele['matrix_workers']}, "
@@ -182,6 +230,9 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"wall {tele['wall_s']:.1f}s vs "
               f"{tele['serial_sum_s']:.1f}s serial leg-time")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
+        if tele.get("llm_usage"):
+            from repro.llm import format_usage
+            print(f"llm usage: {format_usage(tele['llm_usage'])}")
         print()
         print(matrix.heatmap_text())
         print()
@@ -192,14 +243,23 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1 if matrix.n_failed else 0
 
     if args.transfer_from:
+        # LLM sweeps get an explicit shared scheduler so throttled sessions
+        # can yield their slot (the sweep's agent factories receive it)
+        sweep_sched = Scheduler(max_workers=args.workers,
+                                timeout_s=args.timeout) \
+            if llm_ctx is not None else None
         sweep = run_transfer_sweep(
             workloads, from_platform=args.transfer_from,
             to_platform=args.platform, loop=loop, cache=cache,
             max_workers=args.workers, timeout_s=args.timeout,
-            log_path=log_path, resume=not args.no_resume)
+            log_path=log_path, resume=not args.no_resume,
+            backend=args.backend, llm=llm_ctx, scheduler=sweep_sched)
         print(f"transfer sweep: {len(workloads)} workloads x 3 legs "
-              f"-> {log_path}")
+              f"({args.backend} backend) -> {log_path}")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
+        if llm_ctx is not None:
+            from repro.llm import format_usage
+            print(f"llm usage: {format_usage(llm_ctx.usage.snapshot())}")
         print()
         print(sweep.report_text())
         return 0
@@ -207,7 +267,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     cfg = CampaignConfig(loop=loop, max_workers=args.workers,
                          timeout_s=args.timeout, log_path=log_path,
                          resume=not args.no_resume)
-    campaign = Campaign(workloads, cfg, cache=cache)
+    if llm_ctx is not None:
+        # an explicit scheduler so the sessions' pacing sleeps can yield
+        # their worker slot back to runnable verification jobs
+        sched = Scheduler(max_workers=args.workers, timeout_s=args.timeout)
+        campaign = Campaign(
+            workloads, cfg, cache=cache, scheduler=sched,
+            agent_factory=llm_ctx.agent_factory(platform=args.platform,
+                                                scheduler=sched),
+            usage=llm_ctx.usage)
+    else:
+        campaign = Campaign(workloads, cfg, cache=cache)
     result = campaign.run()
 
     done = sum(1 for r in result.runs if r.error is None and not r.skipped)
@@ -216,6 +286,9 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{done} ran ok) -> {result.log_path}")
     print(f"verification cache: "
           f"{format_cache_stats(result.cache.stats())}")
+    if result.llm_usage is not None:
+        from repro.llm import format_usage
+        print(f"llm usage: {format_usage(result.llm_usage)}")
     print()
     print(campaign.report_text())
     return 0

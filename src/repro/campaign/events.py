@@ -13,6 +13,11 @@ One JSON object per line. Event kinds:
                    the transfer matrix's non-saturating warm-vs-cold
                    signal) — resume skips these workloads
   workload_error   scheduler-isolated failure (exception or timeout)
+  campaign_done    end-of-run marker with the verification-cache stats and,
+                   for LLM-backed campaigns, ``llm_usage`` — THIS
+                   campaign's token/request delta of the shared
+                   repro.llm.UsageMeter; report_from_events sums the
+                   deltas of every campaign_done in a log
 
 Every event carries the hardware platform it ran against (also embedded in
 ``loop``), so one log can interleave multi-platform runs — e.g. both legs

@@ -51,8 +51,16 @@ threads and locks do not survive a fork and the children deadlock. The
 happens inside the leg children); a long-lived driver process that already
 ran jax should shell out instead.
 
+Backends: the default legs run the offline ``TemplateSearchBackend``.
+``backend="llm"`` (CLI ``--backend llm``) fans the SAME job graph over
+``LLMBackend`` sessions (``repro.llm``): base legs prompt cold, warm legs
+inject the source base's rendered references per leg, and all sessions
+share one transport / rate limiter / usage meter — a throttled session
+yields its verification slot (``Scheduler.yielding``), so LLM pacing never
+shrinks the worker budget. See ``docs/llm_backends.md``.
+
 CLI: ``python -m repro.campaign --matrix [--platforms A B ...]
-[--matrix-workers N] [--leg-workers N] [--isolate]``;
+[--matrix-workers N] [--leg-workers N] [--isolate] [--backend llm]``;
 benchmark: ``benchmarks/bench_transfer_matrix.py``.
 """
 from __future__ import annotations
@@ -242,7 +250,9 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                         timeout_s: Optional[float] = None,
                         isolation: str = "thread",
                         log_path: Optional[Union[str, Path]] = None,
-                        resume: bool = True) -> TransferMatrix:
+                        resume: bool = True,
+                        backend: str = "template",
+                        llm=None) -> TransferMatrix:
     """Run the §6.2 transfer sweep over every ordered platform pair as one
     dependency-aware job graph.
 
@@ -252,6 +262,22 @@ def run_transfer_matrix(workloads: Sequence[Workload],
             registered platform (:func:`repro.platforms.available_platforms`).
         loop: base loop configuration; ``platform`` / ``use_reference`` /
             ``transfer_from`` are overridden per leg.
+        backend: ``"template"`` (offline deterministic agent, default) or
+            ``"llm"``: every leg's workers then run ``LLMBackend`` sessions
+            drawn from ``llm`` — base legs prompt cold, each warm leg
+            injects its source base's *rendered references*
+            (``LLMBackend.reference_sources``), bound per leg the same
+            default-arg way the template factories bind hints. Sessions
+            share ONE transport, rate limiter, and usage meter across all
+            legs, and pace/back off inside ``work_sched.yielding()`` so a
+            throttled leg's slot goes to runnable verification work (peak
+            concurrency stays within the same budget as the template
+            backend). Incompatible with ``isolation="process"`` (transports
+            and limiters are in-memory shared state a fork would split).
+        llm: a :class:`repro.llm.LLMContext` when ``backend="llm"``; a
+            deterministic MockTransport context is built when omitted. Its
+            usage snapshot lands in ``TransferMatrix.telemetry["llm_usage"]``
+            and on every leg's ``campaign_done`` event.
         cache: shared verification cache for ALL legs (open a persistent
             one with ``VerificationCache.open`` to share across processes
             and reruns); a fresh in-memory cache when omitted. In process
@@ -293,6 +319,18 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         raise ValueError(f"transfer matrix needs >= 2 platforms, got {names}")
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate platforms in {names}")
+    if backend not in ("template", "llm"):
+        raise ValueError(f"backend must be 'template' or 'llm', "
+                         f"got {backend!r}")
+    if backend == "llm" and isolation == "process":
+        raise ValueError(
+            "backend='llm' cannot run with isolation='process': the shared "
+            "transport, rate limiter, and usage meter are in-memory state a "
+            "fork would split per child (and record/replay file writes "
+            "would race); run LLM matrices in thread mode")
+    if backend == "llm" and llm is None:
+        from repro.llm import build_llm_context
+        llm = build_llm_context()
     base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
     leg_workers = leg_workers if leg_workers is not None else max_workers
@@ -331,11 +369,21 @@ def run_transfer_matrix(workloads: Sequence[Workload],
     def base_fn(name: str):
         def run() -> Tuple[CampaignResult, Dict, Dict]:
             plat = resolve_platform(name)
+            factory, leg_usage = None, None
+            if backend == "llm":
+                # a per-leg meter (parented on the fleet meter): legs run
+                # concurrently, so journaling wall-clock deltas of ONE
+                # shared meter would let every leg absorb the others' spend
+                leg_usage = llm.leg_meter()
+                factory = llm.agent_factory(platform=plat,
+                                            scheduler=work_sched,
+                                            usage=leg_usage)
             result = run_campaign(
                 workloads,
                 dataclasses.replace(base, platform=plat.name,
                                     use_reference=False, transfer_from=None),
-                cache=leg_cache(), **common)
+                agent_factory=factory, cache=leg_cache(), usage=leg_usage,
+                **common)
             return (result, harvest_hints(result),
                     reference_sources(result, plat.name))
         return run
@@ -356,14 +404,29 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                     f"base campaign [{p}] failed: {base_jobs[p].error}"
                     for p in failed))
             dst_plat = resolve_platform(dst)
-            src_hints = base_jobs[src].value[1]
+            leg_usage = None
+            if backend == "llm":
+                # the LLM warm leg consumes the source base's *rendered*
+                # references (LLMBackend.reference_sources); the context
+                # factory binds platform + references by value per leg,
+                # and a per-leg meter keeps its journal delta its own
+                src_refs = base_jobs[src].value[2]
+                leg_usage = llm.leg_meter()
+                factory = llm.agent_factory(platform=dst_plat,
+                                            reference_sources=src_refs,
+                                            scheduler=work_sched,
+                                            usage=leg_usage)
+            else:
+                src_hints = base_jobs[src].value[1]
+                factory = (lambda p=dst_plat, h=src_hints:
+                           TemplateSearchBackend(platform=p,
+                                                 reference_hints=h))
             return run_campaign(
                 workloads,
                 dataclasses.replace(base, platform=dst_plat.name,
                                     use_reference=True, transfer_from=src),
-                agent_factory=lambda p=dst_plat, h=src_hints:
-                    TemplateSearchBackend(platform=p, reference_hints=h),
-                cache=leg_cache(), **common)
+                agent_factory=factory, cache=leg_cache(), usage=leg_usage,
+                **common)
         return run
 
     warm_jobs = {
@@ -406,6 +469,8 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         "matrix_workers": matrix_workers,
         "leg_workers": leg_workers,
         "isolation": isolation,
+        "backend": backend,
+        "llm_usage": llm.usage.snapshot() if llm is not None else None,
         "peak_concurrent_legs": graph.telemetry()["peak_concurrent"],
         "jobs": {job.name: {"started_at": job.started_at,
                             "finished_at": job.finished_at,

@@ -43,6 +43,7 @@ def report_from_events(events: Iterable[Dict[str, Any]],
     """
     terminal: Dict[str, Dict[str, Any]] = {}
     cache_stats = None
+    llm_usage = None
     for ev in events:
         if ev.get("event") in ("workload_done", "workload_error"):
             if loop is None or \
@@ -50,6 +51,14 @@ def report_from_events(events: Iterable[Dict[str, Any]],
                 terminal[ev["workload"]] = ev
         elif ev.get("event") == "campaign_done":
             cache_stats = ev.get("cache")
+            # each campaign_done journals its own usage DELTA, so summing
+            # them totals the log — across sweep legs sharing one meter
+            # and across the separate processes of a resumed run alike
+            ev_usage = ev.get("llm_usage")
+            if ev_usage:
+                llm_usage = llm_usage or {}
+                for k, v in ev_usage.items():
+                    llm_usage[k] = round(llm_usage.get(k, 0) + v, 6)
     finals: Dict[int, List[EvalResult]] = {}
     names: Dict[int, List[str]] = {}
     iters: Dict[int, List[int]] = {}
@@ -90,6 +99,9 @@ def report_from_events(events: Iterable[Dict[str, Any]],
             "states": state_histogram(all_rs),
         },
         "cache": cache_stats,
+        # token/request accounting of LLM-backed runs (None for the
+        # offline template backend): the campaign_done llm_usage snapshot
+        "llm_usage": llm_usage,
     }
 
 
@@ -123,4 +135,7 @@ def format_report(report: Dict[str, Any]) -> str:
         lines.append(f"  cache: {c.get('hits', 0)} hits / "
                      f"{c.get('misses', 0)} misses "
                      f"({c.get('entries', 0)} entries)")
+    if report.get("llm_usage"):
+        from repro.llm import format_usage
+        lines.append(f"  llm: {format_usage(report['llm_usage'])}")
     return "\n".join(lines)

@@ -73,6 +73,11 @@ class CampaignResult:
     runs: List[WorkloadRun]
     cache: VerificationCache
     log_path: Optional[Path] = None
+    # THIS campaign's token/request accounting: the delta of the shared
+    # repro.llm.UsageMeter across the run (None for offline backends) —
+    # also journaled on the campaign_done event, where deltas from several
+    # campaigns (sweep legs, resumed processes) sum to the log's total
+    llm_usage: Optional[Dict[str, Any]] = None
 
     def finals(self) -> List[EvalResult]:
         """One terminal EvalResult per workload (errors/timeouts map to
@@ -107,13 +112,18 @@ class Campaign:
                  *, cache: Optional[VerificationCache] = None,
                  agent_factory: Optional[Callable[[], Any]] = None,
                  analyzer_factory: Optional[Callable[[], Any]] = None,
-                 scheduler: Optional[Scheduler] = None):
+                 scheduler: Optional[Scheduler] = None,
+                 usage: Optional[Any] = None):
         self.workloads = list(workloads)
         self.cfg = cfg
         self.cache = cache if cache is not None else VerificationCache()
         # an injected scheduler lets several campaigns (e.g. every leg of a
         # transfer matrix) share one worker-pool/timeout policy
         self.scheduler = scheduler
+        # LLM token/request accounting (repro.llm.UsageMeter) shared with
+        # the agent factory's sessions: journaled on campaign_done and
+        # surfaced in report()/CampaignResult.llm_usage
+        self.usage = usage
         plat = cfg.loop.platform
         self.agent_factory = agent_factory or (
             lambda: TemplateSearchBackend(platform=plat))
@@ -169,6 +179,12 @@ class Campaign:
         done = self._load_previous()
         by_name = {wl.name: wl for wl in self.workloads}
         runs: Dict[str, WorkloadRun] = {}
+        # usage meters are shared (all legs of a sweep/matrix) and only ever
+        # grow; journal this campaign's DELTA so campaign_done events from
+        # several campaigns — or from a resumed log's separate processes —
+        # sum to the true total instead of double- or under-counting
+        usage_start = self.usage.snapshot() if self.usage is not None \
+            else None
 
         loop_dict = dataclasses.asdict(self.cfg.loop)
         for name, ev in done.items():
@@ -242,12 +258,21 @@ class Campaign:
             sched.run([(wl.name, (lambda wl=wl: self._run_one(wl)))
                        for wl in todo], on_result=record)
 
+        usage = None
+        if self.usage is not None:
+            end = self.usage.snapshot()
+            usage = {k: round(v - usage_start.get(k, 0), 6)
+                     if isinstance(v, float) else v - usage_start.get(k, 0)
+                     for k, v in end.items()}
         if self.log is not None:
-            self.log.append({"event": "campaign_done",
-                             "cache": self.cache.stats()})
+            done = {"event": "campaign_done", "cache": self.cache.stats()}
+            if usage is not None:
+                done["llm_usage"] = usage
+            self.log.append(done)
         ordered = [runs[wl.name] for wl in self.workloads if wl.name in runs]
         return CampaignResult(runs=ordered, cache=self.cache,
-                              log_path=self.log.path if self.log else None)
+                              log_path=self.log.path if self.log else None,
+                              llm_usage=usage)
 
     # -- reporting ---------------------------------------------------------
 
@@ -272,7 +297,8 @@ def run_campaign(workloads: Sequence[Workload],
                  resume: bool = True,
                  agent_factory: Optional[Callable[[], Any]] = None,
                  analyzer_factory: Optional[Callable[[], Any]] = None,
-                 scheduler: Optional[Scheduler] = None
+                 scheduler: Optional[Scheduler] = None,
+                 usage: Optional[Any] = None
                  ) -> CampaignResult:
     """One-call campaign: the concurrent, cached replacement for
     ``run_suite`` that benchmarks and examples build on.
@@ -292,6 +318,10 @@ def run_campaign(workloads: Sequence[Workload],
             and agent G; defaults are the offline platform-aware backends.
         scheduler: an existing :class:`Scheduler` to run on — lets several
             campaigns share one worker-pool policy (transfer matrix).
+        usage: a shared :class:`repro.llm.UsageMeter` when ``agent_factory``
+            builds LLM backends; its snapshot is journaled on the
+            ``campaign_done`` event and returned as
+            ``CampaignResult.llm_usage``.
 
     Returns:
         A :class:`CampaignResult` with one :class:`WorkloadRun` per
@@ -302,4 +332,4 @@ def run_campaign(workloads: Sequence[Workload],
                          resume=resume)
     return Campaign(workloads, cfg, cache=cache, agent_factory=agent_factory,
                     analyzer_factory=analyzer_factory,
-                    scheduler=scheduler).run()
+                    scheduler=scheduler, usage=usage).run()

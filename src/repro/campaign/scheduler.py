@@ -59,10 +59,12 @@ they hang rather than serially K×timeout_s later.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 ISOLATION_MODES = ("thread", "process")
 
@@ -171,6 +173,29 @@ class Scheduler:
                          daemon=True).start()
         return job
 
+    @contextlib.contextmanager
+    def yielding(self) -> Iterator[None]:
+        """Release the calling job's slot for the duration of the block.
+
+        The slot-yield primitive behind the pool's re-entrancy: a job that
+        blocks — waiting on nested sub-jobs (``wait``), or pacing out an
+        LLM rate limit (:class:`repro.llm.LLMSession`) — wraps the blocking
+        region in ``with scheduler.yielding():`` and its slot goes to a
+        runnable job instead of idling; the slot is re-acquired on exit.
+        Called from a thread that holds no slot (the coordinator, a nested
+        yield), it is a no-op — safe to use unconditionally.
+        """
+        held = getattr(self._local, "holds_slot", False)
+        if held:
+            self._local.holds_slot = False
+            self._slots.release()
+        try:
+            yield
+        finally:
+            if held:
+                self._slots.acquire()
+                self._local.holds_slot = True
+
     def wait(self, jobs: Sequence[_Job],
              on_result: Optional[Callable[[JobResult], None]] = None
              ) -> List[JobResult]:
@@ -178,9 +203,9 @@ class Scheduler:
 
         Re-entrant: when called from inside a job of this same scheduler,
         the caller's slot is released for the duration of the wait (and
-        re-acquired after), so nested fan-out cannot deadlock the pool.
-        ``on_result`` is invoked from the waiting thread as each job
-        resolves, in ``jobs`` order.
+        re-acquired after, via :meth:`yielding`), so nested fan-out cannot
+        deadlock the pool. ``on_result`` is invoked from the waiting thread
+        as each job resolves, in ``jobs`` order.
 
         With thread-mode timeouts and ``after`` edges, wait on every job
         of the graph (as the matrix does), not just the sinks: a job
@@ -188,11 +213,7 @@ class Scheduler:
         starvation check, and a multi-hop chain whose head hangs needs
         each link observed to propagate the timeout.
         """
-        yielded = getattr(self._local, "holds_slot", False)
-        if yielded:
-            self._local.holds_slot = False
-            self._slots.release()
-        try:
+        with self.yielding():
             results: List[JobResult] = []
             for job in jobs:
                 res = self._await(job)
@@ -200,10 +221,6 @@ class Scheduler:
                 if on_result is not None:
                     on_result(res)
             return results
-        finally:
-            if yielded:
-                self._slots.acquire()
-                self._local.holds_slot = True
 
     def run(self, jobs: Sequence[Tuple[str, Callable[[], Any]]],
             on_result: Optional[Callable[[JobResult], None]] = None

@@ -208,8 +208,9 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
                        timeout_s: Optional[float] = None,
                        log_path: Optional[Union[str, Path]] = None,
                        resume: bool = True,
-                       scheduler: Optional[Scheduler] = None
-                       ) -> TransferSweepResult:
+                       scheduler: Optional[Scheduler] = None,
+                       backend: str = "template",
+                       llm=None) -> TransferSweepResult:
     """Run the §6.2 transfer experiment between two registered platforms.
 
     Args:
@@ -227,6 +228,14 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
             :func:`repro.campaign.run_campaign`; all three legs journal
             into ONE event log, and resuming an interrupted sweep skips
             whatever legs already finished.
+        backend: ``"template"`` (offline deterministic agent, default) or
+            ``"llm"`` — every leg then runs ``LLMBackend`` sessions from
+            ``llm``, and the warm leg injects the source campaign's
+            *rendered references* (``LLMBackend.reference_sources``)
+            instead of structured hints.
+        llm: a :class:`repro.llm.LLMContext` (transport + rate limiter +
+            usage meter) when ``backend="llm"``; a MockTransport-backed
+            context is built when omitted.
 
     Returns:
         A :class:`TransferSweepResult` (source/cold/warm campaigns, the
@@ -241,16 +250,37 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
             "re-run the source campaign and report zero uplift. Pick a "
             "different --transfer-from/--platform pair (see "
             "repro.platforms.available_platforms()).")
+    if backend not in ("template", "llm"):
+        raise ValueError(f"backend must be 'template' or 'llm', "
+                         f"got {backend!r}")
+    if backend == "llm" and llm is None:
+        from repro.llm import build_llm_context
+        llm = build_llm_context()
     base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
     common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
                   log_path=log_path, resume=resume, scheduler=scheduler)
+    if llm is not None:
+        common["usage"] = llm.usage
+
+    def leg_factory(platform, references=None, hints=None):
+        """Per-leg agent factory, everything bound by value at call time:
+        template search with the warm leg's structured hints, or LLM
+        sessions with the leg's platform and rendered references."""
+        if backend == "llm":
+            return llm.agent_factory(platform=platform,
+                                     reference_sources=references,
+                                     scheduler=scheduler)
+        if hints is not None:
+            return lambda p=platform, h=hints: TemplateSearchBackend(
+                platform=p, reference_hints=h)
+        return None                     # run_campaign's platform default
 
     # Leg 1: source-platform campaign (the reference-producing run).
     source = run_campaign(
         workloads,
         dataclasses.replace(base, platform=src.name, transfer_from=None),
-        **common)
+        agent_factory=leg_factory(src), **common)
     hints = harvest_hints(source)
     references = reference_sources(source, src.name)
 
@@ -259,18 +289,19 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
         workloads,
         dataclasses.replace(base, platform=dst.name, use_reference=False,
                             transfer_from=None),
-        **common)
+        agent_factory=leg_factory(dst), **common)
 
-    # Leg 3: warm target run — harvested hints injected through the
-    # agent's reference path (REFERENCE_HINTS extended per workload).
+    # Leg 3: warm target run — the source campaign's harvest injected
+    # through the agent's reference path: structured strategy hints for the
+    # template backend (REFERENCE_HINTS extended per workload), rendered
+    # reference kernels (LLMBackend.reference_sources) for LLM sessions.
     # transfer_from tags the loop config so warm legs fed from different
     # sources stay distinguishable in a shared event log (matrix runs).
     warm = run_campaign(
         workloads,
         dataclasses.replace(base, platform=dst.name, use_reference=True,
                             transfer_from=src.name),
-        agent_factory=lambda: TemplateSearchBackend(
-            platform=dst, reference_hints=hints),
+        agent_factory=leg_factory(dst, references=references, hints=hints),
         **common)
 
     return TransferSweepResult(

@@ -3,6 +3,44 @@
 Plain ``str.format`` stands in for Jinja2 (same fields as the paper's
 template); the offline template-search backend consumes the same structured
 fields, so the prompt is the single source of task context either way.
+
+**The per-platform prompt contract.** A synthesis prompt is assembled from
+exactly three platform-owned fields plus per-iteration state; everything
+platform-specific flows through the registry (``repro.platforms``), never
+through template forks:
+
+* ``Platform.descriptor`` → ``{accelerator}`` — names the target in every
+  instruction line ("Pallas TPU (v5e)", "Apple Metal GPU (M2-class)", ...).
+* ``Platform.oneshot_example`` → ``{example_src}`` — one complete kernel in
+  the target's own idiom (Pallas for the TPUs, CUDA for ``gpu_sim``, MSL
+  for ``metal_m2``): the paper's one-shot example that teaches syntax,
+  tiling, and launch integration in a single shot.
+* ``Platform.constraints_note`` → ``{constraints}`` — the working-set
+  budget and alignment rules the candidate must respect (VMEM 128 MiB /
+  MXU 128 on TPU, threadgroup 32 KiB / simdgroup 8 on Metal, ...).
+
+Per-iteration state renders into two optional blocks: ``REFERENCE_BLOCK``
+(a correct implementation from another platform — the §6.2 transfer
+channel; ``LLMBackend.reference_sources`` supplies campaign-harvested
+kernels, the XLA-oracle source is the fallback) and ``FEEDBACK_BLOCK``
+(the previous attempt's ``EvalResult.feedback()`` string, its source, and
+agent G's single recommendation — the compilation/repair loop of §3.3).
+
+The reply contract is fixed across platforms: one fenced code block
+defining ``candidate(*inputs)`` (optionally a ``PARAMS`` dict with the
+declarative tiling the performance model should score —
+``LLMBackend.generate`` adopts it).
+
+``ANALYSIS_TEMPLATE`` is agent G's side of the conversation: it receives
+the verification profile JSON (roofline terms, tiling params, collective
+summary — all platform-stamped by ``verify``) and must answer with ONE
+actionable parameter recommendation, mirroring
+``analysis.RuleBasedAnalyzer``'s single-recommendation contract.
+
+Prompt drift is guarded by golden snapshots: ``tests/test_prompts_golden.py``
+renders this template for every registered platform and diffs against
+``tests/goldens/`` — regenerate with ``UPDATE_GOLDENS=1`` when a change is
+intentional, so review sees the full prompt diff.
 """
 from __future__ import annotations
 
@@ -67,6 +105,11 @@ def render_synthesis(accelerator: str, example_src: str, workload_src: str,
                      ref_platform: str = "CUDA", prev_src: str = "",
                      prev_result: str = "", recommendation: str = "",
                      constraints: str = "") -> str:
+    """Assemble one synthesis prompt (see the module docstring for the
+    field contract). The reference block renders only when ``ref_src`` is
+    non-empty; the feedback block only when there was a previous attempt
+    (``prev_src`` or ``prev_result``); an empty ``constraints`` falls back
+    to the registry default target's note."""
     from repro.platforms import resolve_platform
     ref_block = REFERENCE_BLOCK.format(
         ref_platform=ref_platform, ref_src=ref_src) if ref_src else ""

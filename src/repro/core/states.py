@@ -48,6 +48,11 @@ class EvalResult:
     def feedback(self) -> str:
         """The message appended to the next generation prompt (paper §3)."""
         if self.state is ExecutionState.CORRECT:
+            if self.model_time_s is None or self.speedup is None:
+                # callable candidates without a performance model (no
+                # declarative params and no naive fallback) are still
+                # correct — feed that back without fabricating numbers
+                return "correct (no performance model for this candidate)"
             return (f"correct; model_time={self.model_time_s:.3e}s "
                     f"speedup={self.speedup:.2f}x")
         return f"{self.state.value}: {self.error or 'unknown'}"

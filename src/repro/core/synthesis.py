@@ -10,10 +10,15 @@ Backends behind one protocol:
   falling back to the best predicted mutation (optimization pass).
 
 * ``LLMBackend`` — builds the paper's prompt (core/prompts.py) and calls a
-  user-supplied ``complete(prompt) -> str``; the returned code block is
-  exec'd in a restricted namespace to recover ``candidate(*inputs)``. This
-  is the production path; offline it yields GENERATION_FAILURE unless a
-  completion function (or canned transcript) is supplied.
+  ``complete(prompt) -> str`` — in production an
+  :class:`repro.llm.LLMSession` over a real transport, in tests any
+  callable (a canned transcript, a MockTransport session). The returned
+  code block is exec'd in a restricted namespace to recover
+  ``candidate(*inputs)``; a ``PARAMS`` dict defined alongside it is adopted
+  as the candidate's declarative tiling params so the performance model can
+  score the LLM's choice. Constructing an ``LLMBackend`` without a
+  completion channel is an immediate ``ValueError`` (pass
+  ``prompt_only=True`` for prompt inspection without one).
 """
 from __future__ import annotations
 
@@ -175,26 +180,56 @@ class TemplateSearchBackend:
 # LLM backend (production path; exercised offline via canned completions)
 # ---------------------------------------------------------------------------
 
-_CODE_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
+# One *complete* fenced code block (closing fence required). The single
+# source of truth for what counts as a usable completion: generate()
+# extracts code through it, and repro.llm.LLMSession decides malformed-
+# completion re-prompting against the SAME pattern, so the two layers can
+# never disagree about which replies are parseable.
+CODE_BLOCK_RE = re.compile(r"```(?:python)?\n(.*?)```", re.S)
+_CODE_RE = CODE_BLOCK_RE
 
 
 class LLMBackend:
     """Prompt-building production backend.
 
-    The platform supplies the prompt descriptor, the one-shot example in
-    the target's idiom, and the working-set/alignment constraints note —
-    retargeting the LLM to a new accelerator is a registry entry, not a
+    The platform supplies every target-specific degree of freedom of the
+    generation prompt (see :mod:`repro.core.prompts` for the template
+    contract): the ``descriptor`` naming the accelerator, the
+    ``oneshot_example`` kernel in the target's own idiom (Pallas for the
+    TPUs, CUDA for ``gpu_sim``, MSL for ``metal_m2``), and the
+    ``constraints_note`` stating the working-set budget and alignment rules
+    — retargeting the LLM to a new accelerator is a registry entry, not a
     prompt fork. ``reference_sources`` (workload name -> (platform name,
     source text)) overrides the default XLA-oracle reference with e.g. a
-    best-verified kernel harvested from another platform's campaign.
+    best-verified kernel harvested from another platform's campaign
+    (``campaign.transfer.reference_sources`` renders them; warm matrix legs
+    inject them per leg).
+
+    ``complete`` is the completion channel — any ``prompt -> str``
+    callable; production campaigns pass an :class:`repro.llm.LLMSession`
+    (transport + rate limiting + retry + accounting). It is required at
+    construction: a backend without one would fail every generation deep
+    inside the refinement loop, one opaque ``GENERATION_FAILURE`` per
+    workload, so the misconfiguration is rejected up front instead. For
+    prompt inspection without a completion channel (docs, tests, the
+    synthesize_kernel example) pass ``prompt_only=True``; such a backend
+    renders prompts but refuses to ``generate``.
     """
 
     def __init__(self, complete: Optional[Callable[[str], str]] = None,
                  accelerator: Optional[str] = None,
                  platform: PlatformLike = None,
                  reference_sources: Optional[Dict[str, Tuple[str, str]]]
-                 = None):
+                 = None,
+                 prompt_only: bool = False):
+        if complete is None and not prompt_only:
+            raise ValueError(
+                "LLMBackend needs a completion channel: pass "
+                "complete=<prompt -> str> (e.g. an repro.llm.LLMSession "
+                "over a MockTransport / ReplayTransport / HTTPTransport), "
+                "or prompt_only=True to only build prompts")
         self.complete = complete
+        self.prompt_only = prompt_only
         self.platform = resolve_platform(platform)
         self.accelerator = accelerator or self.platform.descriptor
         self.reference_sources = dict(reference_sources or {})
@@ -203,6 +238,12 @@ class LLMBackend:
                      prev_result: Optional[EvalResult],
                      recommendation: Optional[Recommendation],
                      use_reference: bool) -> str:
+        """Render the §3.2 synthesis prompt for one workload/iteration.
+
+        Reference resolution when ``use_reference`` is set: a harvested
+        per-workload entry from ``reference_sources`` wins (its recorded
+        source platform is named in the prompt); otherwise the XLA-oracle
+        source of the op family (``core.transfer.reference_source``)."""
         ref_src, ref_platform = "", "XLA (jax.numpy)"
         if use_reference:
             if wl.name in self.reference_sources:
@@ -220,12 +261,22 @@ class LLMBackend:
 
     def generate(self, wl: Workload, *, prev=None, prev_result=None,
                  recommendation=None, use_reference=False) -> Generation:
+        """One prompt → completion → candidate round trip.
+
+        The completion's fenced code block is exec'd in a fresh namespace;
+        the recovered ``candidate(*inputs)`` callable is verified directly
+        (it bypasses the declarative verification cache). When the block
+        also defines a ``PARAMS`` dict, it is adopted as the candidate's
+        declarative tiling params — the performance model then scores the
+        LLM's stated tiling instead of the naive fallback."""
+        if self.complete is None:
+            raise RuntimeError(
+                "this LLMBackend was built prompt_only=True; it renders "
+                "prompts but cannot generate — construct it with a "
+                "complete= callable to run synthesis")
         prompt = self.build_prompt(wl, prev=prev, prev_result=prev_result,
                                    recommendation=recommendation,
                                    use_reference=use_reference)
-        if self.complete is None:
-            return Generation(failure="no completion backend configured "
-                                      "(offline)")
         try:
             reply = self.complete(prompt)
         except Exception as exc:  # noqa: BLE001 — network errors etc.
@@ -243,4 +294,7 @@ class LLMBackend:
         if fn is None:
             return Generation(source=src,
                               failure="no `candidate` function defined")
-        return Generation(source=src, callable_fn=fn)
+        params = ns.get("PARAMS")
+        cand = cand_mod.Candidate(wl.op, dict(params)) \
+            if isinstance(params, dict) else None
+        return Generation(candidate=cand, source=src, callable_fn=fn)

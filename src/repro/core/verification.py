@@ -168,8 +168,8 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
                           max_abs_err=err)
 
     # -- performance ----------------------------------------------------------
-    model_t = cand_mod.model_time(candidate, shapes, platform)
-    base_t = cand_mod.baseline_time(candidate.op, shapes, platform)
+    model_t = _model_time_tolerant(candidate, shapes, platform)
+    base_t = _baseline_time_tolerant(candidate.op, shapes, platform)
     wall = None
     if measure_wall:
         t0 = time.perf_counter()
@@ -188,6 +188,45 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
     return EvalResult(ExecutionState.CORRECT, wall_time_s=wall,
                       model_time_s=model_t, baseline_model_time_s=base_t,
                       max_abs_err=err, profile=profile)
+
+
+def _model_time_tolerant(candidate, shapes, platform) -> Optional[float]:
+    """Roofline model time for candidates that may carry partial params.
+
+    LLM-generated candidates arrive as callables whose declarative params
+    are absent, partial, or arbitrarily malformed (a ``PARAMS`` block is
+    model output: missing keys, wrong types, zeros); ``model_time`` would
+    raise (KeyError/TypeError/ZeroDivisionError) and take the whole
+    verification down *after* correctness was already established. Broken
+    or missing params are replaced by the op's naive defaults instead, so
+    such a candidate scores as the naive implementation (speedup 1.0) —
+    conservative, never flattering. Returns None only when the op has no
+    model at all.
+    """
+    try:
+        return cand_mod.model_time(candidate, shapes, platform)
+    except Exception:  # noqa: BLE001 — PARAMS is untrusted model output
+        pass
+    try:
+        naive = cand_mod.naive_candidate(candidate.op, platform)
+        filled = dict(naive.params)
+        filled.update({k: v for k, v in candidate.params.items()
+                       if type(v) is type(filled.get(k)) and v})
+        return cand_mod.model_time(cand_mod.Candidate(candidate.op, filled),
+                                   shapes, platform)
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        return cand_mod.baseline_time(candidate.op, shapes, platform)
+    except Exception:  # noqa: BLE001 — op without a model at all
+        return None
+
+
+def _baseline_time_tolerant(op, shapes, platform) -> Optional[float]:
+    try:
+        return cand_mod.baseline_time(op, shapes, platform)
+    except Exception:  # noqa: BLE001 — op without a model at all
+        return None
 
 
 def _op_flops(op: str, shapes) -> float:

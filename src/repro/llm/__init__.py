@@ -1,0 +1,25 @@
+"""LLM-backend campaign subsystem (DESIGN.md §9, ``docs/llm_backends.md``).
+
+The transport layer behind :class:`repro.core.synthesis.LLMBackend`:
+pluggable :class:`Transport` implementations (deterministic
+:class:`MockTransport`, JSONL record/replay :class:`ReplayTransport`,
+env-configured :class:`HTTPTransport`), a shared request/token
+:class:`RateLimiter`, and the per-worker :class:`LLMSession` /
+:class:`LLMContext` layer that retries, re-prompts malformed completions,
+yields scheduler slots while throttled, and meters usage into the campaign
+event log.
+
+Import direction: ``repro.llm`` imports ``repro.core`` (never the other way
+round), and ``repro.campaign`` imports ``repro.llm`` — the campaign layer
+is the only caller that wires sessions into worker pools.
+"""
+from repro.llm.limiter import RateLimiter  # noqa: F401
+from repro.llm.session import (  # noqa: F401
+    LLMContext, LLMSession, UsageMeter, build_llm_context, format_usage,
+    reprompt,
+)
+from repro.llm.transport import (  # noqa: F401
+    Completion, HTTPTransport, MockTransport, RateLimitError, ReplayMissError,
+    ReplayTransport, Transport, TransportError, default_mock_reply,
+    estimate_tokens, prompt_key,
+)

@@ -1,0 +1,95 @@
+"""Shared request/token rate limiter for LLM-backed campaigns.
+
+One :class:`RateLimiter` is shared by every session of a campaign (and by
+every leg of a transfer matrix), so the *fleet's* aggregate call rate obeys
+the endpoint budget no matter how many workers are in flight.
+
+Two continuous token buckets — requests per minute (``rpm``) and tokens per
+minute (``tpm``) — refilled from a monotonic clock. ``reserve`` debits a
+request (plus its estimated tokens) immediately and returns how long the
+caller must *pace* before issuing it; the bucket may go negative (work
+borrowed against future refill), which is what converts a burst of N
+concurrent workers into an evenly spaced call train instead of N-1
+rejections. The limiter never sleeps and never blocks: sleeping —
+and yielding the scheduler slot while doing so — is the session's job
+(:class:`repro.llm.session.LLMSession`), so a throttled worker's slot goes
+to verification work instead of idling.
+
+Deterministic under an injected ``clock``; thread-safe.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+
+class RateLimiter:
+    """Token-bucket pacing over requests/minute and tokens/minute.
+
+    Args:
+        rpm: request budget per minute (None = unlimited).
+        tpm: token budget per minute, prompt + completion estimate
+            (None = unlimited).
+        clock: monotonic time source (injectable for tests).
+
+    Buckets start full (one minute of burst) and refill continuously at
+    ``budget / 60`` per second, capped at the per-minute budget.
+    """
+
+    def __init__(self, rpm: Optional[float] = None,
+                 tpm: Optional[float] = None, *,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if rpm is not None and rpm <= 0:
+            raise ValueError(f"rpm must be positive, got {rpm}")
+        if tpm is not None and tpm <= 0:
+            raise ValueError(f"tpm must be positive, got {tpm}")
+        self.rpm = rpm
+        self.tpm = tpm
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._req_level = float(rpm) if rpm else 0.0
+        self._tok_level = float(tpm) if tpm else 0.0
+        self._last = clock()
+        self.reserved_requests = 0
+        self.reserved_tokens = 0
+
+    def _refill(self, now: float) -> None:
+        dt = max(0.0, now - self._last)
+        self._last = now
+        if self.rpm:
+            self._req_level = min(float(self.rpm),
+                                  self._req_level + dt * self.rpm / 60.0)
+        if self.tpm:
+            self._tok_level = min(float(self.tpm),
+                                  self._tok_level + dt * self.tpm / 60.0)
+
+    def reserve(self, tokens: int = 0) -> float:
+        """Debit one request + ``tokens`` tokens; return the pacing delay.
+
+        The caller should wait the returned number of seconds before
+        issuing the call (0.0 = go now). The debit happens immediately, so
+        N concurrent reserves serialize into an evenly spaced schedule —
+        each sees the deficit left by the previous one.
+        """
+        with self._lock:
+            self._refill(self._clock())
+            self.reserved_requests += 1
+            self.reserved_tokens += int(tokens)
+            wait = 0.0
+            if self.rpm:
+                self._req_level -= 1.0
+                if self._req_level < 0:
+                    wait = max(wait, -self._req_level * 60.0 / self.rpm)
+            if self.tpm:
+                self._tok_level -= float(tokens)
+                if self._tok_level < 0:
+                    wait = max(wait, -self._tok_level * 60.0 / self.tpm)
+            return wait
+
+    def stats(self) -> Dict[str, Optional[float]]:
+        """Snapshot: configured budgets plus total reserved work."""
+        with self._lock:
+            return {"rpm": self.rpm, "tpm": self.tpm,
+                    "reserved_requests": self.reserved_requests,
+                    "reserved_tokens": self.reserved_tokens}

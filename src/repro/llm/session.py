@@ -1,0 +1,347 @@
+"""Per-worker LLM sessions: retry, re-prompt, pacing, and accounting.
+
+The campaign runner builds one agent per workload via ``agent_factory``
+(stateful backends must never be shared across worker threads, see
+:class:`repro.campaign.Campaign`). For LLM-backed campaigns that factory is
+:meth:`LLMContext.agent_factory`: each call mints a fresh
+:class:`LLMSession` around the campaign's **shared** transport, rate
+limiter, and usage meter, wraps it in a
+:class:`repro.core.synthesis.LLMBackend`, and binds the leg's platform and
+harvested ``reference_sources``.
+
+What a session adds on top of a bare transport:
+
+* **pacing** — before every call it reserves its estimated tokens from the
+  shared :class:`repro.llm.limiter.RateLimiter` and sleeps out the returned
+  delay *with its scheduler slot yielded* (``Scheduler.yielding``), so a
+  throttled LLM leg donates its slot to verification work instead of
+  blocking a worker;
+* **retry/backoff** — :class:`RateLimitError` from the transport is slept
+  off (honoring ``retry_after_s``, else exponential backoff), again
+  slot-yielded, up to ``max_attempts``;
+* **malformed-completion re-prompting** — a reply with no complete fenced
+  code block (missing or truncated fence) is fed back to the model with the
+  defect named, the same compilation-feedback shape the refinement loop
+  uses for failed candidates (paper §3.3);
+* **accounting** — every request, token, throttle wait, rate-limit hit and
+  re-prompt lands in the shared :class:`UsageMeter`, which the campaign
+  journals into its event log (``campaign_done.llm_usage``) and surfaces in
+  ``Campaign.report()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.synthesis import CODE_BLOCK_RE, LLMBackend
+from repro.llm.limiter import RateLimiter
+from repro.llm.transport import (Completion, HTTPTransport, MockTransport,
+                                 RateLimitError, ReplayTransport, Transport,
+                                 TransportError, estimate_tokens)
+
+REPROMPT_TEMPLATE = """{prompt}
+
+Your previous reply was not usable: {reason}.
+
+Previous reply:
+{reply}
+
+Reply again with exactly ONE complete fenced ```python code block defining
+`candidate(*inputs)`.
+"""
+
+
+def reprompt(prompt: str, reply: str, reason: str) -> str:
+    """The malformed-completion feedback prompt: the original task plus the
+    defect named and the bad reply quoted (paper §3.3's feedback shape,
+    applied one level below candidate verification)."""
+    return REPROMPT_TEMPLATE.format(prompt=prompt, reason=reason, reply=reply)
+
+
+class UsageMeter:
+    """Thread-safe token/request accounting shared by a campaign's sessions.
+
+    ``snapshot()`` is what the campaign journals into its event log and
+    prints in reports; counters only ever grow.
+
+    ``parent`` chains meters: every increment also lands on the parent.
+    The matrix gives each concurrently running leg its OWN meter parented
+    on the fleet meter, so per-leg journal deltas attribute only that
+    leg's spend (a shared meter's wall-clock delta would absorb every
+    overlapping leg's calls and the summed report would over-count) while
+    the fleet meter still totals everything for telemetry."""
+
+    _FIELDS = ("requests", "prompt_tokens", "completion_tokens",
+               "rate_limit_hits", "reprompts", "throttle_waits", "failures")
+
+    def __init__(self, parent: Optional["UsageMeter"] = None) -> None:
+        self._lock = threading.Lock()
+        self.parent = parent
+        self.requests = 0
+        self.prompt_tokens = 0
+        self.completion_tokens = 0
+        self.rate_limit_hits = 0        # transport raised RateLimitError
+        self.reprompts = 0              # malformed completions re-asked
+        self.throttle_waits = 0         # limiter imposed a pacing delay
+        self.throttle_wait_s = 0.0
+        self.failures = 0               # calls abandoned after max_attempts
+
+    def add_completion(self, comp: Completion) -> None:
+        with self._lock:
+            self.requests += 1
+            self.prompt_tokens += comp.prompt_tokens
+            self.completion_tokens += comp.completion_tokens
+        if self.parent is not None:
+            self.parent.add_completion(comp)
+
+    def note_rate_limited(self) -> None:
+        with self._lock:
+            self.rate_limit_hits += 1
+        if self.parent is not None:
+            self.parent.note_rate_limited()
+
+    def note_reprompt(self) -> None:
+        with self._lock:
+            self.reprompts += 1
+        if self.parent is not None:
+            self.parent.note_reprompt()
+
+    def note_throttle(self, wait_s: float) -> None:
+        with self._lock:
+            self.throttle_waits += 1
+            self.throttle_wait_s += wait_s
+        if self.parent is not None:
+            self.parent.note_throttle(wait_s)
+
+    def note_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+        if self.parent is not None:
+            self.parent.note_failure()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable counter snapshot (event-log / report shape)."""
+        with self._lock:
+            out = {name: getattr(self, name) for name in self._FIELDS}
+            out["throttle_wait_s"] = round(self.throttle_wait_s, 6)
+            out["total_tokens"] = self.prompt_tokens + self.completion_tokens
+            return out
+
+
+def format_usage(usage: Dict[str, Any]) -> str:
+    """One-line rendering of a :meth:`UsageMeter.snapshot` dict — the single
+    format the CLI and reports print."""
+    return (f"{usage.get('requests', 0)} requests, "
+            f"{usage.get('prompt_tokens', 0)}+"
+            f"{usage.get('completion_tokens', 0)} tokens, "
+            f"{usage.get('rate_limit_hits', 0)} rate-limit hits, "
+            f"{usage.get('throttle_waits', 0)} throttled, "
+            f"{usage.get('reprompts', 0)} re-prompts")
+
+
+class LLMSession:
+    """One worker's completion channel; plugs in as ``LLMBackend.complete``.
+
+    Sessions are cheap per-worker shells around the shared transport,
+    limiter, and meter; ``scheduler`` (optional) is the campaign's
+    :class:`repro.campaign.Scheduler` — every sleep (pacing or backoff)
+    happens inside ``scheduler.yielding()``, releasing the worker's slot to
+    runnable jobs for the duration.
+    """
+
+    def __init__(self, transport: Transport, *,
+                 limiter: Optional[RateLimiter] = None,
+                 scheduler: Optional[Any] = None,
+                 usage: Optional[UsageMeter] = None,
+                 max_attempts: int = 3,
+                 backoff_s: float = 0.05,
+                 completion_tokens_estimate: int = 512,
+                 sleep: Callable[[float], None] = time.sleep) -> None:
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        self.transport = transport
+        self.limiter = limiter
+        self.scheduler = scheduler
+        self.usage = usage if usage is not None else UsageMeter()
+        self.max_attempts = max_attempts
+        self.backoff_s = backoff_s
+        # tpm reservations cover the reply too (the limiter's budget is
+        # prompt + completion); the reply's size is unknown at reserve
+        # time, so this flat estimate stands in — kernel code blocks run a
+        # few hundred tokens
+        self.completion_tokens_estimate = completion_tokens_estimate
+        self._sleep = sleep
+
+    # -- pacing ------------------------------------------------------------
+
+    def _pause(self, seconds: float) -> None:
+        """Sleep with the scheduler slot yielded (when running on one)."""
+        if seconds <= 0:
+            return
+        if self.scheduler is not None:
+            with self.scheduler.yielding():
+                self._sleep(seconds)
+        else:
+            self._sleep(seconds)
+
+    def _throttle(self, prompt: str) -> None:
+        if self.limiter is None:
+            return
+        wait = self.limiter.reserve(estimate_tokens(prompt)
+                                    + self.completion_tokens_estimate)
+        if wait > 0:
+            self.usage.note_throttle(wait)
+            self._pause(wait)
+
+    # -- completion --------------------------------------------------------
+
+    @staticmethod
+    def _malformed_reason(text: str) -> Optional[str]:
+        """Why a completion is unusable, or None when it is fine — judged
+        by the same ``CODE_BLOCK_RE`` the backend extracts code with (a
+        complete fenced block: a truncated stream whose fence never closed
+        re-prompts too)."""
+        if CODE_BLOCK_RE.search(text):
+            return None
+        if "```" in text:
+            return "the code block was truncated (fence never closed)"
+        return "it contained no fenced code block"
+
+    def complete(self, prompt: str) -> str:
+        """Prompt → completion text, absorbing rate limits and malformed
+        replies up to ``max_attempts`` total transport calls.
+
+        Raises :class:`TransportError` when every attempt was rate-limited
+        away; returns the last (still malformed) text when re-prompting
+        never produced a code block — ``LLMBackend`` then reports the
+        precise ``reply contains no code block`` generation failure.
+        """
+        current = prompt
+        last_exc: Optional[TransportError] = None
+        text: Optional[str] = None
+        for attempt in range(1, self.max_attempts + 1):
+            self._throttle(current)
+            try:
+                comp = self.transport.complete(current)
+            except RateLimitError as exc:
+                self.usage.note_rate_limited()
+                last_exc = exc
+                if attempt == self.max_attempts:
+                    break
+                self._pause(exc.retry_after_s
+                            if exc.retry_after_s is not None
+                            else self.backoff_s * 2 ** (attempt - 1))
+                continue
+            self.usage.add_completion(comp)
+            text = comp.text
+            reason = self._malformed_reason(text)
+            if reason is None:
+                return text
+            if attempt == self.max_attempts:
+                break
+            self.usage.note_reprompt()
+            current = reprompt(prompt, text, reason)
+        self.usage.note_failure()
+        if text is not None:
+            return text                 # malformed; backend names the failure
+        raise TransportError(
+            f"gave up after {self.max_attempts} rate-limited attempts: "
+            f"{last_exc}")
+
+    __call__ = complete
+
+
+@dataclasses.dataclass
+class LLMContext:
+    """Everything a campaign's workers share for one LLM fleet: transport,
+    rate limiter, usage meter, and the session policy. The per-worker /
+    per-leg pieces (session, backend, platform, references) are minted by
+    the two factory methods."""
+
+    transport: Transport
+    limiter: Optional[RateLimiter] = None
+    usage: UsageMeter = dataclasses.field(default_factory=UsageMeter)
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+
+    def session(self, scheduler: Optional[Any] = None,
+                usage: Optional[UsageMeter] = None) -> LLMSession:
+        """A fresh session over the shared transport/limiter; accounting
+        goes to ``usage`` (e.g. a per-leg meter parented on the fleet
+        meter) or the context's own meter."""
+        return LLMSession(self.transport, limiter=self.limiter,
+                          scheduler=scheduler,
+                          usage=usage if usage is not None else self.usage,
+                          max_attempts=self.max_attempts,
+                          backoff_s=self.backoff_s)
+
+    def leg_meter(self) -> UsageMeter:
+        """A fresh meter parented on the fleet meter: concurrent campaigns
+        (matrix legs) each journal their own spend while the context's
+        ``usage`` keeps the fleet total."""
+        return UsageMeter(parent=self.usage)
+
+    def agent_factory(self, platform=None, *,
+                      reference_sources: Optional[Dict] = None,
+                      scheduler: Optional[Any] = None,
+                      usage: Optional[UsageMeter] = None
+                      ) -> Callable[[], LLMBackend]:
+        """A ``Campaign(agent_factory=...)``-shaped builder: every call
+        returns a new ``LLMBackend`` with its own session, bound to
+        ``platform`` and (for warm transfer legs) the harvested
+        ``reference_sources`` by value — concurrency-safe the same way the
+        matrix binds template-backend factories. ``usage`` redirects the
+        sessions' accounting (per-leg meters)."""
+        refs = dict(reference_sources or {})
+
+        def build(platform=platform, refs=refs, usage=usage) -> LLMBackend:
+            return LLMBackend(complete=self.session(scheduler, usage=usage),
+                              platform=platform, reference_sources=refs)
+        return build
+
+
+def build_llm_context(*, transport: Optional[Transport] = None,
+                      record: Optional[str] = None,
+                      replay: Optional[str] = None,
+                      rpm: Optional[float] = None,
+                      tpm: Optional[float] = None,
+                      usage: Optional[UsageMeter] = None,
+                      max_attempts: int = 3,
+                      backoff_s: float = 0.05) -> LLMContext:
+    """Assemble an :class:`LLMContext` the way the CLI does.
+
+    Transport resolution order:
+
+    * ``replay=PATH`` — :class:`ReplayTransport` in replay mode (zero live
+      calls; the file must exist).
+    * ``record=PATH`` — a recording wrapper around the live transport:
+      ``transport`` if given, else :class:`HTTPTransport` when
+      ``KFORGE_LLM_ENDPOINT`` is exported, else the deterministic
+      :class:`MockTransport`.
+    * neither — the live transport alone (same fallback chain).
+
+    ``rpm``/``tpm`` attach a shared :class:`RateLimiter`.
+    """
+    if record and replay:
+        raise ValueError("--record and --replay are mutually exclusive: a "
+                         "replayed session never makes the live calls a "
+                         "recording would capture")
+    # explicit None checks: rpm/tpm of 0 must reach RateLimiter and fail
+    # its positivity validation, not be silently dropped as falsy
+    want_limiter = rpm is not None or tpm is not None
+    if replay:
+        if transport is not None:
+            raise ValueError("pass either transport= or replay=, not both")
+        transport = ReplayTransport.replay(replay)
+    else:
+        if transport is None:
+            transport = (HTTPTransport.from_env()
+                         if HTTPTransport.configured() else MockTransport())
+        if record:
+            transport = ReplayTransport.record(record, transport)
+    limiter = RateLimiter(rpm=rpm, tpm=tpm) if want_limiter else None
+    return LLMContext(transport=transport, limiter=limiter,
+                      usage=usage if usage is not None else UsageMeter(),
+                      max_attempts=max_attempts, backoff_s=backoff_s)

@@ -1,0 +1,459 @@
+"""LLM completion transports (the wire behind ``LLMBackend.complete``).
+
+The generation agent of the paper is an LLM session; everything between the
+rendered prompt (``core/prompts.py``) and the returned completion text is a
+:class:`Transport`. Three implementations, one protocol:
+
+* :class:`MockTransport` — deterministic and offline. It answers every
+  synthesis prompt with a code block that mirrors the workload's reference
+  oracle, so a MockTransport campaign genuinely exercises the full
+  LLM data path (prompt → completion → ``exec`` → callable verification)
+  in CI with zero network. Faults are injectable on a deterministic
+  schedule: rate-limit errors every Nth call, malformed (fence-less) or
+  truncated (unterminated-fence) completions, and artificial latency —
+  exactly the failure modes the session layer must absorb.
+* :class:`ReplayTransport` — records prompt → completion pairs to a JSONL
+  session file and replays them byte-for-byte. Keys are sha256 content
+  addresses of the full prompt (the same idea as the verification cache),
+  so replay is order-independent across concurrent workers, and *record*
+  mode is resume-safe: a key already on disk is served from the file
+  instead of re-spending a live call.
+* :class:`HTTPTransport` — the production stub: a minimal JSON-over-HTTP
+  client configured entirely from environment variables
+  (``KFORGE_LLM_ENDPOINT`` / ``KFORGE_LLM_API_KEY`` / ``KFORGE_LLM_MODEL``),
+  mapping HTTP 429 onto :class:`RateLimitError` with the server's
+  ``retry-after``. Nothing in the repo calls it unless the endpoint env
+  var is set.
+
+Transports return a :class:`Completion` (text + token counts) rather than a
+bare string so the session layer can meter token budgets; token counts fall
+back to :func:`estimate_tokens` when the backend does not report real ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Protocol, Union
+
+
+class TransportError(RuntimeError):
+    """Base class for transport failures (network, replay miss, ...).
+
+    ``LLMBackend.generate`` turns these into ``GENERATION_FAILURE``
+    results, so a dead transport degrades a campaign's results instead of
+    crashing the worker pool."""
+
+
+class RateLimitError(TransportError):
+    """The backend refused the call for rate/budget reasons.
+
+    ``retry_after_s`` (optional) is the backend's own back-off request; the
+    session layer honors it, yielding its scheduler slot while it waits.
+    """
+
+    def __init__(self, message: str = "rate limited",
+                 retry_after_s: Optional[float] = None) -> None:
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
+
+
+class ReplayMissError(TransportError):
+    """A replay-mode session was asked for a prompt it never recorded."""
+
+
+def estimate_tokens(text: str) -> int:
+    """Cheap deterministic token estimate (~4 chars/token) used whenever a
+    transport does not report real counts; the rate limiter and the usage
+    meter only need a consistent currency, not exact BPE counts."""
+    return max(1, len(text) // 4)
+
+
+def prompt_key(prompt: str) -> str:
+    """Content address of one prompt (sha256 hex) — the record/replay JSONL
+    key, mirroring how the verification cache addresses verifications."""
+    return hashlib.sha256(prompt.encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """One transport round trip: the completion text plus token accounting
+    (real counts when the backend reports them, estimates otherwise)."""
+    text: str
+    prompt_tokens: int
+    completion_tokens: int
+
+
+class Transport(Protocol):
+    """Anything that turns a prompt into a :class:`Completion`.
+
+    May raise :class:`RateLimitError` (retryable; the session backs off and
+    yields its scheduler slot) or any other :class:`TransportError`
+    (non-retryable; surfaces as a generation failure)."""
+
+    def complete(self, prompt: str) -> Completion:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# MockTransport — deterministic, fault-injectable, offline
+# ---------------------------------------------------------------------------
+
+_WORKLOAD_NAME_RE = re.compile(r"workload named (\S+)")
+
+# op → the candidate body the mock emits; mirrors the reference oracle on
+# the *kernel-level* inputs (what verification hands the callable), so the
+# default mock completion verifies CORRECT for every template op family.
+_MOCK_BODIES: Dict[str, str] = {
+    "attention": "return _ref.attention(*inputs)",
+    "rmsnorm": "return _ref.rmsnorm(*inputs)",
+    "softmax": "return _ref.softmax(*inputs)",
+    "swiglu": "return _ref.swish(inputs[0]) * inputs[1]",
+    "matmul": "return _ref.matmul(*inputs)",
+    "swish": "return _ref.swish(*inputs)",
+    "xent": "return _ref.softmax_xent(*inputs)",
+    "ssd": "return _ref.ssd(*inputs)[0]",
+}
+
+
+def _op_for_workload_name(name: str) -> Optional[str]:
+    """Op family of a prompt's workload name: the KernelBench registry is
+    authoritative (L3 block names like ``L3/qwen_lm_head`` embed no op
+    substring); ad-hoc test workloads fall back to an op-token scan of the
+    name itself (``T1/swish-wide`` → swish)."""
+    try:
+        from repro.core import kernelbench
+        return kernelbench.by_name(name).op
+    except Exception:  # noqa: BLE001 — not a registered workload
+        pass
+    tail = name.split("/")[-1]
+    for op in sorted(_MOCK_BODIES, key=len, reverse=True):
+        if op in tail:
+            return op
+    return None
+
+
+def default_mock_reply(prompt: str) -> str:
+    """The MockTransport's canned synthesis reply for one prompt.
+
+    The workload is recovered from the ``Optimize the workload named ...``
+    prompt line and resolved to its op family
+    (:func:`_op_for_workload_name`); the reply's code block computes the
+    reference oracle on the kernel inputs, so it verifies CORRECT for
+    every template op family at every KernelBench level. Unknown ops get
+    an echo candidate that fails verification as a numeric mismatch —
+    deterministically exercising the feedback/repair path.
+    """
+    m = _WORKLOAD_NAME_RE.search(prompt)
+    name = m.group(1) if m else ""
+    op = _op_for_workload_name(name) if name else None
+    body = _MOCK_BODIES.get(op, "return inputs[0]")
+    return (f"Targeting {name or 'the workload'}: the parallel decomposition "
+            "mirrors the reference oracle; tiling is left to the compiler.\n\n"
+            "```python\n"
+            "from repro.kernels import ref as _ref\n\n\n"
+            "def candidate(*inputs):\n"
+            f"    {body}\n"
+            "```\n")
+
+
+class MockTransport:
+    """Deterministic offline transport with fault injection.
+
+    Every call increments a (thread-safe) counter ``calls``; faults fire on
+    a fixed modulo schedule of that counter, so a single-threaded test sees
+    a byte-identical transcript on every run:
+
+    * ``rate_limit_every=N`` — every Nth call raises :class:`RateLimitError`
+      (with ``retry_after_s``) *instead of* producing a completion.
+    * ``malformed_every=N`` — every Nth completion has its code fences
+      stripped (no extractable code block).
+    * ``truncate_every=N`` — every Nth completion is cut mid-block (opening
+      fence present, closing fence missing), the classic truncated-stream
+      failure.
+    * ``latency_s`` — sleep injected per successful call (via ``sleep``,
+      injectable for tests).
+
+    ``completion_fn`` overrides the default oracle-echo reply; faults still
+    apply on top of it.
+    """
+
+    def __init__(self, *, completion_fn: Optional[Callable[[str], str]] = None,
+                 rate_limit_every: int = 0,
+                 retry_after_s: float = 0.05,
+                 malformed_every: int = 0,
+                 truncate_every: int = 0,
+                 latency_s: float = 0.0,
+                 sleep: Callable[[float], None] = time.sleep) -> None:
+        self.completion_fn = completion_fn or default_mock_reply
+        self.rate_limit_every = rate_limit_every
+        self.retry_after_s = retry_after_s
+        self.malformed_every = malformed_every
+        self.truncate_every = truncate_every
+        self.latency_s = latency_s
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self.calls = 0                  # total complete() calls (faults incl.)
+
+    def complete(self, prompt: str) -> Completion:
+        with self._lock:
+            self.calls += 1
+            n = self.calls
+        if self.rate_limit_every and n % self.rate_limit_every == 0:
+            raise RateLimitError(
+                f"mock rate limit (call {n})", retry_after_s=self.retry_after_s)
+        if self.latency_s:
+            self._sleep(self.latency_s)
+        text = self.completion_fn(prompt)
+        if self.malformed_every and n % self.malformed_every == 0:
+            text = text.replace("```python\n", "").replace("```", "")
+        elif self.truncate_every and n % self.truncate_every == 0:
+            head, sep, _ = text.partition("```python\n")
+            text = head + sep + "def candidate(*inp"   # cut mid-stream
+        return Completion(text, estimate_tokens(prompt),
+                          estimate_tokens(text))
+
+
+# ---------------------------------------------------------------------------
+# ReplayTransport — record / replay JSONL sessions
+# ---------------------------------------------------------------------------
+
+
+class ReplayTransport:
+    """Record prompt → completion pairs to JSONL, or replay them.
+
+    One ``{"key", "prompt", "completion", "prompt_tokens",
+    "completion_tokens"}`` object per line; ``key`` is
+    :func:`prompt_key` of the full prompt. Identical prompts issued more
+    than once stack per-key FIFO, so a recorded session replays in the
+    exact per-prompt order it was captured, independent of worker
+    interleaving across *different* prompts.
+
+    * ``ReplayTransport.record(path, inner)`` — consult the file first
+      (resume-safe: an interrupted ``--record`` run never re-spends live
+      calls for keys already on disk), fall through to ``inner`` on a
+      miss, and append the result.
+    * ``ReplayTransport.replay(path)`` — no inner transport at all, so a
+      replayed campaign makes **zero** live calls by construction. A prompt
+      whose key was never recorded raises :class:`ReplayMissError`; a key
+      asked for more times than it was recorded repeats its last completion
+      (deterministic resume).
+    """
+
+    def __init__(self, path: Union[str, Path], *,
+                 inner: Optional[Transport] = None,
+                 mode: str = "replay") -> None:
+        if mode not in ("record", "replay"):
+            raise ValueError(f"mode must be 'record' or 'replay', got {mode!r}")
+        if mode == "record" and inner is None:
+            raise ValueError("record mode needs an inner transport to call "
+                             "on cache misses")
+        self.path = Path(path)
+        self.inner = inner
+        self.mode = mode
+        self._lock = threading.Lock()
+        self._queues: Dict[str, List[Completion]] = {}
+        self._last: Dict[str, Completion] = {}
+        self.served_from_file = 0       # completions answered without inner
+        if mode == "replay" and not self.path.exists():
+            raise TransportError(
+                f"replay session {self.path} does not exist — record one "
+                "first (CLI: --record PATH)")
+        self._load()
+        if mode == "record":
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    @classmethod
+    def record(cls, path: Union[str, Path], inner: Transport
+               ) -> "ReplayTransport":
+        """Recording transport around ``inner`` (resume-safe, see class)."""
+        return cls(path, inner=inner, mode="record")
+
+    @classmethod
+    def replay(cls, path: Union[str, Path]) -> "ReplayTransport":
+        """Replay-only transport over an existing session file."""
+        return cls(path, mode="replay")
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        with self.path.open() as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    comp = Completion(rec["completion"],
+                                      int(rec.get("prompt_tokens", 0)),
+                                      int(rec.get("completion_tokens", 0)))
+                    key = rec["key"]
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError):
+                    continue            # torn tail write from a killed run
+                self._queues.setdefault(key, []).append(comp)
+                self._last[key] = comp
+
+    def __len__(self) -> int:
+        """Distinct recorded prompts (loaded + appended this run)."""
+        with self._lock:
+            return len(self._last)
+
+    def _pop(self, key: str) -> Optional[Completion]:
+        with self._lock:
+            queue = self._queues.get(key)
+            if queue:
+                self.served_from_file += 1
+                return queue.pop(0)
+            if self.mode == "replay":
+                # exhausted key: repeat its last completion, so a resumed
+                # replay that asks once more than the recording stays
+                # deterministic. Record mode falls through to a live call
+                # instead — a fresh completion is worth capturing.
+                last = self._last.get(key)
+                if last is not None:
+                    self.served_from_file += 1
+                    return last
+            return None
+
+    def _append(self, key: str, prompt: str, comp: Completion) -> None:
+        line = json.dumps({
+            "key": key, "prompt": prompt, "completion": comp.text,
+            "prompt_tokens": comp.prompt_tokens,
+            "completion_tokens": comp.completion_tokens,
+        }, sort_keys=True)
+        with self._lock:
+            self._last[key] = comp
+            with self.path.open("a") as fh:
+                fh.write(line + "\n")
+
+    def complete(self, prompt: str) -> Completion:
+        key = prompt_key(prompt)
+        hit = self._pop(key)
+        if hit is not None:
+            return hit
+        if self.mode == "replay":
+            raise ReplayMissError(
+                f"prompt {key[:12]}… was never recorded in {self.path} "
+                "(stale session? re-record with --record)")
+        comp = self.inner.complete(prompt)      # may raise RateLimitError
+        self._append(key, prompt, comp)
+        return comp
+
+
+# ---------------------------------------------------------------------------
+# HTTPTransport — production endpoint stub, env-configured
+# ---------------------------------------------------------------------------
+
+
+class HTTPTransport:
+    """Minimal JSON-over-HTTP completion client (stdlib ``urllib`` only).
+
+    Env config (nothing constructs this unless the endpoint is set):
+
+    * ``KFORGE_LLM_ENDPOINT`` — full URL of a completions endpoint.
+    * ``KFORGE_LLM_API_KEY`` — optional bearer token.
+    * ``KFORGE_LLM_MODEL`` — optional model name sent in the payload.
+
+    The request body is ``{"model", "prompt", "max_tokens"}``; the reply may
+    be ``{"text": ...}`` or an OpenAI-style ``{"choices": [{"text"|
+    "message": {"content"}}], "usage": {...}}``. HTTP 429 maps onto
+    :class:`RateLimitError` carrying the server's ``retry-after``; any
+    other failure is a :class:`TransportError`.
+    """
+
+    ENV_ENDPOINT = "KFORGE_LLM_ENDPOINT"
+    ENV_API_KEY = "KFORGE_LLM_API_KEY"
+    ENV_MODEL = "KFORGE_LLM_MODEL"
+
+    def __init__(self, endpoint: str, *, api_key: Optional[str] = None,
+                 model: str = "", timeout_s: float = 120.0,
+                 max_output_tokens: int = 2048) -> None:
+        if not endpoint:
+            raise TransportError("HTTPTransport needs a non-empty endpoint")
+        self.endpoint = endpoint
+        self.api_key = api_key
+        self.model = model
+        self.timeout_s = timeout_s
+        self.max_output_tokens = max_output_tokens
+
+    @classmethod
+    def configured(cls) -> bool:
+        """True when the endpoint env var is set (the CLI's live-backend
+        auto-detection)."""
+        return bool(os.environ.get(cls.ENV_ENDPOINT))
+
+    @classmethod
+    def from_env(cls) -> "HTTPTransport":
+        endpoint = os.environ.get(cls.ENV_ENDPOINT, "")
+        if not endpoint:
+            raise TransportError(
+                f"{cls.ENV_ENDPOINT} is not set; export it (plus optional "
+                f"{cls.ENV_API_KEY}/{cls.ENV_MODEL}) to use a live endpoint, "
+                "or use MockTransport / --replay for offline runs")
+        return cls(endpoint, api_key=os.environ.get(cls.ENV_API_KEY),
+                   model=os.environ.get(cls.ENV_MODEL, ""))
+
+    @staticmethod
+    def _parse_retry_after(value: Optional[str]) -> Optional[float]:
+        """Seconds from a Retry-After header. RFC 7231 also allows an
+        HTTP-date form; anything non-numeric degrades to None (the session
+        then applies its own backoff) instead of raising — a retryable 429
+        must never escape as an unretried failure."""
+        if not value:
+            return None
+        try:
+            return float(value)
+        except ValueError:
+            return None
+
+    @staticmethod
+    def _extract_text(payload: Dict) -> str:
+        if isinstance(payload.get("text"), str):
+            return payload["text"]
+        choices = payload.get("choices") or []
+        if choices:
+            choice = choices[0]
+            if isinstance(choice.get("text"), str):
+                return choice["text"]
+            message = choice.get("message") or {}
+            if isinstance(message.get("content"), str):
+                return message["content"]
+        raise TransportError(
+            f"unrecognized completion payload shape: {sorted(payload)}")
+
+    def complete(self, prompt: str) -> Completion:
+        import urllib.error
+        import urllib.request
+
+        body = json.dumps({"model": self.model, "prompt": prompt,
+                           "max_tokens": self.max_output_tokens}).encode()
+        headers = {"content-type": "application/json"}
+        if self.api_key:
+            headers["authorization"] = f"Bearer {self.api_key}"
+        req = urllib.request.Request(self.endpoint, data=body,
+                                     headers=headers, method="POST")
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                payload = json.load(resp)
+        except urllib.error.HTTPError as exc:
+            if exc.code == 429:
+                retry = self._parse_retry_after(
+                    exc.headers.get("retry-after"))
+                raise RateLimitError("endpoint rate limited (HTTP 429)",
+                                     retry_after_s=retry) from exc
+            raise TransportError(
+                f"endpoint error HTTP {exc.code}: {exc.reason}") from exc
+        except (OSError, json.JSONDecodeError) as exc:
+            raise TransportError(f"endpoint unreachable: {exc}") from exc
+        text = self._extract_text(payload)
+        usage = payload.get("usage") or {}
+        return Completion(
+            text,
+            int(usage.get("prompt_tokens") or estimate_tokens(prompt)),
+            int(usage.get("completion_tokens") or estimate_tokens(text)))

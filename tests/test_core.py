@@ -51,11 +51,22 @@ def test_state_runtime_error():
     assert res.state in (ES.COMPILATION_FAILURE, ES.RUNTIME_ERROR)
 
 
-def test_state_generation_failure_offline_llm():
-    backend = LLMBackend(complete=None)
+def test_llm_backend_without_completion_rejected_at_construction():
+    """A backend with no completion channel used to fail LATE — one opaque
+    GENERATION_FAILURE per workload, deep in the refinement loop. The
+    misconfiguration is now a clear ValueError at construction."""
+    with pytest.raises(ValueError, match="completion channel"):
+        LLMBackend(complete=None)
+    with pytest.raises(ValueError, match="completion channel"):
+        LLMBackend()
+    # prompt inspection stays possible, but generation refuses clearly
+    backend = LLMBackend(prompt_only=True)
     wl = kernelbench.by_name("L1/swish")
-    gen = backend.generate(wl)
-    assert gen.failure is not None
+    assert "kernel" in backend.build_prompt(
+        wl, prev=None, prev_result=None, recommendation=None,
+        use_reference=False)
+    with pytest.raises(RuntimeError, match="prompt_only"):
+        backend.generate(wl)
 
 
 def test_anti_cheat_constant_output_flagged():
@@ -132,7 +143,7 @@ def test_reference_hints_transfer_strategy():
 
 
 def test_llm_backend_prompt_contains_paper_fields():
-    backend = LLMBackend()
+    backend = LLMBackend(prompt_only=True)
     wl = kernelbench.by_name("L2/attention_gqa")
     p = backend.build_prompt(wl, prev=None, prev_result=None,
                              recommendation=None, use_reference=True)

@@ -513,7 +513,7 @@ def test_metal_m2_gets_no_tpu_compiler_params():
 
 def test_metal_m2_prompt_and_verification():
     wl = _tiny()
-    prompt = LLMBackend(platform="metal_m2").build_prompt(
+    prompt = LLMBackend(platform="metal_m2", prompt_only=True).build_prompt(
         wl, prev=None, prev_result=None, recommendation=None,
         use_reference=False)
     assert "[[thread_position_in_grid]]" in prompt

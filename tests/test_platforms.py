@@ -245,11 +245,13 @@ def test_default_analyzer_matches_seed_behaviour():
 
 def test_llm_prompt_uses_platform_idiom():
     wl = kernelbench.by_name("L1/softmax", small=True)
-    tpu_prompt = LLMBackend(platform="tpu_v5e").build_prompt(
+    tpu_prompt = LLMBackend(platform="tpu_v5e",
+                            prompt_only=True).build_prompt(
         wl, prev=None, prev_result=None, recommendation=None,
         use_reference=False)
     assert "pallas_call" in tpu_prompt and "VMEM" in tpu_prompt
-    gpu_prompt = LLMBackend(platform="gpu_sim").build_prompt(
+    gpu_prompt = LLMBackend(platform="gpu_sim",
+                            prompt_only=True).build_prompt(
         wl, prev=None, prev_result=None, recommendation=None,
         use_reference=False)
     assert "__global__" in gpu_prompt           # CUDA one-shot example
@@ -258,7 +260,8 @@ def test_llm_prompt_uses_platform_idiom():
 
 def test_llm_prompt_harvested_reference_overrides_oracle():
     wl = kernelbench.by_name("L1/softmax", small=True)
-    backend = LLMBackend(platform="gpu_sim", reference_sources={
+    backend = LLMBackend(platform="gpu_sim", prompt_only=True,
+                         reference_sources={
         wl.name: ("tpu_v5e", "# harvested kernel: online=True")})
     p = backend.build_prompt(wl, prev=None, prev_result=None,
                              recommendation=None, use_reference=True)

@@ -1,0 +1,79 @@
+"""Prompt-snapshot (golden) tests: the §3.2 synthesis prompt, rendered for
+every registered platform, is diffed against ``tests/goldens/`` so any
+prompt drift — template edits, platform descriptor/example/constraint
+changes — shows up as a reviewable full-prompt diff instead of silently
+shifting what production LLM sessions are asked.
+
+Regenerate intentionally with::
+
+    UPDATE_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_prompts_golden.py
+"""
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.core import prompts
+from repro.platforms import available_platforms, resolve_platform
+
+GOLDEN_DIR = Path(__file__).parent / "goldens"
+
+# Fixed, platform-independent prompt inputs: only the platform-owned fields
+# (descriptor, one-shot example, constraints note) may vary across goldens.
+WORKLOAD_NAME = "L1/swish"
+WORKLOAD_SRC = (
+    "def swish(x):\n"
+    '    """Reference oracle (pure jax.numpy)."""\n'
+    "    return x * jax.nn.sigmoid(x)\n")
+REF_SRC = "# harvested reference kernel\n# strategy: online=True\n"
+REF_PLATFORM = "gpu_sim"
+PREV_SRC = "def candidate(*inputs):\n    return inputs[0]\n"
+PREV_RESULT = "numeric_mismatch: max rel err 1.00e+00 > tol 1e-05"
+RECOMMENDATION = "Increase block_lanes to 512 to fill the vector unit."
+
+
+def render(platform_name: str) -> str:
+    plat = resolve_platform(platform_name)
+    return prompts.render_synthesis(
+        plat.descriptor, plat.oneshot_example, WORKLOAD_SRC, WORKLOAD_NAME,
+        ref_src=REF_SRC, ref_platform=REF_PLATFORM,
+        prev_src=PREV_SRC, prev_result=PREV_RESULT,
+        recommendation=RECOMMENDATION, constraints=plat.constraints_note)
+
+
+@pytest.mark.parametrize("platform", available_platforms())
+def test_synthesis_prompt_matches_golden(platform):
+    golden = GOLDEN_DIR / f"synthesis_prompt_{platform}.txt"
+    rendered = render(platform)
+    if os.environ.get("UPDATE_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        golden.write_text(rendered)
+    assert golden.exists(), (
+        f"missing golden {golden}; generate with UPDATE_GOLDENS=1")
+    assert rendered == golden.read_text(), (
+        f"synthesis prompt for {platform} drifted from {golden.name}; "
+        "if intentional, regenerate with UPDATE_GOLDENS=1 so review sees "
+        "the diff")
+
+
+def test_goldens_cover_exactly_the_registered_platforms():
+    """A platform added without a golden (or a golden for a dropped
+    platform) fails here, keeping snapshots and registry in lock-step."""
+    have = {p.stem.replace("synthesis_prompt_", "")
+            for p in GOLDEN_DIR.glob("synthesis_prompt_*.txt")}
+    assert have == set(available_platforms())
+
+
+def test_prompt_contract_fields_render_for_every_platform():
+    """The per-platform contract (prompts module docstring): descriptor in
+    the instruction lines, the one-shot example body, the constraints note,
+    and both optional blocks."""
+    for name in available_platforms():
+        plat = resolve_platform(name)
+        p = render(name)
+        assert plat.descriptor in p
+        assert plat.oneshot_example.strip() in p
+        assert plat.constraints_note in p
+        assert REF_SRC in p and REF_PLATFORM in p      # reference block
+        assert PREV_RESULT in p and RECOMMENDATION in p  # feedback block
+        assert "candidate(*inputs)" in p               # reply contract

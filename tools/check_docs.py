@@ -5,20 +5,73 @@ Fails (exit 1, one line per problem) when:
 
 * a registered platform is missing from README.md's platform table, the
   campaign CLI docs, or DESIGN.md;
-* a public name exported by ``repro.campaign`` is missing from docs/api.md;
+* a public name exported by ``repro.campaign`` or ``repro.llm`` is missing
+  from docs/api.md;
 * a ``python -m repro.campaign`` CLI flag (introspected from the live
   argument parser, so new flags are covered automatically) is missing from
-  README.md or docs/api.md.
+  README.md or docs/api.md;
+* a fenced ``python`` block in docs/api.md or docs/llm_backends.md does
+  not parse, or imports a module/name that no longer resolves against
+  ``src/`` (the stale-docs guard: example code must track the API).
 
 Run as ``PYTHONPATH=src python tools/check_docs.py`` from the repo root.
 """
 from __future__ import annotations
 
+import ast
+import importlib
+import importlib.util
 import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+
+PY_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def check_python_blocks(doc_name: str, text: str, problems: list) -> int:
+    """Parse every fenced python block and resolve its imports against the
+    live tree: ``import x`` / ``from x import y`` must find module ``x``,
+    and for first-party (``repro``) modules every imported name must still
+    exist. Returns the number of blocks checked."""
+    blocks = PY_BLOCK_RE.findall(text)
+    for i, block in enumerate(blocks, 1):
+        try:
+            tree = ast.parse(block)
+        except SyntaxError as exc:
+            problems.append(f"{doc_name}: python block #{i} does not "
+                            f"parse: {exc}")
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    _check_import(doc_name, i, alias.name, None, problems)
+            elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                    and node.module:
+                names = [a.name for a in node.names if a.name != "*"]
+                _check_import(doc_name, i, node.module, names, problems)
+    return len(blocks)
+
+
+def _check_import(doc_name: str, block: int, module: str,
+                  names, problems: list) -> None:
+    try:
+        spec = importlib.util.find_spec(module)
+    except (ImportError, ValueError):
+        spec = None
+    if spec is None:
+        problems.append(f"{doc_name}: python block #{block} imports "
+                        f"{module!r}, which does not resolve")
+        return
+    if not names or module.split(".")[0] != "repro":
+        return                          # attribute-check first-party only
+    mod = importlib.import_module(module)
+    for name in names:
+        if not hasattr(mod, name):
+            problems.append(
+                f"{doc_name}: python block #{block} imports {name!r} from "
+                f"{module}, which no longer exports it")
 
 
 def platform_table_rows(readme: str) -> set:
@@ -33,12 +86,14 @@ def platform_table_rows(readme: str) -> set:
 
 def main() -> int:
     from repro import campaign
+    from repro import llm as llm_mod
     from repro.platforms import available_platforms
 
     problems = []
     readme = (ROOT / "README.md").read_text()
     design = (ROOT / "DESIGN.md").read_text()
     api = (ROOT / "docs" / "api.md").read_text()
+    llm_doc = (ROOT / "docs" / "llm_backends.md").read_text()
 
     table = platform_table_rows(readme)
     for name in available_platforms():
@@ -72,13 +127,28 @@ def main() -> int:
             problems.append(f"docs/api.md: repro.campaign.{name} "
                             "undocumented")
 
+    llm_public = [n for n in vars(llm_mod)
+                  if (not n.startswith("_") and n[0].isupper())
+                  or n in ("build_llm_context", "format_usage",
+                           "estimate_tokens", "prompt_key")]
+    for name in sorted(set(llm_public)):
+        if name not in api and name not in llm_doc:
+            problems.append(f"docs: repro.llm.{name} undocumented in both "
+                            "docs/api.md and docs/llm_backends.md")
+
+    n_blocks = 0
+    for doc_name, text in (("docs/api.md", api),
+                           ("docs/llm_backends.md", llm_doc)):
+        n_blocks += check_python_blocks(doc_name, text, problems)
+
     for p in problems:
         print(f"docs-consistency: {p}", file=sys.stderr)
     if not problems:
         n = len(available_platforms())
         print(f"docs-consistency: OK ({n} platforms, "
               f"{len(set(public))} campaign exports, "
-              f"{len(flags)} CLI flags)")
+              f"{len(set(llm_public))} llm exports, "
+              f"{len(flags)} CLI flags, {n_blocks} doc code blocks)")
     return 1 if problems else 0
 
 

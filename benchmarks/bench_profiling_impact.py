@@ -1,11 +1,25 @@
-"""Paper Fig. 3 / Table 5 — impact of the performance-analysis agent:
-iterative+reference vs iterative+reference+profiling at fast_1.0 / fast_1.5.
-Campaign-runner based; both configs share one verification cache, so only
-the iterations where agent G's recommendation actually diverges from the
-blind mutation search cost new verifications."""
+"""Paper Fig. 3 / Table 5 — impact of the performance-analysis agent.
+
+Two sections:
+
+* ``profiling/...`` — iterative+reference vs iterative+reference+profiling
+  at fast_1.0 / fast_1.5 on the offline template backend: what the single
+  rule-table agent G buys over the blind mutation search.
+* ``two_agent/...`` — the same profiling-on loop on the LLM backend
+  (MockTransport, offline), rule-table agent G vs the LLM analyzer
+  (``repro.llm.LLMAnalyzer`` over the same mock transport): measures the
+  genuine agent-F/agent-G collaboration data path — prompt rendering,
+  analysis-session round trips, reply parsing — not just a rule lookup.
+  Emits fast_p rows plus the share of optimization recommendations that
+  came from the LLM analyzer and the analysis-session token overhead.
+
+Campaign-runner based; configs of a section share one verification cache,
+so only iterations where the recommendation actually diverges cost new
+verifications.
+"""
 from __future__ import annotations
 
-from repro.campaign import VerificationCache, run_campaign
+from repro.campaign import Scheduler, VerificationCache, run_campaign
 from repro.core import LoopConfig, fast_p, kernelbench
 from benchmarks.common import Row, CAMPAIGN_WORKERS, campaign_finals
 
@@ -23,4 +37,45 @@ def run(small: bool = True):
             for p in (1.0, 1.5):
                 rows.append((f"profiling/{cname}/L{level}/p{p}", 0.0,
                              f"{fast_p(finals, p):.3f}"))
+    rows.extend(run_two_agent(small=small))
+    return rows
+
+
+def run_two_agent(small: bool = True):
+    """LLM generation agent F with rule-table vs LLM agent G (both offline
+    on MockTransport): the collaboration measurement."""
+    from repro.llm import build_llm_context, MockTransport
+
+    rows: list[Row] = []
+    cache = VerificationCache()
+    cfg = LoopConfig(num_iterations=3, use_profiling=True)
+    workloads = kernelbench.suite(1, small=small)
+    for cname, analysis in (("rule", "rule"), ("llm", "llm")):
+        # explicit MockTransport: this bench must stay offline even when
+        # KFORGE_LLM_ENDPOINT is exported in the environment
+        ctx = build_llm_context(transport=MockTransport())
+        sched = Scheduler(max_workers=CAMPAIGN_WORKERS)
+        result = run_campaign(
+            workloads, cfg, cache=cache, scheduler=sched,
+            agent_factory=ctx.agent_factory(platform=cfg.platform,
+                                            scheduler=sched),
+            analyzer_factory=(ctx.analyzer_factory(platform=cfg.platform,
+                                                   scheduler=sched)
+                              if analysis == "llm" else None),
+            usage=ctx.usage)
+        finals = campaign_finals(result)
+        for p in (1.0, 1.5):
+            rows.append((f"two_agent/{cname}/L1/p{p}", 0.0,
+                         f"{fast_p(finals, p):.3f}"))
+        n_recs = n_llm = 0
+        for run_ in result.runs:
+            for it in (run_.outcome.logs if run_.outcome else []):
+                if it.recommendation_source is not None:
+                    n_recs += 1
+                    n_llm += it.recommendation_source == "llm"
+        usage = result.llm_usage or {}
+        rows.append((f"two_agent/{cname}/llm_rec_share", 0.0,
+                     f"{n_llm / n_recs:.3f}" if n_recs else "n/a"))
+        rows.append((f"two_agent/{cname}/tokens", 0.0,
+                     str(usage.get("total_tokens", 0))))
     return rows

@@ -1,0 +1,88 @@
+"""Run the paper's TWO-AGENT loop end to end — offline.
+
+Agent F (generation, ``LLMBackend``) and agent G (performance analysis,
+``repro.llm.LLMAnalyzer``) collaborating through one shared MockTransport:
+F's correct candidates are profiled, G's analysis sessions turn each
+profile into a single structured recommendation, and the next optimization
+iteration's prompt carries it (paper §3.2's functional → optimization
+loop). MockTransport answers both agents deterministically — synthesis
+prompts with oracle-echo code blocks, analysis prompts from the rule-table
+oracle — so the whole collaboration runs anywhere with zero network. The
+CI fast lane executes this script as the two-agent smoke test.
+
+Usage::
+
+  PYTHONPATH=src python examples/two_agent_campaign.py [runs-dir]
+
+The first run records BOTH agents' prompt->completion traffic to one
+session file; the second replays it with ZERO live transport calls — the
+CLI equivalent is ``python -m repro.campaign --backend llm --analysis llm
+--use-profiling --replay SESSION``.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.campaign import EventLog, Scheduler, run_campaign
+from repro.core import LoopConfig, kernelbench
+from repro.llm import MockTransport, build_llm_context, format_usage
+
+
+def run_two_agent(ctx, workloads, loop, log_path=None):
+    sched = Scheduler(max_workers=4)     # sessions yield slots while pacing
+    return run_campaign(
+        workloads, loop, scheduler=sched,
+        agent_factory=ctx.agent_factory(platform=loop.platform,
+                                        scheduler=sched),
+        analyzer_factory=ctx.analyzer_factory(platform=loop.platform,
+                                              scheduler=sched),
+        usage=ctx.usage, log_path=log_path)
+
+
+def main() -> None:
+    runs = Path(sys.argv[1] if len(sys.argv) > 1 else "runs-two-agent")
+    runs.mkdir(parents=True, exist_ok=True)
+    session = runs / "two-agent-session.jsonl"
+    log = runs / "two-agent-campaign.jsonl"
+    workloads = kernelbench.suite(1, small=True)
+    # use_profiling=True is what invokes agent G at all (§5.2)
+    loop = LoopConfig(num_iterations=3, use_profiling=True,
+                      platform="tpu_v5e")
+
+    # -- leg 1: record — both agents' traffic captured to one JSONL ---------
+    # transport pinned explicitly: this script promises zero network, so a
+    # stray KFORGE_LLM_ENDPOINT in the environment must not flip it onto a
+    # live billed endpoint
+    ctx = build_llm_context(transport=MockTransport(), record=str(session))
+    result = run_two_agent(ctx, workloads, loop, log_path=log)
+    states = [r.state.value for r in result.finals()]
+    print(f"recorded two-agent campaign: {len(result.runs)} workloads -> "
+          f"{states.count('correct')} correct")
+    print(f"llm usage (generation + analysis): "
+          f"{format_usage(result.llm_usage)}")
+
+    # the event log is the collaboration audit trail: every recommendation
+    # carries the analyzer that produced it
+    iters = [e for e in EventLog(log).events()
+             if e.get("event") == "iteration"]
+    llm_recs = [e for e in iters if e.get("recommendation_source") == "llm"]
+    opt = [e for e in iters if e.get("phase") == "optimization"]
+    assert llm_recs, "no recommendation came from the LLM analyzer"
+    assert opt, "no optimization-phase iteration ran"
+    print(f"event log: {len(iters)} iterations, {len(opt)} optimization "
+          f"phase, {len(llm_recs)} LLM-analyzer recommendations")
+
+    # -- leg 2: replay — byte-for-byte, zero live calls ---------------------
+    replay_ctx = build_llm_context(replay=str(session))
+    replayed = run_two_agent(replay_ctx, workloads, loop)
+    rep_states = [r.state.value for r in replayed.finals()]
+    assert rep_states == states, (rep_states, states)
+    assert replay_ctx.transport.inner is None      # no live channel at all
+    print(f"replayed two-agent campaign: identical results, "
+          f"{replay_ctx.transport.served_from_file} completions served "
+          "from the session file, 0 live calls")
+
+
+if __name__ == "__main__":
+    main()

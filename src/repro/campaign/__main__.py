@@ -18,7 +18,10 @@ Examples::
   python -m repro.campaign --backend llm --record runs/s1.jsonl
   python -m repro.campaign --backend llm --replay runs/s1.jsonl \
       --platform metal_m2                 # deterministic, 0 live calls
+  python -m repro.campaign --backend llm --analysis llm --use-profiling \
+      --replay runs/s1.jsonl              # two-agent loop, 0 live calls
   python -m repro.campaign --matrix --backend llm --rpm 60 --tpm 200000
+  python -m repro.campaign --matrix --backend llm --leg-timeout 900
 """
 from __future__ import annotations
 
@@ -55,8 +58,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="one generation per workload, no refinement")
     ap.add_argument("--reference", action="store_true",
                     help="cross-platform reference configuration (§6.2)")
-    ap.add_argument("--profiling", action="store_true",
-                    help="enable the performance-analysis agent (§5.2)")
+    ap.add_argument("--profiling", "--use-profiling", action="store_true",
+                    help="enable the performance-analysis agent (§5.2); "
+                         "--use-profiling is an alias matching the "
+                         "LoopConfig field name")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--platform", choices=available_platforms(),
                     default=DEFAULT_PLATFORM,
@@ -91,6 +96,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "(default) or LLM sessions over the repro.llm "
                          "transport layer (MockTransport unless "
                          "KFORGE_LLM_ENDPOINT or --replay selects another)")
+    ap.add_argument("--analysis", choices=("rule", "llm"), default="rule",
+                    help="performance-analysis agent G: the deterministic "
+                         "rule table (default) or LLM analysis sessions "
+                         "over the same transport as --backend llm "
+                         "(requires --backend llm; meaningful with "
+                         "--profiling, which enables agent G at all)")
+    ap.add_argument("--leg-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="(--matrix, thread mode) deadline for each whole "
+                         "campaign leg: a hung leg resolves as a timeout "
+                         "error instead of wedging a graph slot forever "
+                         "(LLM matrices are thread-mode only; with "
+                         "--isolate, --timeout already bounds each leg)")
     ap.add_argument("--record", default=None, metavar="SESSION",
                     help="(--backend llm) record every prompt->completion "
                          "pair into this JSONL session file (resume-safe: "
@@ -149,6 +167,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                         ("--rpm", args.rpm), ("--tpm", args.tpm)):
         if value is not None and args.backend != "llm":
             ap.error(f"{flag} only applies to --backend llm")
+    if args.analysis == "llm" and args.backend != "llm":
+        ap.error("--analysis llm requires --backend llm: the LLM analyzer "
+                 "rides the same transport sessions as LLM generation")
+    if args.leg_timeout is not None and not args.matrix:
+        ap.error("--leg-timeout only applies to --matrix")
+    if args.leg_timeout is not None and args.isolate:
+        ap.error("--leg-timeout only applies to thread-mode --matrix; with "
+                 "--isolate, --timeout already bounds each leg (the child "
+                 "process is killed on expiry)")
     if args.record and args.replay:
         ap.error("--record and --replay are mutually exclusive (a replayed "
                  "session makes no live calls to record)")
@@ -214,9 +241,9 @@ def main(argv: Optional[List[str]] = None) -> int:
             matrix_workers=args.matrix_workers,
             leg_workers=args.leg_workers,
             isolation="process" if args.isolate else "thread",
-            timeout_s=args.timeout,
+            timeout_s=args.timeout, leg_timeout_s=args.leg_timeout,
             log_path=args.log, resume=not args.no_resume,
-            backend=args.backend, llm=llm_ctx)
+            backend=args.backend, analysis=args.analysis, llm=llm_ctx)
         tele = matrix.telemetry
         print(f"transfer matrix: {len(workloads)} workloads x "
               f"{len(matrix.legs)} ordered pairs over "
@@ -253,7 +280,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             to_platform=args.platform, loop=loop, cache=cache,
             max_workers=args.workers, timeout_s=args.timeout,
             log_path=log_path, resume=not args.no_resume,
-            backend=args.backend, llm=llm_ctx, scheduler=sweep_sched)
+            backend=args.backend, analysis=args.analysis, llm=llm_ctx,
+            scheduler=sweep_sched)
         print(f"transfer sweep: {len(workloads)} workloads x 3 legs "
               f"({args.backend} backend) -> {log_path}")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
@@ -275,6 +303,9 @@ def main(argv: Optional[List[str]] = None) -> int:
             workloads, cfg, cache=cache, scheduler=sched,
             agent_factory=llm_ctx.agent_factory(platform=args.platform,
                                                 scheduler=sched),
+            analyzer_factory=(llm_ctx.analyzer_factory(
+                platform=args.platform, scheduler=sched)
+                if args.analysis == "llm" else None),
             usage=llm_ctx.usage)
     else:
         campaign = Campaign(workloads, cfg, cache=cache)

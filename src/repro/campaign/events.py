@@ -6,7 +6,8 @@ One JSON object per line. Event kinds:
   campaign_start   {suite, n_workloads, platform, loop: {...}}
   iteration        one per refinement iteration, mirroring ``IterationLog``
                    (workload, iteration, phase, candidate, state, timing,
-                   cache_key, recommendation, platform)
+                   cache_key, recommendation, recommendation_source,
+                   platform)
   workload_done    terminal per-workload record with the serialized final
                    EvalResult and ``iters_to_correct`` (how many refinement
                    iterations ran before the first CORRECT verification —
@@ -117,6 +118,9 @@ def iteration_event(workload: str, level: int, log: IterationLog,
         "params": dict(log.candidate.params) if log.candidate else None,
         "seed": log.seed,
         "recommendation": log.recommendation,
+        # which analyzer produced the recommendation ("rule" | "llm"; None
+        # when none was made) — the audit trail for two-agent campaigns
+        "recommendation_source": log.recommendation_source,
         "result": result_to_dict(log.result),
     }
 

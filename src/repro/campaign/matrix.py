@@ -248,10 +248,12 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                         matrix_workers: Optional[int] = None,
                         leg_workers: Optional[int] = None,
                         timeout_s: Optional[float] = None,
+                        leg_timeout_s: Optional[float] = None,
                         isolation: str = "thread",
                         log_path: Optional[Union[str, Path]] = None,
                         resume: bool = True,
                         backend: str = "template",
+                        analysis: str = "rule",
                         llm=None) -> TransferMatrix:
     """Run the §6.2 transfer sweep over every ordered platform pair as one
     dependency-aware job graph.
@@ -293,9 +295,23 @@ def run_transfer_matrix(workloads: Sequence[Workload],
             In process isolation a child cannot share the parent's
             semaphore, so the total is preserved by giving each leg
             ``leg_workers // matrix_workers`` slots of its own.
+        analysis: ``"rule"`` (deterministic rule-table agent G, default) or
+            ``"llm"`` (requires ``backend="llm"``): each leg's workers then
+            analyze profiles through :class:`repro.llm.LLMAnalyzer`
+            sessions over the SAME shared transport/limiter, metered into
+            the same per-leg usage meter as that leg's generation calls —
+            so every leg's ``campaign_done.llm_usage`` delta covers both
+            agents of the two-agent loop.
         timeout_s: per-workload timeout inside each leg; with
             ``isolation="process"`` it additionally bounds each *leg*,
             whose child process is killed on expiry.
+        leg_timeout_s: deadline for each whole leg in THREAD mode — the
+            graph scheduler's per-job timeout, stamping the same
+            ``job.error="timeout ..."`` the process path produces (the
+            leg's thread is abandoned rather than killed). This is how LLM
+            matrices — thread-mode only — keep a hung leg from wedging a
+            graph slot forever. Ignored under ``isolation="process"``
+            (there ``timeout_s`` already bounds the leg).
         isolation: ``"thread"`` (default) or ``"process"`` — forwarded to
             the graph scheduler (see :class:`repro.campaign.Scheduler`).
         log_path / resume: one JSONL event log shared by every leg
@@ -328,6 +344,14 @@ def run_transfer_matrix(workloads: Sequence[Workload],
             "transport, rate limiter, and usage meter are in-memory state a "
             "fork would split per child (and record/replay file writes "
             "would race); run LLM matrices in thread mode")
+    if analysis not in ("rule", "llm"):
+        raise ValueError(f"analysis must be 'rule' or 'llm', "
+                         f"got {analysis!r}")
+    if analysis == "llm" and backend != "llm":
+        raise ValueError(
+            "analysis='llm' requires backend='llm': the LLM analyzer rides "
+            "the LLM context's transport sessions; the template backend "
+            "has none to offer")
     if backend == "llm" and llm is None:
         from repro.llm import build_llm_context
         llm = build_llm_context()
@@ -337,7 +361,8 @@ def run_transfer_matrix(workloads: Sequence[Workload],
     matrix_workers = matrix_workers if matrix_workers is not None \
         else max_workers
     graph = Scheduler(max_workers=matrix_workers,
-                      timeout_s=timeout_s if isolation == "process" else None,
+                      timeout_s=(timeout_s if isolation == "process"
+                                 else leg_timeout_s),
                       isolation=isolation)
     if isolation != "process":
         work_sched = Scheduler(max_workers=leg_workers, timeout_s=timeout_s)
@@ -366,6 +391,15 @@ def run_transfer_matrix(workloads: Sequence[Workload],
 
     # Phase 1 — submit one base campaign per platform, all at once. Each
     # doubles as source AND cold leg of every pair that touches it.
+    def leg_analyzer_factory(plat, leg_usage):
+        # agent G for one leg: LLM analyzer sessions share the leg's usage
+        # meter with its generation sessions, so the leg's campaign_done
+        # delta journals BOTH agents' tokens; None keeps the rule table
+        if analysis != "llm":
+            return None
+        return llm.analyzer_factory(platform=plat, scheduler=work_sched,
+                                    usage=leg_usage)
+
     def base_fn(name: str):
         def run() -> Tuple[CampaignResult, Dict, Dict]:
             plat = resolve_platform(name)
@@ -382,7 +416,9 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                 workloads,
                 dataclasses.replace(base, platform=plat.name,
                                     use_reference=False, transfer_from=None),
-                agent_factory=factory, cache=leg_cache(), usage=leg_usage,
+                agent_factory=factory,
+                analyzer_factory=leg_analyzer_factory(plat, leg_usage),
+                cache=leg_cache(), usage=leg_usage,
                 **common)
             return (result, harvest_hints(result),
                     reference_sources(result, plat.name))
@@ -425,7 +461,9 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                 workloads,
                 dataclasses.replace(base, platform=dst_plat.name,
                                     use_reference=True, transfer_from=src),
-                agent_factory=factory, cache=leg_cache(), usage=leg_usage,
+                agent_factory=factory,
+                analyzer_factory=leg_analyzer_factory(dst_plat, leg_usage),
+                cache=leg_cache(), usage=leg_usage,
                 **common)
         return run
 
@@ -468,8 +506,10 @@ def run_transfer_matrix(workloads: Sequence[Workload],
     telemetry = {
         "matrix_workers": matrix_workers,
         "leg_workers": leg_workers,
+        "leg_timeout_s": leg_timeout_s,
         "isolation": isolation,
         "backend": backend,
+        "analysis": analysis,
         "llm_usage": llm.usage.snapshot() if llm is not None else None,
         "peak_concurrent_legs": graph.telemetry()["peak_concurrent"],
         "jobs": {job.name: {"started_at": job.started_at,

@@ -35,7 +35,11 @@ Verification time is dominated by jax trace/compile/execute, which release
 the GIL, and candidate programs close over unpicklable jax callables — so
 threads are the right default substrate. The trade-off: a timed-out job's
 thread cannot be force-killed; it is abandoned (it dies with the process),
-its slot permanently occupied, which the result's error documents. A job
+its slot permanently occupied, which the result's error documents. The
+deadline itself is enforced by a per-job watchdog timer, so a hung job
+resolves (``error="timeout ..."``, done set) at ``timeout_s`` even when no
+waiter or dependent happens to be observing it — LLM matrix legs, which
+are thread-mode only, rely on this to never wedge a graph slot forever. A job
 starved of a slot because the whole pool is wedged on hung jobs is
 cancelled (it never runs) and reported as such; a job still waiting on its
 ``after`` dependencies is *not* starved and never cancelled this way.
@@ -267,6 +271,7 @@ class Scheduler:
             self._slots.release()
             return
         self._local.holds_slot = True
+        watchdog: Optional[threading.Timer] = None
         try:
             with job._lock:
                 if job.cancelled:
@@ -275,6 +280,18 @@ class Scheduler:
             with self._meter_lock:
                 self._running += 1
                 self._peak = max(self._peak, self._running)
+            if self.timeout_s is not None and self.isolation != "process":
+                # thread-mode deadline even when NOBODY is observing the
+                # job: a waiter-side check alone (``_await``/dependency
+                # polls) leaves a fire-and-wait-later job hanging its
+                # waiter until it happens to look. The watchdog stamps the
+                # same ``timeout ... abandoned`` error the observers do, so
+                # e.g. a matrix leg wedged on one graph job resolves at the
+                # deadline no matter how it is awaited.
+                watchdog = threading.Timer(self.timeout_s,
+                                           self._flag_timeout, args=(job,))
+                watchdog.daemon = True
+                watchdog.start()
             try:
                 if self.isolation == "process":
                     job.value = self._run_in_child(job)
@@ -283,13 +300,21 @@ class Scheduler:
             except BaseException as exc:  # noqa: BLE001 — isolate
                 job.error = f"{type(exc).__name__}: {exc}"
             now = self._progress["t"] = time.perf_counter()
-            job.duration_s = now - job.started_at
-            job.finished_at = now
             with self._meter_lock:
                 self._running -= 1
                 self._completed += 1
+            with job._lock:
+                if job.done.is_set():
+                    # the watchdog (or an observer) already resolved this
+                    # job as timed out; keep that verdict — the late value
+                    # must not resurrect a job every waiter saw fail
+                    return
+                job.duration_s = now - job.started_at
+                job.finished_at = now
             job.done.set()
         finally:
+            if watchdog is not None:
+                watchdog.cancel()
             self._local.holds_slot = False
             self._slots.release()
 

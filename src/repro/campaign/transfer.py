@@ -210,6 +210,7 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
                        resume: bool = True,
                        scheduler: Optional[Scheduler] = None,
                        backend: str = "template",
+                       analysis: str = "rule",
                        llm=None) -> TransferSweepResult:
     """Run the §6.2 transfer experiment between two registered platforms.
 
@@ -233,6 +234,12 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
             ``llm``, and the warm leg injects the source campaign's
             *rendered references* (``LLMBackend.reference_sources``)
             instead of structured hints.
+        analysis: ``"rule"`` (deterministic rule-table agent G, default) or
+            ``"llm"`` (requires ``backend="llm"``): every leg then analyzes
+            profiles through :class:`repro.llm.LLMAnalyzer` sessions over
+            the same shared transport — analysis tokens land in the same
+            usage meter (and ``campaign_done.llm_usage`` deltas) as
+            generation tokens.
         llm: a :class:`repro.llm.LLMContext` (transport + rate limiter +
             usage meter) when ``backend="llm"``; a MockTransport-backed
             context is built when omitted.
@@ -253,6 +260,14 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
     if backend not in ("template", "llm"):
         raise ValueError(f"backend must be 'template' or 'llm', "
                          f"got {backend!r}")
+    if analysis not in ("rule", "llm"):
+        raise ValueError(f"analysis must be 'rule' or 'llm', "
+                         f"got {analysis!r}")
+    if analysis == "llm" and backend != "llm":
+        raise ValueError(
+            "analysis='llm' requires backend='llm': the LLM analyzer rides "
+            "the LLM context's transport sessions; the template backend "
+            "has none to offer")
     if backend == "llm" and llm is None:
         from repro.llm import build_llm_context
         llm = build_llm_context()
@@ -276,11 +291,21 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
                 platform=p, reference_hints=h)
         return None                     # run_campaign's platform default
 
+    def leg_analyzer(platform):
+        """Per-leg agent-G factory: LLM analyzer sessions over the shared
+        transport (metered into the same ``llm.usage`` as generation), or
+        None for the default rule table on the leg's platform."""
+        if analysis == "llm":
+            return llm.analyzer_factory(platform=platform,
+                                        scheduler=scheduler)
+        return None
+
     # Leg 1: source-platform campaign (the reference-producing run).
     source = run_campaign(
         workloads,
         dataclasses.replace(base, platform=src.name, transfer_from=None),
-        agent_factory=leg_factory(src), **common)
+        agent_factory=leg_factory(src), analyzer_factory=leg_analyzer(src),
+        **common)
     hints = harvest_hints(source)
     references = reference_sources(source, src.name)
 
@@ -289,7 +314,8 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
         workloads,
         dataclasses.replace(base, platform=dst.name, use_reference=False,
                             transfer_from=None),
-        agent_factory=leg_factory(dst), **common)
+        agent_factory=leg_factory(dst), analyzer_factory=leg_analyzer(dst),
+        **common)
 
     # Leg 3: warm target run — the source campaign's harvest injected
     # through the agent's reference path: structured strategy hints for the
@@ -302,7 +328,7 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
         dataclasses.replace(base, platform=dst.name, use_reference=True,
                             transfer_from=src.name),
         agent_factory=leg_factory(dst, references=references, hints=hints),
-        **common)
+        analyzer_factory=leg_analyzer(dst), **common)
 
     return TransferSweepResult(
         from_platform=src.name, to_platform=dst.name, source=source,

@@ -24,10 +24,18 @@ from repro.platforms import PlatformLike, resolve_platform
 
 @dataclasses.dataclass
 class Recommendation:
-    """One actionable optimization (the paper prompts G for exactly one)."""
+    """One actionable optimization (the paper prompts G for exactly one).
+
+    ``source`` names the analyzer that produced it — ``"rule"`` for the
+    deterministic rule table, ``"llm"`` for a parsed LLM analysis reply
+    (:class:`repro.llm.analyzer.LLMAnalyzer`). It is journaled on every
+    iteration event, so a campaign log shows which agent drove each
+    optimization pass.
+    """
     text: str                       # human/LLM readable
     param: Optional[str] = None     # structured action for the search backend
     value: Any = None
+    source: str = "rule"            # which analyzer produced it
 
     def apply(self, cand: Candidate) -> Candidate:
         if self.param is None or self.param not in SPACES.get(cand.op, {}):
@@ -108,8 +116,12 @@ class RuleBasedAnalyzer:
                           "output tiles."),
                     param="block_k", value=target)
 
-        # Rule 4: attention kv tile growth reduces K/V re-streaming.
-        if op == "attention" and "block_k" in params:
+        # Rule 4: attention kv tile growth reduces K/V re-streaming. Guard
+        # on the *space* too, not just the candidate's params: a profile
+        # whose platform-legal space carries no block_k axis (foreign
+        # profile, custom platform) must fall through to the roofline
+        # verdict, not KeyError.
+        if op == "attention" and "block_k" in params and "block_k" in space:
             bigger = [c for c in space["block_k"] if c > params["block_k"]]
             if bigger:
                 return Recommendation(

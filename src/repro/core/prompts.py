@@ -33,9 +33,17 @@ declarative tiling the performance model should score —
 
 ``ANALYSIS_TEMPLATE`` is agent G's side of the conversation: it receives
 the verification profile JSON (roofline terms, tiling params, collective
-summary — all platform-stamped by ``verify``) and must answer with ONE
-actionable parameter recommendation, mirroring
-``analysis.RuleBasedAnalyzer``'s single-recommendation contract.
+summary — all platform-stamped by ``verify``) plus the platform-legal
+parameter space, and must answer with ONE actionable parameter
+recommendation, mirroring ``analysis.RuleBasedAnalyzer``'s
+single-recommendation contract. The reply contract is three labelled
+lines (``RECOMMENDATION:`` / ``PARAM:`` / ``VALUE:``) so the reply is
+machine-checkable: :func:`repro.llm.analyzer.parse_recommendation` turns
+it into a structured :class:`repro.core.analysis.Recommendation`, and the
+session layer re-prompts replies missing the ``RECOMMENDATION:`` line the
+same way it re-prompts fence-less synthesis completions. The profile is
+embedded as a fenced ``json`` block so offline oracles
+(``MockTransport``'s analysis branch) can recover it verbatim.
 
 Prompt drift is guarded by golden snapshots: ``tests/test_prompts_golden.py``
 renders this template for every registered platform and diffs against
@@ -86,18 +94,61 @@ Fix the error if any; otherwise improve performance guided by:
 {recommendation}
 """
 
+# Every analysis prompt contains this line verbatim (the {accelerator}
+# field renders elsewhere), so transports can recognize an agent-G turn
+# without parsing: MockTransport routes it to its deterministic analysis
+# oracle. Re-prompts quote the original prompt, so the marker survives them.
+ANALYSIS_MARKER = "the performance-analysis agent of a two-agent"
+
 ANALYSIS_TEMPLATE = """\
-You are a TPU performance engineer. Below are profiling artifacts for a
-kernel candidate: the roofline terms (compute / HBM / interconnect seconds),
-the tiling parameters, and the optimized-HLO collective summary.
+You are a {accelerator} performance engineer acting as
+the performance-analysis agent of a two-agent kernel-synthesis loop.
+Below is the verification profile of a CORRECT kernel candidate: the
+roofline terms (modeled kernel seconds against the XLA baseline), its
+tiling parameters, and the platform the profile was stamped against.
 
-Profile:
+```json
 {profile_json}
+```
 
-Identify the SINGLE change most likely to improve performance, and reply
-with one actionable recommendation (one sentence, name the parameter and
-target value).
+The platform-legal parameter space for this op — any PARAM you name must
+be one of these keys, and a numeric VALUE one of that key's choices:
+
+{space_json}
+
+Identify the SINGLE change most likely to improve performance (the loop
+applies exactly one recommendation per iteration). Reply with exactly
+three lines:
+
+RECOMMENDATION: <one sentence naming the parameter and target value>
+PARAM: <parameter name from the space above, or none>
+VALUE: <target value as a JSON literal, or none>
 """
+
+
+def is_analysis_prompt(prompt: str) -> bool:
+    """True when ``prompt`` is (or re-prompts) an agent-G analysis turn —
+    judged by :data:`ANALYSIS_MARKER`, which every rendered
+    ``ANALYSIS_TEMPLATE`` contains verbatim."""
+    return ANALYSIS_MARKER in prompt
+
+
+def render_analysis(accelerator: str, profile: dict,
+                    space: dict | None = None) -> str:
+    """Assemble one agent-G analysis prompt (§3.2).
+
+    ``profile`` is the verification profile dict ``verify`` stamps on a
+    CORRECT result (op, platform, params, shapes, modeled times, flops);
+    ``space`` the platform-legal parameter space for the profile's op
+    (``candidates.space_for``). Both render as deterministic JSON
+    (sorted keys), so identical inputs produce byte-identical prompts —
+    what record/replay sessions key on."""
+    import json
+    return ANALYSIS_TEMPLATE.format(
+        accelerator=accelerator,
+        profile_json=json.dumps(profile, indent=2, sort_keys=True,
+                                default=str),
+        space_json=json.dumps(space or {}, sort_keys=True, default=str))
 
 
 def render_synthesis(accelerator: str, example_src: str, workload_src: str,

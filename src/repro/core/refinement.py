@@ -32,6 +32,10 @@ class IterationLog:
     recommendation: Optional[str] = None
     candidate: Optional[cand_mod.Candidate] = None
     seed: Optional[int] = None       # verification input seed (None: reused)
+    # which analyzer produced `recommendation` ("rule" | "llm"; None when
+    # no recommendation was made this iteration) — journaled per event so
+    # logs show which agent drove each optimization pass
+    recommendation_source: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -135,16 +139,23 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
                         cache=cache, platform=platform)
         if key is not None:
             seen[key] = result
-        rec_text = None
+        rec_text = rec_source = None
         if result.correct and cfg.use_profiling and not cfg.single_shot:
             rec = analyzer.analyze(result.profile)
             rec_text = rec.text
-        elif result.correct:
+            rec_source = getattr(rec, "source", None)
+        else:
+            # no profiled CORRECT result this iteration -> no live
+            # recommendation. Clearing on *incorrect* results matters: a
+            # candidate that regresses after a correct iteration must not
+            # leak that iteration's optimization advice into the next
+            # functional-phase prompt alongside the failure feedback.
             rec = None
         record(IterationLog(i, phase,
                             gen.candidate.describe() if gen.candidate
                             else "llm-candidate", result, rec_text,
-                            candidate=gen.candidate, seed=cfg.seed + i))
+                            candidate=gen.candidate, seed=cfg.seed + i,
+                            recommendation_source=rec_source))
         if result.correct and (best is None or
                                (result.model_time_s or 1e9) <
                                (best.model_time_s or 1e9)):

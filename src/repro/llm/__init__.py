@@ -7,12 +7,18 @@ env-configured :class:`HTTPTransport`), a shared request/token
 :class:`RateLimiter`, and the per-worker :class:`LLMSession` /
 :class:`LLMContext` layer that retries, re-prompts malformed completions,
 yields scheduler slots while throttled, and meters usage into the campaign
-event log.
+event log — plus :class:`LLMAnalyzer`, the LLM-backed performance-analysis
+agent G (paper §3.2) that rides the same session stack for its analysis
+calls.
 
 Import direction: ``repro.llm`` imports ``repro.core`` (never the other way
 round), and ``repro.campaign`` imports ``repro.llm`` — the campaign layer
 is the only caller that wires sessions into worker pools.
 """
+from repro.llm.analyzer import (  # noqa: F401
+    ANALYSIS_REPROMPT, LLMAnalyzer, analysis_reply_reason,
+    parse_recommendation,
+)
 from repro.llm.limiter import RateLimiter  # noqa: F401
 from repro.llm.session import (  # noqa: F401
     LLMContext, LLMSession, UsageMeter, build_llm_context, format_usage,
@@ -20,6 +26,6 @@ from repro.llm.session import (  # noqa: F401
 )
 from repro.llm.transport import (  # noqa: F401
     Completion, HTTPTransport, MockTransport, RateLimitError, ReplayMissError,
-    ReplayTransport, Transport, TransportError, default_mock_reply,
-    estimate_tokens, prompt_key,
+    ReplayTransport, Transport, TransportError, default_mock_analysis_reply,
+    default_mock_reply, estimate_tokens, prompt_key,
 )

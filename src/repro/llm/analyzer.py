@@ -1,0 +1,164 @@
+"""LLM-backed performance-analysis agent G (paper §3.2).
+
+The paper's architecture is TWO collaborating agents: generation (F) and a
+performance-analysis agent (G) that interprets profiling data and distills
+it into ONE actionable recommendation per iteration. ``RuleBasedAnalyzer``
+(``repro.core.analysis``) is the offline deterministic G; this module is
+the production one: :class:`LLMAnalyzer` renders the candidate's
+verification profile into ``ANALYSIS_TEMPLATE``
+(``repro.core.prompts.render_analysis``), calls an
+:class:`repro.llm.session.LLMSession` — so rate limiting, retry/backoff,
+record/replay, and usage accounting apply to analysis calls exactly as to
+generation calls — and parses the structured three-line reply into the
+same :class:`repro.core.analysis.Recommendation` the refinement loop
+already consumes.
+
+Failure containment, in order:
+
+* a reply missing its ``RECOMMENDATION:`` line is re-prompted by the
+  session (:func:`analysis_reply_reason` is the session's ``reply_check``,
+  :data:`ANALYSIS_REPROMPT` restates the contract), metered as a
+  ``reprompts`` hit like any malformed generation;
+* a reply still unparseable after the session's retries — or a dead
+  transport — falls back to the rule table
+  (:class:`repro.core.analysis.RuleBasedAnalyzer`), so a campaign never
+  dies on a bad analysis turn: ``analyze`` never raises;
+* a parsed ``PARAM``/``VALUE`` outside the platform-legal space is dropped
+  to a text-only recommendation (the prose still reaches the next prompt;
+  the structured action would have been rejected by the search backend
+  anyway).
+
+Recommendations parsed from an LLM reply carry ``source="llm"``; fallback
+recommendations keep the rule table's ``source="rule"`` — the refinement
+loop journals the source per iteration event, so the campaign log shows
+which agent drove each optimization pass.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.analysis import Recommendation, RuleBasedAnalyzer
+from repro.core.candidates import SPACES, space_for
+from repro.core.prompts import render_analysis
+from repro.platforms import PlatformLike, resolve_platform
+
+_REC_RE = re.compile(r"^\s*RECOMMENDATION:\s*(?P<text>.+?)\s*$", re.M)
+_PARAM_RE = re.compile(r"^\s*PARAM:\s*(?P<param>\S+)\s*$", re.M)
+_VALUE_RE = re.compile(r"^\s*VALUE:\s*(?P<value>.+?)\s*$", re.M)
+
+_NONE_WORDS = ("none", "null", "-", "n/a")
+
+# The analysis reply contract restated on a re-prompt (the analysis
+# session's counterpart of session.CODE_REPROMPT).
+ANALYSIS_REPROMPT = (
+    "Reply again with exactly three lines:\n\n"
+    "RECOMMENDATION: <one sentence naming the parameter and target value>\n"
+    "PARAM: <parameter name, or none>\n"
+    "VALUE: <target value as a JSON literal, or none>")
+
+
+def analysis_reply_reason(text: str) -> Optional[str]:
+    """Why an analysis reply is unusable, or None when it parses — the
+    ``LLMSession.reply_check`` for analysis sessions, mirroring how
+    generation sessions judge completions by their code block."""
+    if _REC_RE.search(text or ""):
+        return None
+    return "it contained no `RECOMMENDATION:` line"
+
+
+def parse_recommendation(text: str, *, op: Optional[str] = None,
+                         platform: PlatformLike = None
+                         ) -> Optional[Recommendation]:
+    """Parse one three-line analysis reply into a
+    :class:`Recommendation` (``source="llm"``), or None when the reply has
+    no ``RECOMMENDATION:`` line at all.
+
+    ``PARAM``/``VALUE`` are validated against the platform-legal space for
+    ``op``: an unknown parameter, or a value outside its choices, strips
+    the structured action (param/value -> None) while keeping the prose —
+    an illegal action would be silently ignored downstream
+    (``Recommendation.apply`` guards space membership), so dropping it
+    here keeps the journaled recommendation honest about what can apply.
+    ``VALUE`` is decoded as a JSON literal (``128``, ``true``) with a
+    raw-string fallback.
+    """
+    m = _REC_RE.search(text or "")
+    if m is None:
+        return None
+    param: Optional[str] = None
+    value: Any = None
+    pm = _PARAM_RE.search(text)
+    if pm is not None:
+        raw = pm.group("param").strip("`")
+        if raw.lower() not in _NONE_WORDS:
+            param = raw
+    vm = _VALUE_RE.search(text)
+    if param is not None and vm is not None:
+        raw = vm.group("value").strip().strip("`")
+        if raw.lower() in _NONE_WORDS:
+            param = None
+        else:
+            try:
+                value = json.loads(raw)
+            except json.JSONDecodeError:
+                value = raw
+    elif param is not None:             # PARAM without a VALUE line
+        param = None
+    if param is not None:
+        space = space_for(op, platform) if op in SPACES else {}
+        choices = space.get(param)
+        if choices is None or value not in list(choices):
+            param, value = None, None
+    return Recommendation(text=m.group("text"), param=param, value=value,
+                          source="llm")
+
+
+class LLMAnalyzer:
+    """Agent G over an LLM session: profile -> prompt -> completion ->
+    :class:`Recommendation`.
+
+    Plugs in wherever ``RuleBasedAnalyzer`` does (``run_workload``'s
+    ``analyzer=``, ``Campaign(analyzer_factory=...)``); construct one per
+    worker via :meth:`repro.llm.LLMContext.analyzer_factory` so sessions
+    are never shared across threads.
+
+    ``session`` is the completion channel — any ``prompt -> str`` callable;
+    production campaigns pass an :class:`repro.llm.LLMSession` built with
+    :func:`analysis_reply_reason` as its reply check, so malformed analysis
+    replies are re-prompted inside the session with full accounting.
+    ``fallback`` (default: the rule table on the same platform) answers
+    when the session fails or the final reply never parses — ``analyze``
+    never raises.
+    """
+
+    def __init__(self, session: Callable[[str], str],
+                 platform: PlatformLike = None,
+                 fallback: Optional[Any] = None) -> None:
+        self.session = session
+        self.platform = resolve_platform(platform)
+        self.fallback = fallback if fallback is not None \
+            else RuleBasedAnalyzer(platform=self.platform)
+        self.accelerator = self.platform.descriptor
+
+    def build_prompt(self, profile: Dict[str, Any]) -> str:
+        """Render the §3.2 analysis prompt for one verification profile:
+        the profile JSON plus the platform-legal space for its op."""
+        op = profile.get("op")
+        space = space_for(op, self.platform) if op in SPACES else {}
+        return render_analysis(self.accelerator, profile, space)
+
+    def analyze(self, profile: Dict[str, Any]) -> Recommendation:
+        """One analysis round trip; falls back to the rule table on any
+        transport failure or a reply that never parsed."""
+        prompt = self.build_prompt(profile)
+        try:
+            reply = self.session(prompt)
+        except Exception:  # noqa: BLE001 — exhausted retries, replay miss
+            return self.fallback.analyze(profile)
+        rec = parse_recommendation(reply, op=profile.get("op"),
+                                   platform=self.platform)
+        if rec is None:
+            return self.fallback.analyze(profile)
+        return rec

@@ -48,16 +48,24 @@ Your previous reply was not usable: {reason}.
 Previous reply:
 {reply}
 
-Reply again with exactly ONE complete fenced ```python code block defining
-`candidate(*inputs)`.
+{instruction}
 """
 
+# The generation agent's reply contract, restated on a re-prompt. Analysis
+# sessions substitute their own (repro.llm.analyzer.ANALYSIS_REPROMPT
+# restates the three-line RECOMMENDATION/PARAM/VALUE contract).
+CODE_REPROMPT = ("Reply again with exactly ONE complete fenced ```python "
+                 "code block defining\n`candidate(*inputs)`.")
 
-def reprompt(prompt: str, reply: str, reason: str) -> str:
+
+def reprompt(prompt: str, reply: str, reason: str,
+             instruction: str = CODE_REPROMPT) -> str:
     """The malformed-completion feedback prompt: the original task plus the
-    defect named and the bad reply quoted (paper §3.3's feedback shape,
-    applied one level below candidate verification)."""
-    return REPROMPT_TEMPLATE.format(prompt=prompt, reason=reason, reply=reply)
+    defect named, the bad reply quoted (paper §3.3's feedback shape,
+    applied one level below candidate verification), and the reply
+    contract restated (``instruction``)."""
+    return REPROMPT_TEMPLATE.format(prompt=prompt, reason=reason, reply=reply,
+                                    instruction=instruction)
 
 
 class UsageMeter:
@@ -149,6 +157,14 @@ class LLMSession:
     :class:`repro.campaign.Scheduler` — every sleep (pacing or backoff)
     happens inside ``scheduler.yielding()``, releasing the worker's slot to
     runnable jobs for the duration.
+
+    ``reply_check`` / ``reprompt_instruction`` make the re-prompt contract
+    pluggable: generation sessions keep the default (a complete fenced
+    code block, judged by the same ``CODE_BLOCK_RE`` the backend extracts
+    with), analysis sessions check for agent G's ``RECOMMENDATION:`` line
+    instead — both ride the same retry, pacing, and ``reprompts``
+    accounting. ``reply_check(text)`` returns why the reply is unusable,
+    or None when it is fine.
     """
 
     def __init__(self, transport: Transport, *,
@@ -158,6 +174,8 @@ class LLMSession:
                  max_attempts: int = 3,
                  backoff_s: float = 0.05,
                  completion_tokens_estimate: int = 512,
+                 reply_check: Optional[Callable[[str], Optional[str]]] = None,
+                 reprompt_instruction: str = CODE_REPROMPT,
                  sleep: Callable[[float], None] = time.sleep) -> None:
         if max_attempts < 1:
             raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
@@ -167,6 +185,8 @@ class LLMSession:
         self.usage = usage if usage is not None else UsageMeter()
         self.max_attempts = max_attempts
         self.backoff_s = backoff_s
+        self.reply_check = reply_check or self._malformed_reason
+        self.reprompt_instruction = reprompt_instruction
         # tpm reservations cover the reply too (the limiter's budget is
         # prompt + completion); the reply's size is unknown at reserve
         # time, so this flat estimate stands in — kernel code blocks run a
@@ -236,13 +256,14 @@ class LLMSession:
                 continue
             self.usage.add_completion(comp)
             text = comp.text
-            reason = self._malformed_reason(text)
+            reason = self.reply_check(text)
             if reason is None:
                 return text
             if attempt == self.max_attempts:
                 break
             self.usage.note_reprompt()
-            current = reprompt(prompt, text, reason)
+            current = reprompt(prompt, text, reason,
+                               instruction=self.reprompt_instruction)
         self.usage.note_failure()
         if text is not None:
             return text                 # malformed; backend names the failure
@@ -267,15 +288,22 @@ class LLMContext:
     backoff_s: float = 0.05
 
     def session(self, scheduler: Optional[Any] = None,
-                usage: Optional[UsageMeter] = None) -> LLMSession:
+                usage: Optional[UsageMeter] = None,
+                reply_check: Optional[Callable[[str], Optional[str]]] = None,
+                reprompt_instruction: Optional[str] = None) -> LLMSession:
         """A fresh session over the shared transport/limiter; accounting
         goes to ``usage`` (e.g. a per-leg meter parented on the fleet
-        meter) or the context's own meter."""
+        meter) or the context's own meter. ``reply_check`` /
+        ``reprompt_instruction`` override the re-prompt contract (analysis
+        sessions); the defaults are the generation code-block contract."""
         return LLMSession(self.transport, limiter=self.limiter,
                           scheduler=scheduler,
                           usage=usage if usage is not None else self.usage,
                           max_attempts=self.max_attempts,
-                          backoff_s=self.backoff_s)
+                          backoff_s=self.backoff_s,
+                          reply_check=reply_check,
+                          reprompt_instruction=(reprompt_instruction
+                                                or CODE_REPROMPT))
 
     def leg_meter(self) -> UsageMeter:
         """A fresh meter parented on the fleet meter: concurrent campaigns
@@ -299,6 +327,28 @@ class LLMContext:
         def build(platform=platform, refs=refs, usage=usage) -> LLMBackend:
             return LLMBackend(complete=self.session(scheduler, usage=usage),
                               platform=platform, reference_sources=refs)
+        return build
+
+    def analyzer_factory(self, platform=None, *,
+                         scheduler: Optional[Any] = None,
+                         usage: Optional[UsageMeter] = None
+                         ) -> Callable[[], Any]:
+        """A ``Campaign(analyzer_factory=...)``-shaped builder for agent G:
+        every call returns a new :class:`repro.llm.analyzer.LLMAnalyzer`
+        with its own session over the shared transport — so analysis calls
+        get rate limiting, retry/backoff, record/replay, and usage
+        accounting exactly like generation calls. The session's re-prompt
+        contract is the analysis three-line reply, and ``usage`` (e.g. a
+        per-leg meter) journals analysis tokens alongside generation
+        tokens."""
+        from repro.llm.analyzer import (ANALYSIS_REPROMPT, LLMAnalyzer,
+                                        analysis_reply_reason)
+
+        def build(platform=platform, usage=usage) -> Any:
+            session = self.session(scheduler, usage=usage,
+                                   reply_check=analysis_reply_reason,
+                                   reprompt_instruction=ANALYSIS_REPROMPT)
+            return LLMAnalyzer(session=session, platform=platform)
         return build
 
 

@@ -106,6 +106,10 @@ class Transport(Protocol):
 
 _WORKLOAD_NAME_RE = re.compile(r"workload named (\S+)")
 
+# The ```json fence ANALYSIS_TEMPLATE embeds the verification profile in —
+# what the analysis oracle recovers the profile from.
+_PROFILE_JSON_RE = re.compile(r"```json\n(.*?)```", re.S)
+
 # op → the candidate body the mock emits; mirrors the reference oracle on
 # the *kernel-level* inputs (what verification hands the callable), so the
 # default mock completion verifies CORRECT for every template op family.
@@ -138,17 +142,56 @@ def _op_for_workload_name(name: str) -> Optional[str]:
     return None
 
 
-def default_mock_reply(prompt: str) -> str:
-    """The MockTransport's canned synthesis reply for one prompt.
+def default_mock_analysis_reply(prompt: str) -> str:
+    """The MockTransport's deterministic agent-G oracle.
 
-    The workload is recovered from the ``Optimize the workload named ...``
-    prompt line and resolved to its op family
-    (:func:`_op_for_workload_name`); the reply's code block computes the
-    reference oracle on the kernel inputs, so it verifies CORRECT for
-    every template op family at every KernelBench level. Unknown ops get
-    an echo candidate that fails verification as a numeric mismatch —
-    deterministically exercising the feedback/repair path.
+    Recovers the verification profile from the analysis prompt's ``json``
+    fence (``ANALYSIS_TEMPLATE`` embeds it verbatim for exactly this
+    purpose), answers from the rule table on the profile's own platform
+    (:class:`repro.core.analysis.RuleBasedAnalyzer`), and formats the
+    three-line ``RECOMMENDATION:``/``PARAM:``/``VALUE:`` reply contract —
+    so an offline MockTransport campaign with ``--analysis llm`` exercises
+    the genuine two-agent data path (render → transport → parse → apply)
+    end to end. An unreadable profile degrades to a no-change
+    recommendation rather than an exception: a broken oracle must surface
+    as campaign results, not a crashed transport.
     """
+    from repro.core.analysis import RuleBasedAnalyzer
+    rec = None
+    m = _PROFILE_JSON_RE.search(prompt)
+    if m is not None:
+        try:
+            profile = json.loads(m.group(1))
+            rec = RuleBasedAnalyzer(
+                platform=profile.get("platform")).analyze(profile)
+        except Exception:  # noqa: BLE001 — torn fence, foreign profile shape
+            rec = None
+    if rec is None:
+        return ("RECOMMENDATION: the profile could not be read; keep the "
+                "current tiling unchanged.\nPARAM: none\nVALUE: none")
+    param = rec.param if rec.param is not None else "none"
+    value = json.dumps(rec.value) if rec.param is not None else "none"
+    return f"RECOMMENDATION: {rec.text}\nPARAM: {param}\nVALUE: {value}"
+
+
+def default_mock_reply(prompt: str) -> str:
+    """The MockTransport's canned reply for one prompt.
+
+    Agent-G analysis prompts (recognized by
+    :func:`repro.core.prompts.is_analysis_prompt`, whose marker survives
+    re-prompts) route to the deterministic rule-table oracle
+    (:func:`default_mock_analysis_reply`). Synthesis prompts recover the
+    workload from the ``Optimize the workload named ...`` line and resolve
+    it to its op family (:func:`_op_for_workload_name`); the reply's code
+    block computes the reference oracle on the kernel inputs, so it
+    verifies CORRECT for every template op family at every KernelBench
+    level. Unknown ops get an echo candidate that fails verification as a
+    numeric mismatch — deterministically exercising the feedback/repair
+    path.
+    """
+    from repro.core.prompts import is_analysis_prompt
+    if is_analysis_prompt(prompt):
+        return default_mock_analysis_reply(prompt)
     m = _WORKLOAD_NAME_RE.search(prompt)
     name = m.group(1) if m else ""
     op = _op_for_workload_name(name) if name else None
@@ -171,11 +214,13 @@ class MockTransport:
 
     * ``rate_limit_every=N`` — every Nth call raises :class:`RateLimitError`
       (with ``retry_after_s``) *instead of* producing a completion.
-    * ``malformed_every=N`` — every Nth completion has its code fences
-      stripped (no extractable code block).
-    * ``truncate_every=N`` — every Nth completion is cut mid-block (opening
-      fence present, closing fence missing), the classic truncated-stream
-      failure.
+    * ``malformed_every=N`` — every Nth completion breaks its reply
+      contract: synthesis replies lose their code fences (no extractable
+      block), analysis replies lose their ``RECOMMENDATION:`` label — each
+      agent's session re-prompts on its own contract.
+    * ``truncate_every=N`` — every Nth completion is cut mid-stream: a
+      synthesis reply mid-block (opening fence present, closing fence
+      missing), an analysis reply mid-label.
     * ``latency_s`` — sleep injected per successful call (via ``sleep``,
       injectable for tests).
 
@@ -210,11 +255,19 @@ class MockTransport:
         if self.latency_s:
             self._sleep(self.latency_s)
         text = self.completion_fn(prompt)
+        is_analysis = "RECOMMENDATION:" in text
         if self.malformed_every and n % self.malformed_every == 0:
-            text = text.replace("```python\n", "").replace("```", "")
+            if is_analysis:
+                # break the analysis contract, not the (absent) fences
+                text = text.replace("RECOMMENDATION:", "VERDICT:")
+            else:
+                text = text.replace("```python\n", "").replace("```", "")
         elif self.truncate_every and n % self.truncate_every == 0:
-            head, sep, _ = text.partition("```python\n")
-            text = head + sep + "def candidate(*inp"   # cut mid-stream
+            if is_analysis:
+                text = text.partition("RECOMMENDATION:")[0] + "RECOMMENDA"
+            else:
+                head, sep, _ = text.partition("```python\n")
+                text = head + sep + "def candidate(*inp"   # cut mid-stream
         return Completion(text, estimate_tokens(prompt),
                           estimate_tokens(text))
 

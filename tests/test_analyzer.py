@@ -1,0 +1,375 @@
+"""LLM performance-analysis agent G (DESIGN.md §9, paper §3.2): the mock
+analysis oracle, the three-line reply contract (parse, re-prompt,
+fallback), rule-table edge cases, stale-recommendation clearing in the
+refinement loop, the two-agent matrix/CLI surface, and the acceptance
+flow — a full two-agent campaign recorded then replayed offline."""
+import pytest
+
+from repro.campaign import EventLog, run_transfer_matrix
+from repro.core import LoopConfig
+from repro.core.analysis import Recommendation, RuleBasedAnalyzer
+from repro.core.candidates import space_for
+from repro.core.prompts import is_analysis_prompt, render_analysis
+from repro.core.refinement import run_workload
+from repro.core.synthesis import LLMBackend
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+from repro.llm import (ANALYSIS_REPROMPT, LLMAnalyzer, LLMSession,
+                       MockTransport, TransportError, UsageMeter,
+                       analysis_reply_reason, build_llm_context,
+                       default_mock_analysis_reply, default_mock_reply,
+                       parse_recommendation)
+from repro.platforms import resolve_platform
+
+
+def _tiny(name="T1/swish", op="swish", rows=8, lanes=512):
+    refs = {"swish": ref.swish, "softmax": ref.softmax}
+    return Workload(
+        name=name, level=1, op=op,
+        ref_fn=refs[op],
+        input_fn=lambda rng: {"x": randn(rng, (rows, lanes),
+                                         60.0 if op == "softmax" else 1.0)},
+        input_shapes={"x": (rows, lanes)})
+
+
+# One matmul profile the TPU alignment rule (Rule 1) fires on: block_m=64
+# underfills the 128x128 MXU, so the rule table recommends block_m=128.
+def _profile(platform="tpu_v5e"):
+    return {"op": "matmul", "platform": platform,
+            "params": {"block_m": 64, "block_n": 128, "block_k": 512},
+            "shapes": [[512, 512], [512, 512]],
+            "model_time_s": 1.0e-4, "baseline_time_s": 2.0e-4,
+            "flops": 2.68e8}
+
+
+def _analysis_prompt(platform="tpu_v5e"):
+    plat = resolve_platform(platform)
+    return render_analysis(plat.descriptor, _profile(platform),
+                           space_for("matmul", plat))
+
+
+# ---------------------------------------------------------------------------
+# MockTransport analysis oracle
+# ---------------------------------------------------------------------------
+
+
+def test_mock_analysis_oracle_round_trips_the_rule_table():
+    prompt = _analysis_prompt()
+    reply = default_mock_analysis_reply(prompt)
+    lines = reply.splitlines()
+    assert lines[0].startswith("RECOMMENDATION: ")
+    assert lines[1] == "PARAM: block_m"
+    assert lines[2] == "VALUE: 128"
+    rec = parse_recommendation(reply, op="matmul", platform="tpu_v5e")
+    assert (rec.param, rec.value, rec.source) == ("block_m", 128, "llm")
+    # same rule, same profile, different platform -> different verdict:
+    # the oracle answers from the profile's OWN platform
+    expected = RuleBasedAnalyzer(platform="metal_m2").analyze(
+        _profile("metal_m2"))
+    assert expected.text in default_mock_analysis_reply(
+        _analysis_prompt("metal_m2"))
+
+
+def test_mock_analysis_oracle_degrades_on_unreadable_profile():
+    torn = _analysis_prompt().replace("```json\n", "```json\n{{{garbage ")
+    reply = default_mock_analysis_reply(torn)
+    assert "could not be read" in reply
+    # still satisfies the reply contract — the session must not re-prompt
+    # a degraded oracle forever
+    assert analysis_reply_reason(reply) is None
+    rec = parse_recommendation(reply)
+    assert rec.param is None and rec.value is None
+
+
+def test_default_mock_reply_routes_analysis_prompts_to_the_oracle():
+    analysis = default_mock_reply(_analysis_prompt())
+    assert analysis.startswith("RECOMMENDATION:")
+    assert "```python" not in analysis
+    # a synthesis prompt still gets the oracle-echo code block
+    synthesis = default_mock_reply("Optimize the workload named T1/swish.")
+    assert "```python" in synthesis and "RECOMMENDATION:" not in synthesis
+    assert is_analysis_prompt(_analysis_prompt())
+    assert not is_analysis_prompt(synthesis)
+
+
+def test_mock_faults_break_the_analysis_contract_not_fences():
+    prompt = _analysis_prompt()
+    malformed = MockTransport(malformed_every=1).complete(prompt).text
+    assert "RECOMMENDATION:" not in malformed and "VERDICT:" in malformed
+    assert analysis_reply_reason(malformed) is not None
+    truncated = MockTransport(truncate_every=1).complete(prompt).text
+    assert truncated.endswith("RECOMMENDA")
+    assert analysis_reply_reason(truncated) is not None
+
+
+# ---------------------------------------------------------------------------
+# Reply parsing (the three-line contract)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_recommendation_contract():
+    assert parse_recommendation("no contract lines at all") is None
+    rec = parse_recommendation(
+        "RECOMMENDATION: keep the tiling.\nPARAM: none\nVALUE: none")
+    assert rec.param is None and rec.value is None and rec.source == "llm"
+    # legal param + JSON-literal value decode and survive validation
+    rec = parse_recommendation(
+        "RECOMMENDATION: widen block_m.\nPARAM: block_m\nVALUE: 256",
+        op="matmul", platform="tpu_v5e")
+    assert rec.param == "block_m" and rec.value == 256
+
+
+def test_parse_recommendation_strips_illegal_actions_to_text_only():
+    # unknown parameter for the op's platform-legal space
+    rec = parse_recommendation(
+        "RECOMMENDATION: raise warp occupancy.\nPARAM: warp_count\nVALUE: 4",
+        op="matmul", platform="tpu_v5e")
+    assert rec.param is None and rec.value is None
+    assert "warp occupancy" in rec.text
+    # legal parameter, value outside its choices
+    rec = parse_recommendation(
+        "RECOMMENDATION: widen block_m.\nPARAM: block_m\nVALUE: 999",
+        op="matmul", platform="tpu_v5e")
+    assert rec.param is None
+    # PARAM line without any VALUE line -> no structured action
+    rec = parse_recommendation(
+        "RECOMMENDATION: widen block_m.\nPARAM: block_m",
+        op="matmul", platform="tpu_v5e")
+    assert rec.param is None
+
+
+def test_analysis_reply_reason_names_the_missing_line():
+    assert analysis_reply_reason("RECOMMENDATION: fine.\nPARAM: none") is None
+    reason = analysis_reply_reason("VERDICT: looks great")
+    assert "RECOMMENDATION" in reason
+
+
+# ---------------------------------------------------------------------------
+# LLMAnalyzer: session contract, re-prompt, fallback
+# ---------------------------------------------------------------------------
+
+
+def test_analysis_session_reprompts_with_the_analysis_contract():
+    calls = []
+
+    def flaky(prompt):
+        calls.append(prompt)
+        return ("VERDICT: looks fine" if len(calls) == 1 else
+                "RECOMMENDATION: keep the tiling.\nPARAM: none\nVALUE: none")
+
+    usage = UsageMeter()
+    session = LLMSession(MockTransport(completion_fn=flaky), usage=usage,
+                         reply_check=analysis_reply_reason,
+                         reprompt_instruction=ANALYSIS_REPROMPT)
+    text = session.complete("Analysis prompt.")
+    assert text.startswith("RECOMMENDATION:")
+    assert usage.reprompts == 1 and usage.requests == 2
+    # the re-prompt names the defect and restates agent G's contract, not
+    # the generation agent's code-block contract
+    assert "no `RECOMMENDATION:` line" in calls[1]
+    assert "exactly three lines" in calls[1]
+    assert "fenced" not in calls[1]
+
+
+def test_llm_analyzer_falls_back_to_rule_table_when_replies_never_parse():
+    usage = UsageMeter()
+    session = LLMSession(
+        MockTransport(completion_fn=lambda p: "no contract here"),
+        usage=usage, max_attempts=2, reply_check=analysis_reply_reason,
+        reprompt_instruction=ANALYSIS_REPROMPT)
+    analyzer = LLMAnalyzer(session=session, platform="tpu_v5e")
+    rec = analyzer.analyze(_profile())
+    assert rec.source == "rule"
+    assert (rec.param, rec.value) == ("block_m", 128)
+    assert usage.requests == 2 and usage.failures == 1
+
+
+def test_llm_analyzer_survives_dead_transport():
+    def dead(prompt):
+        raise TransportError("wire cut")
+
+    analyzer = LLMAnalyzer(session=dead, platform="tpu_v5e")
+    rec = analyzer.analyze(_profile())
+    assert rec.source == "rule" and rec.param == "block_m"
+
+
+def test_llm_analyzer_prompt_embeds_profile_and_legal_space():
+    analyzer = LLMAnalyzer(session=lambda p: "", platform="tpu_v5e")
+    prompt = analyzer.build_prompt(_profile())
+    assert is_analysis_prompt(prompt)
+    assert '"block_m": 64' in prompt            # the profile json fence
+    assert "256" in prompt                      # a legal block_m choice
+    assert resolve_platform("tpu_v5e").descriptor in prompt
+
+
+def test_analyzer_factory_meters_into_the_shared_usage():
+    ctx = build_llm_context(transport=MockTransport())
+    analyzer = ctx.analyzer_factory(platform="tpu_v5e")()
+    rec = analyzer.analyze(_profile())
+    assert rec.source == "llm" and rec.param == "block_m"
+    snap = ctx.usage.snapshot()
+    assert snap["requests"] == 1 and snap["total_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Rule table: foreign-space regression (Rule 4 guard)
+# ---------------------------------------------------------------------------
+
+
+def test_attention_profile_with_foreign_space_falls_through_to_roofline(
+        monkeypatch):
+    """Regression: an attention profile whose platform-legal space carries
+    no block_k axis used to KeyError inside Rule 4 (params were guarded,
+    the space was not); it must fall through to the roofline verdict."""
+    import repro.core.analysis as analysis_mod
+    monkeypatch.setattr(analysis_mod, "space_for", lambda op, plat: {})
+    profile = {"op": "attention",
+               "params": {"block_q": 128, "block_k": 128},
+               "shapes": [[4, 1024, 64]],
+               "model_time_s": 1.0e-4, "flops": 1.0e6}
+    rec = analysis_mod.RuleBasedAnalyzer().analyze(profile)
+    assert rec.param is None and "roofline" in rec.text
+
+
+# ---------------------------------------------------------------------------
+# Refinement loop: stale recommendations + journaled source
+# ---------------------------------------------------------------------------
+
+_GOOD_REPLY = ("mirroring the oracle\n\n```python\n"
+               "from repro.kernels import ref as _ref\n\n\n"
+               "def candidate(*inputs):\n    return _ref.swish(*inputs)\n"
+               "```\n")
+_BAD_REPLY = ("regressed\n\n```python\n"
+              "def candidate(*inputs):\n    return inputs[0] * 0.0\n```\n")
+
+
+class _MagicAnalyzer:
+    """Stub agent G with an unmistakable token, so prompts can be asserted
+    to carry — or to have dropped — its advice."""
+
+    def analyze(self, profile):
+        return Recommendation(text="MAGIC_REC_TOKEN raise block_lanes.",
+                              source="llm")
+
+
+def test_regression_clears_stale_recommendation_from_the_next_prompt():
+    replies = [_GOOD_REPLY, _BAD_REPLY, _GOOD_REPLY]
+    prompts = []
+
+    def complete(prompt):
+        prompts.append(prompt)
+        return replies.pop(0)
+
+    out = run_workload(_tiny(),
+                       LoopConfig(num_iterations=3, use_profiling=True),
+                       agent=LLMBackend(complete=complete,
+                                        platform="tpu_v5e"),
+                       analyzer=_MagicAnalyzer())
+    assert [log.phase for log in out.logs] == \
+        ["functional", "optimization", "functional"]
+    # iteration 0 was CORRECT -> its recommendation reaches prompt 1 ...
+    assert "MAGIC_REC_TOKEN" in prompts[1]
+    # ... but the regression in iteration 1 clears it: the functional
+    # retry prompt carries the failure feedback, not stale tuning advice
+    assert "MAGIC_REC_TOKEN" not in prompts[2]
+    assert [log.recommendation_source for log in out.logs] == \
+        ["llm", None, "llm"]
+
+
+# ---------------------------------------------------------------------------
+# Matrix: two-agent legs + analysis validation
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_rejects_llm_analysis_without_llm_backend():
+    with pytest.raises(ValueError, match="analysis='llm' requires"):
+        run_transfer_matrix([_tiny()], ["metal_m2", "tpu_v5e"],
+                            analysis="llm")
+    with pytest.raises(ValueError, match="analysis must be"):
+        run_transfer_matrix([_tiny()], ["metal_m2", "tpu_v5e"],
+                            backend="llm", analysis="vibes")
+
+
+def test_matrix_two_agent_legs_meter_analysis_calls():
+    matrix = run_transfer_matrix(
+        [_tiny()], ["metal_m2", "tpu_v5e"],
+        loop=LoopConfig(num_iterations=2, use_profiling=True),
+        max_workers=4, backend="llm", analysis="llm")
+    assert matrix.n_failed == 0
+    tele = matrix.telemetry
+    assert tele["analysis"] == "llm"
+    # 4 legs x 2 generation iterations = 8 generation requests; agent G's
+    # analysis sessions bill on top of that through the same fleet meter
+    assert tele["llm_usage"]["requests"] > 8
+
+
+# ---------------------------------------------------------------------------
+# CLI: flags + the two-agent acceptance flow
+# ---------------------------------------------------------------------------
+
+
+def test_cli_analysis_llm_requires_llm_backend(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--analysis", "llm"])
+    assert "--backend llm" in capsys.readouterr().err
+
+
+def test_cli_leg_timeout_only_with_thread_mode_matrix(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--leg-timeout", "10"])
+    assert "--matrix" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        main(["--matrix", "--leg-timeout", "10", "--isolate"])
+    assert "--isolate" in capsys.readouterr().err or \
+        "thread-mode" in capsys.readouterr().err
+
+
+def test_cli_use_profiling_is_an_alias_of_profiling():
+    from repro.campaign.__main__ import build_parser
+    parser = build_parser()
+    assert parser.parse_args(["--use-profiling"]).profiling
+    assert parser.parse_args(["--profiling"]).profiling
+
+
+def test_cli_two_agent_record_then_replay(tmp_path, capsys, monkeypatch):
+    """The ISSUE acceptance flow: record a full two-agent campaign offline,
+    then ``--backend llm --analysis llm --use-profiling --replay SESSION``
+    reruns it with zero live calls, analysis tokens journaled in
+    ``campaign_done.llm_usage`` and at least one optimization-pass
+    iteration whose recommendation came from the LLM analyzer."""
+    from repro.campaign import __main__ as cli
+    wls = [_tiny()]
+    monkeypatch.setattr(cli.kernelbench, "suite",
+                        lambda level, small=True: wls)
+    session = tmp_path / "session.jsonl"
+    rec_log, rep_log = tmp_path / "rec.jsonl", tmp_path / "rep.jsonl"
+    base = ["--backend", "llm", "--analysis", "llm",
+            "--platform", "tpu_v5e", "--iters", "3"]
+    assert cli.main(base + ["--profiling", "--record", str(session),
+                            "--log", str(rec_log)]) == 0
+    out_rec = capsys.readouterr().out
+    assert "llm usage:" in out_rec
+
+    events = EventLog(rec_log).events()
+    iters = [e for e in events if e.get("event") == "iteration"]
+    assert any(e.get("phase") == "optimization" and
+               e.get("recommendation_source") == "llm" for e in iters)
+    done = [e for e in events if e.get("event") == "campaign_done"]
+    # generation alone is 3 requests; the analysis sessions bill on top
+    assert done and done[-1]["llm_usage"]["requests"] > 3
+
+    recorded = session.read_bytes()
+    assert cli.main(base + ["--use-profiling", "--replay", str(session),
+                            "--log", str(rep_log)]) == 0
+    out_rep = capsys.readouterr().out
+    assert "correct=1" in out_rep
+    # replay mode never writes: an unchanged session file is the proof no
+    # live call was made and captured
+    assert session.read_bytes() == recorded
+    rep_iters = [e for e in EventLog(rep_log).events()
+                 if e.get("event") == "iteration"]
+    assert any(e.get("recommendation_source") == "llm" for e in rep_iters)
+    assert out_rec.split("campaign report")[1] == \
+        out_rep.split("campaign report")[1]

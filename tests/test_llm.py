@@ -2,6 +2,7 @@
 (mock faults, record/replay sessions, env-stub HTTP), rate-limiter pacing,
 session retry/re-prompt/accounting, scheduler slot-yield while throttled,
 campaign usage journaling, and the LLM legs of the transfer matrix/CLI."""
+import http.server
 import json
 import threading
 import time
@@ -184,6 +185,121 @@ def test_http_transport_payload_extraction():
         {"choices": [{"message": {"content": "c"}}]}) == "c"
     with pytest.raises(TransportError, match="payload shape"):
         HTTPTransport._extract_text({"weird": 1})
+
+
+# ---------------------------------------------------------------------------
+# HTTPTransport against a real (local, stdlib) HTTP server
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedHTTPHandler(http.server.BaseHTTPRequestHandler):
+    """Pops one scripted behavior per POST from ``server.script`` and
+    records what the client actually sent in ``server.requests``."""
+
+    def do_POST(self):  # noqa: N802 — BaseHTTPRequestHandler API
+        length = int(self.headers.get("content-length", 0))
+        self.server.requests.append(
+            {"payload": json.loads(self.rfile.read(length)),
+             "authorization": self.headers.get("authorization")})
+        kind, *args = self.server.script.pop(0)
+        if kind == "ok":
+            body = json.dumps(
+                {"text": args[0],
+                 "usage": {"prompt_tokens": 7,
+                           "completion_tokens": 3}}).encode()
+        elif kind == "429":
+            self.send_response(429)
+            self.send_header("retry-after", str(args[0]))
+            self.send_header("content-length", "0")
+            self.end_headers()
+            return
+        elif kind == "cut":
+            # correct Content-Length, body cut mid-JSON: the stream reads
+            # cleanly but never parses
+            body = b'{"text": "trunc'
+        else:                           # "boom" — server-side failure
+            self.send_response(500, "kaput")
+            self.send_header("content-length", "0")
+            self.end_headers()
+            return
+        self.send_response(200)
+        self.send_header("content-type", "application/json")
+        self.send_header("content-length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):       # keep pytest output clean
+        pass
+
+
+@pytest.fixture
+def http_endpoint():
+    server = http.server.ThreadingHTTPServer(("127.0.0.1", 0),
+                                             _ScriptedHTTPHandler)
+    server.script = []
+    server.requests = []
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield server
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def _endpoint_url(server) -> str:
+    host, port = server.server_address
+    return f"http://{host}:{port}/v1/completions"
+
+
+def test_http_transport_round_trip_against_local_server(http_endpoint):
+    http_endpoint.script.append(("ok", "the completion"))
+    transport = HTTPTransport(_endpoint_url(http_endpoint),
+                              api_key="sk-test", model="m1")
+    comp = transport.complete("the prompt")
+    assert comp.text == "the completion"
+    # real usage counts from the payload, not estimates
+    assert (comp.prompt_tokens, comp.completion_tokens) == (7, 3)
+    sent = http_endpoint.requests[0]
+    assert sent["payload"]["prompt"] == "the prompt"
+    assert sent["payload"]["model"] == "m1"
+    assert sent["payload"]["max_tokens"] == transport.max_output_tokens
+    assert sent["authorization"] == "Bearer sk-test"
+
+
+def test_http_transport_maps_429_with_retry_after(http_endpoint):
+    http_endpoint.script.append(("429", "1.5"))
+    transport = HTTPTransport(_endpoint_url(http_endpoint))
+    with pytest.raises(RateLimitError) as exc:
+        transport.complete("p")
+    assert exc.value.retry_after_s == 1.5
+
+
+def test_http_transport_session_retries_real_429_then_succeeds(http_endpoint):
+    """The whole wire path: a genuine HTTP 429 absorbed by the session's
+    backoff, then the next request lands."""
+    reply = "```python\ndef candidate(*inputs):\n    return inputs[0]\n```"
+    http_endpoint.script.extend([("429", "0.01"), ("ok", reply)])
+    usage = UsageMeter()
+    session = LLMSession(HTTPTransport(_endpoint_url(http_endpoint)),
+                         usage=usage, sleep=lambda s: None)
+    assert session.complete("p") == reply
+    assert usage.rate_limit_hits == 1 and usage.requests == 1
+
+
+def test_http_transport_truncated_body_is_transport_error(http_endpoint):
+    http_endpoint.script.append(("cut",))
+    transport = HTTPTransport(_endpoint_url(http_endpoint))
+    with pytest.raises(TransportError, match="endpoint unreachable"):
+        transport.complete("p")
+
+
+def test_http_transport_500_is_a_plain_transport_error(http_endpoint):
+    http_endpoint.script.append(("boom",))
+    transport = HTTPTransport(_endpoint_url(http_endpoint))
+    with pytest.raises(TransportError, match="HTTP 500") as exc:
+        transport.complete("p")
+    assert not isinstance(exc.value, RateLimitError)
 
 
 # ---------------------------------------------------------------------------

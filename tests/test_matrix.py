@@ -366,6 +366,65 @@ def test_matrix_process_isolation_end_to_end(tmp_path):
     assert len(VerificationCache.open(path)) > 0
 
 
+def test_matrix_leg_timeout_resolves_hung_thread_mode_legs(monkeypatch):
+    """``leg_timeout_s``: a hung leg in THREAD mode resolves as a timeout
+    error at the deadline (the graph scheduler's per-job watchdog) instead
+    of wedging a graph slot — and the matrix completes around the holes."""
+    import repro.campaign.matrix as matrix_mod
+    release = threading.Event()
+
+    def hang(*args, **kwargs):
+        release.wait(10.0)
+        raise RuntimeError("leg finished after abandonment")
+
+    monkeypatch.setattr(matrix_mod, "run_campaign", hang)
+    try:
+        # 4 workers so the warm legs get slots even while the abandoned
+        # base threads still hold theirs
+        matrix = run_transfer_matrix(
+            [_tiny()], ["metal_m2", "tpu_v5e"],
+            loop=LoopConfig(num_iterations=1),
+            max_workers=4, leg_timeout_s=0.3)
+    finally:
+        release.set()
+    assert matrix.n_failed == len(matrix.legs) == 2
+    for leg in matrix.legs.values():
+        # warm legs either timed out themselves or report their base's
+        # timeout — both surface the deadline, never a hang
+        assert "timeout" in leg.error
+    assert matrix.telemetry["leg_timeout_s"] == 0.3
+    base_errors = [j["error"] for name, j in matrix.telemetry["jobs"].items()
+                   if name.startswith("base[")]
+    assert all(e and e.startswith("timeout") and "abandoned" in e
+               for e in base_errors)
+
+
+def test_matrix_leg_timeout_selects_the_graph_deadline_per_mode(monkeypatch):
+    """The graph scheduler's per-job deadline is ``leg_timeout_s`` in
+    thread mode but ``timeout_s`` under --isolate (there the child-killing
+    workload timeout already bounds each leg; ``leg_timeout_s`` must not
+    arm a second, thread-style deadline)."""
+    import repro.campaign.matrix as matrix_mod
+    graph_timeouts = []
+
+    class Abort(Exception):
+        pass
+
+    def spy_scheduler(*args, **kwargs):
+        # the graph scheduler is the first one constructed; capture its
+        # deadline and abort before any leg (or fork) happens
+        graph_timeouts.append(kwargs.get("timeout_s"))
+        raise Abort
+
+    monkeypatch.setattr(matrix_mod, "Scheduler", spy_scheduler)
+    for isolation, expected in (("thread", 0.5), ("process", 60.0)):
+        with pytest.raises(Abort):
+            matrix_mod.run_transfer_matrix(
+                [], ["metal_m2", "tpu_v5e"], isolation=isolation,
+                timeout_s=60.0, leg_timeout_s=0.5)
+    assert graph_timeouts == [0.5, 60.0]
+
+
 def test_iters_delta_is_paired_over_workloads_correct_in_both_legs():
     """A workload only the warm leg rescued must not drag the warm mean up
     and flip the delta's sign: the delta pairs workloads correct in BOTH

@@ -1,8 +1,9 @@
-"""Prompt-snapshot (golden) tests: the §3.2 synthesis prompt, rendered for
-every registered platform, is diffed against ``tests/goldens/`` so any
-prompt drift — template edits, platform descriptor/example/constraint
-changes — shows up as a reviewable full-prompt diff instead of silently
-shifting what production LLM sessions are asked.
+"""Prompt-snapshot (golden) tests: the §3.2 synthesis AND analysis prompts,
+rendered for every registered platform, are diffed against
+``tests/goldens/`` so any prompt drift — template edits, platform
+descriptor/example/constraint changes — shows up as a reviewable
+full-prompt diff instead of silently shifting what production LLM sessions
+(generation agent F or analysis agent G) are asked.
 
 Regenerate intentionally with::
 
@@ -14,6 +15,7 @@ from pathlib import Path
 import pytest
 
 from repro.core import prompts
+from repro.core.candidates import space_for
 from repro.platforms import available_platforms, resolve_platform
 
 GOLDEN_DIR = Path(__file__).parent / "goldens"
@@ -56,12 +58,62 @@ def test_synthesis_prompt_matches_golden(platform):
         "the diff")
 
 
+# Fixed analysis-prompt inputs: one verification profile (the shape
+# ``verify`` stamps on CORRECT results); only the platform descriptor and
+# the platform-legal space may vary across the analysis goldens.
+def analysis_profile(platform_name: str) -> dict:
+    return {"op": "matmul", "platform": platform_name,
+            "params": {"block_m": 64, "block_n": 128, "block_k": 512},
+            "shapes": [[512, 512], [512, 512]],
+            "model_time_s": 1.0e-4, "baseline_time_s": 2.0e-4,
+            "flops": 2.68e8}
+
+
+def render_analysis(platform_name: str) -> str:
+    plat = resolve_platform(platform_name)
+    return prompts.render_analysis(plat.descriptor,
+                                   analysis_profile(platform_name),
+                                   space_for("matmul", plat))
+
+
+@pytest.mark.parametrize("platform", available_platforms())
+def test_analysis_prompt_matches_golden(platform):
+    golden = GOLDEN_DIR / f"analysis_prompt_{platform}.txt"
+    rendered = render_analysis(platform)
+    if os.environ.get("UPDATE_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        golden.write_text(rendered)
+    assert golden.exists(), (
+        f"missing golden {golden}; generate with UPDATE_GOLDENS=1")
+    assert rendered == golden.read_text(), (
+        f"analysis prompt for {platform} drifted from {golden.name}; "
+        "if intentional, regenerate with UPDATE_GOLDENS=1 so review sees "
+        "the diff")
+
+
+def test_analysis_prompt_contract_fields_render_for_every_platform():
+    """Agent G's prompt contract: the marker transports route on, the
+    profile embedded as a recoverable json fence, the platform-legal
+    space, and the three-line reply contract."""
+    for name in available_platforms():
+        p = render_analysis(name)
+        assert prompts.is_analysis_prompt(p)
+        assert resolve_platform(name).descriptor in p
+        assert '"block_m": 64' in p                    # profile json fence
+        assert "```json" in p
+        for label in ("RECOMMENDATION:", "PARAM:", "VALUE:"):
+            assert label in p                          # reply contract
+
+
 def test_goldens_cover_exactly_the_registered_platforms():
     """A platform added without a golden (or a golden for a dropped
-    platform) fails here, keeping snapshots and registry in lock-step."""
-    have = {p.stem.replace("synthesis_prompt_", "")
-            for p in GOLDEN_DIR.glob("synthesis_prompt_*.txt")}
-    assert have == set(available_platforms())
+    platform) fails here, keeping snapshots and registry in lock-step.
+    Defined LAST so a fresh UPDATE_GOLDENS=1 bless run writes every
+    parametrized golden before coverage is judged."""
+    for kind in ("synthesis_prompt", "analysis_prompt"):
+        have = {p.stem.replace(f"{kind}_", "")
+                for p in GOLDEN_DIR.glob(f"{kind}_*.txt")}
+        assert have == set(available_platforms()), kind
 
 
 def test_prompt_contract_fields_render_for_every_platform():

@@ -217,6 +217,41 @@ def test_try_cancel_refuses_started_job():
 
 
 # ---------------------------------------------------------------------------
+# Thread-mode watchdog deadline
+# ---------------------------------------------------------------------------
+
+
+def test_thread_mode_watchdog_resolves_unobserved_hang():
+    """The per-job watchdog stamps the timeout even when NOBODY awaits the
+    job: a fire-and-wait-later pattern (LLM matrix legs) must see the job
+    resolve at the deadline, not whenever a waiter happens to look."""
+    sched = Scheduler(max_workers=1, timeout_s=0.3)
+    release = threading.Event()
+    job = sched.submit("hang", lambda: release.wait(10.0))
+    try:
+        # plain done.wait(), never sched.wait()/_await — only the watchdog
+        # can fire here
+        assert job.done.wait(timeout=5.0)
+        assert job.error is not None and job.error.startswith("timeout")
+        assert "abandoned" in job.error
+    finally:
+        release.set()
+
+
+def test_late_finish_does_not_resurrect_timed_out_job():
+    sched = Scheduler(max_workers=1, timeout_s=0.2)
+    release = threading.Event()
+    job = sched.submit("hang", lambda: release.wait(10.0) and "late value")
+    assert job.done.wait(timeout=5.0)
+    release.set()                       # let the abandoned worker finish
+    time.sleep(0.3)
+    res = sched.wait([job])[0]
+    assert not res.ok and "timeout" in res.error
+    # ... and the freed slot serves the next job normally
+    assert sched.wait([sched.submit("next", lambda: 7)])[0].value == 7
+
+
+# ---------------------------------------------------------------------------
 # Process isolation
 # ---------------------------------------------------------------------------
 

@@ -8,8 +8,11 @@ Fails (exit 1, one line per problem) when:
 * a public name exported by ``repro.campaign`` or ``repro.llm`` is missing
   from docs/api.md;
 * a ``python -m repro.campaign`` CLI flag (introspected from the live
-  argument parser, so new flags are covered automatically) is missing from
-  README.md or docs/api.md;
+  argument parser, so new flags are covered automatically — aliases like
+  ``--use-profiling`` included) is missing from README.md or docs/api.md;
+* an LLM-subsystem CLI flag (one whose parser help text mentions
+  ``--backend llm`` or ``LLM``) is additionally missing from
+  docs/llm_backends.md — the LLM guide must cover its own surface;
 * a fenced ``python`` block in docs/api.md or docs/llm_backends.md does
   not parse, or imports a module/name that no longer resolves against
   ``src/`` (the stale-docs guard: example code must track the API).
@@ -105,9 +108,19 @@ def main() -> int:
             problems.append(f"DESIGN.md: platform {name!r} never mentioned")
 
     from repro.campaign.__main__ import build_parser
-    flags = sorted({opt for action in build_parser()._actions
+    actions = [a for a in build_parser()._actions
+               if any(o.startswith("--") and o != "--help"
+                      for o in a.option_strings)]
+    flags = sorted({opt for action in actions
                     for opt in action.option_strings
-                    if opt.startswith("--") and opt != "--help"})
+                    if opt.startswith("--")})
+    # flags whose help text names the LLM subsystem must ALSO appear in
+    # docs/llm_backends.md — the LLM guide owns that surface
+    llm_flags = sorted({opt for action in actions
+                        for opt in action.option_strings
+                        if opt.startswith("--")
+                        and re.search(r"--backend llm|\bLLM\b",
+                                      action.help or "")})
     for flag in flags:
         # word-boundary match: documenting --matrix-workers must not count
         # as documenting --workers (or --matrix)
@@ -116,6 +129,10 @@ def main() -> int:
             if not pattern.search(text):
                 problems.append(
                     f"{doc_name}: campaign CLI flag {flag} undocumented")
+        if flag in llm_flags and not pattern.search(llm_doc):
+            problems.append(
+                f"docs/llm_backends.md: LLM-subsystem CLI flag {flag} "
+                "undocumented (its --help names the LLM backend)")
 
     public = [n for n in vars(campaign)
               if (not n.startswith("_") and n[0].isupper())
@@ -130,7 +147,10 @@ def main() -> int:
     llm_public = [n for n in vars(llm_mod)
                   if (not n.startswith("_") and n[0].isupper())
                   or n in ("build_llm_context", "format_usage",
-                           "estimate_tokens", "prompt_key")]
+                           "estimate_tokens", "prompt_key",
+                           "parse_recommendation", "analysis_reply_reason",
+                           "default_mock_reply",
+                           "default_mock_analysis_reply")]
     for name in sorted(set(llm_public)):
         if name not in api and name not in llm_doc:
             problems.append(f"docs: repro.llm.{name} undocumented in both "
@@ -148,7 +168,8 @@ def main() -> int:
         print(f"docs-consistency: OK ({n} platforms, "
               f"{len(set(public))} campaign exports, "
               f"{len(set(llm_public))} llm exports, "
-              f"{len(flags)} CLI flags, {n_blocks} doc code blocks)")
+              f"{len(flags)} CLI flags ({len(llm_flags)} llm-gated), "
+              f"{n_blocks} doc code blocks)")
     return 1 if problems else 0
 
 

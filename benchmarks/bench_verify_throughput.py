@@ -1,0 +1,210 @@
+"""Verification fast-path throughput: candidate-verifications/sec, cold vs
+warm (DESIGN.md §4).
+
+Both arms verify the IDENTICAL candidate list per workload — a refinement
+fan-out shape: the initial candidate, its best predicted mutations, and the
+top mutation's own neighborhood (which overlaps the first, as real mutation
+neighborhoods do).  The cold arm is the pre-fast-path pipeline: one
+``verify()`` per candidate, no caches — inputs regenerated, the reference
+oracle recomputed, and every candidate (duplicates included) re-lowered and
+re-compiled.  The warm arm sends the same list through ``verify_batch``
+with a shared :class:`WorkloadIOCache` + :class:`ExecutableCache`: inputs
+and oracle once per workload, duplicates deduped by content address before
+any work.
+
+Per-phase timings (``profile["phase_s"]``) from the warm arm are aggregated
+so the report shows where the remaining time goes.
+
+Standalone CLI (from the repo root)::
+
+  PYTHONPATH=src python -m benchmarks.bench_verify_throughput --smoke \
+      --json BENCH_verify.json          # CI fast lane (level 1 subset)
+  PYTHONPATH=src python -m benchmarks.bench_verify_throughput --matrix \
+      --json BENCH_verify.json          # + matrix smoke wall-clock arm
+
+``--matrix`` additionally runs the 2-platform transfer-matrix smoke twice —
+shared IO cache vs caches disabled — and reports the wall-clock win and the
+oracle-compute count (strictly below legs × workloads proves cross-leg
+sharing).
+
+Harness rows (``python benchmarks/run.py --only verify_throughput``):
+``verify_cold`` / ``verify_warm`` with verifications/sec and the speedup in
+the derived column.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from benchmarks.common import Row
+
+from repro.core import candidates as cand_mod
+from repro.core import kernelbench
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
+from repro.core.verification import verify, verify_batch
+
+# verifications per workload stay modest: interpret-mode compiles dominate
+# and CI boxes are small. smoke trims the workload list, not the shape.
+NEIGHBORHOOD = 4        # mutations taken per generation
+SEED = 1234
+
+
+def candidate_list(wl, platform=None) -> List[cand_mod.Candidate]:
+    """A refinement-fan-out-shaped candidate list: two overlapping mutation
+    neighborhoods around the initial candidate (duplicates kept — the batch
+    path is expected to dedupe them, the cold path to pay for them)."""
+    init = cand_mod.initial_candidate(wl.op, use_reference=True,
+                                      platform=platform)
+    gen1 = list(cand_mod.mutations(init, platform).values())[:NEIGHBORHOOD]
+    cands = [init] + gen1
+    if gen1:
+        gen2 = list(cand_mod.mutations(gen1[0], platform)
+                    .values())[:NEIGHBORHOOD]
+        cands += gen2               # overlaps gen1 (same single-param space)
+    return cands
+
+
+def _bench(workloads, platform=None) -> Dict:
+    sets = {wl.name: candidate_list(wl, platform) for wl in workloads}
+    n = sum(len(c) for c in sets.values())
+
+    # untimed warmup: first-touch jax/pallas machinery must not be charged
+    # to whichever arm happens to run first
+    wl0 = workloads[0]
+    verify(sets[wl0.name][0], wl0, seed=SEED, platform=platform)
+
+    t0 = time.perf_counter()
+    for wl in workloads:
+        for cand in sets[wl.name]:
+            verify(cand, wl, seed=SEED, platform=platform)
+    cold_s = time.perf_counter() - t0
+
+    io_cache, exe_cache = WorkloadIOCache(), ExecutableCache()
+    phase_totals: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    for wl in workloads:
+        results = verify_batch(sets[wl.name], wl, seed=SEED,
+                               platform=platform, io_cache=io_cache,
+                               exe_cache=exe_cache)
+        for r in results:
+            for k, v in ((r.profile or {}).get("phase_s") or {}).items():
+                phase_totals[k] = phase_totals.get(k, 0.0) + v
+    warm_s = time.perf_counter() - t0
+
+    return {
+        "n_workloads": len(workloads),
+        "n_candidates": n,
+        "cold_s": round(cold_s, 3),
+        "warm_s": round(warm_s, 3),
+        "cold_vps": round(n / cold_s, 2),
+        "warm_vps": round(n / warm_s, 2),
+        "speedup": round(cold_s / warm_s, 2),
+        "io_cache": io_cache.stats(),
+        "exe_cache": exe_cache.stats(),
+        "warm_phase_s": {k: round(v, 3)
+                         for k, v in sorted(phase_totals.items())},
+    }
+
+
+def _bench_matrix(small: bool) -> Dict:
+    """Matrix-smoke wall-clock arm: the 2-platform level-1 matrix with the
+    shared IO/executable caches vs with both disabled (``max_entries=0`` —
+    every lookup misses and nothing is stored)."""
+    from repro.campaign.matrix import run_transfer_matrix
+
+    workloads = kernelbench.suite(1, small=small)
+    platforms = ("tpu_v5e", "metal_m2")
+    arms = {}
+    for arm, (io_c, exe_c) in (
+            ("disabled", (WorkloadIOCache(max_entries=0),
+                          ExecutableCache(max_entries=0))),
+            ("shared", (WorkloadIOCache(), ExecutableCache()))):
+        t0 = time.perf_counter()
+        matrix = run_transfer_matrix(workloads, platforms, io_cache=io_c,
+                                     exe_cache=exe_c)
+        arms[arm] = {
+            "wall_s": round(time.perf_counter() - t0, 2),
+            "n_failed": matrix.n_failed,
+            "io_cache": io_c.stats(),
+            "exe_cache": exe_c.stats(),
+        }
+    n_legs = len(platforms) + len(platforms) * (len(platforms) - 1)
+    return {
+        "platforms": list(platforms),
+        "n_legs": n_legs,
+        "n_workloads": len(workloads),
+        "oracle_budget": n_legs * len(workloads),
+        "oracle_computes_shared": arms["shared"]["io_cache"][
+            "oracle_computes"],
+        "speedup": round(arms["disabled"]["wall_s"]
+                         / arms["shared"]["wall_s"], 2),
+        "arms": arms,
+    }
+
+
+def run(small: bool = True, smoke: bool = False, matrix: bool = False,
+        json_path=None) -> List[Row]:
+    workloads = kernelbench.suite(1, small=small)
+    if smoke:
+        workloads = workloads[:3]
+    report = _bench(workloads)
+    if matrix:
+        report["matrix"] = _bench_matrix(small)
+    if json_path:
+        payload = {"bench": "verify_throughput",
+                   "suite": "small" if small else "full",
+                   "smoke": smoke, **report}
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+    n = report["n_candidates"]
+    rows = [
+        ("verify_cold", report["cold_s"] / n * 1e6,
+         f"vps={report['cold_vps']};n={n}"),
+        ("verify_warm", report["warm_s"] / n * 1e6,
+         f"vps={report['warm_vps']};speedup={report['speedup']}x"),
+    ]
+    if matrix:
+        m = report["matrix"]
+        rows.append(("verify_matrix_smoke",
+                     m["arms"]["shared"]["wall_s"] * 1e6,
+                     f"speedup={m['speedup']}x;oracle="
+                     f"{m['oracle_computes_shared']}/{m['oracle_budget']}"))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="verification fast-path throughput (cold vs warm)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast-lane mode: first 3 level-1 workloads")
+    ap.add_argument("--matrix", action="store_true",
+                    help="also run the 2-platform matrix smoke with shared "
+                         "caches vs disabled and report the wall-clock win")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full report as JSON (e.g. "
+                         "BENCH_verify.json)")
+    ap.add_argument("--full-size", action="store_true",
+                    help="full-size workloads (slow on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    rows = run(small=not args.full_size, smoke=args.smoke,
+               matrix=args.matrix, json_path=args.json)
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}", flush=True)
+    warm = next(r for r in rows if r[0] == "verify_warm")
+    speedup = float(warm[2].split("speedup=")[1].rstrip("x"))
+    # the fast path must actually be fast: a regression below 1.5x warm
+    # throughput fails the bench (and the CI step running it)
+    if speedup < 1.5:
+        print(f"FAIL: warm/cold speedup {speedup} < 1.5", flush=True)
+        return 1
+    print(f"# ok: warm path {speedup}x cold", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_batch_sizes        Table 6 / §7.1 (batch-size generalization)
   bench_roofline           assignment §Roofline (reads experiments/dryrun)
   bench_kernels_wall       measured CPU wall-clock of reference ops
+  bench_verify_throughput  DESIGN.md §4 (verification fast path, cold/warm)
 
 Campaign runner (repro.campaign)
   The suite-sweep benches (fastp_levels, correctness, profiling_impact) run
@@ -28,7 +29,8 @@ import time
 from benchmarks import (bench_batch_sizes, bench_correctness,
                         bench_fastp_levels, bench_kernels_wall,
                         bench_profiling_impact, bench_roofline,
-                        bench_transfer, bench_transfer_matrix)
+                        bench_transfer, bench_transfer_matrix,
+                        bench_verify_throughput)
 from benchmarks.common import emit
 
 MODULES = {
@@ -40,6 +42,7 @@ MODULES = {
     "batch_sizes": bench_batch_sizes,
     "roofline": bench_roofline,
     "kernels_wall": bench_kernels_wall,
+    "verify_throughput": bench_verify_throughput,
 }
 
 

@@ -9,6 +9,9 @@ JSONL event log, and can resume an interrupted run from that log. See
 from repro.campaign.cache import (  # noqa: F401
     PersistentVerificationCache, VerificationCache,
 )
+from repro.core.evalio import (  # noqa: F401 — fast-path cache layers
+    ExecutableCache, WorkloadIOCache,
+)
 from repro.campaign.events import (  # noqa: F401
     EventLog, completed_workloads, iteration_event, result_from_dict,
     result_to_dict, warm_cache,

@@ -30,6 +30,7 @@ import sys
 from typing import List, Optional
 
 from repro.campaign.cache import VerificationCache, format_cache_stats
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
 from repro.campaign.events import EventLog
 from repro.campaign.report import (distinct_loop_configs, format_report,
                                    report_from_events)
@@ -63,6 +64,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "--use-profiling is an alias matching the "
                          "LoopConfig field name")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fanout", type=int, default=1, metavar="K",
+                    help="verify the agent's proposal plus the top K-1 "
+                         "predicted mutations per optimization iteration "
+                         "as one batch sharing inputs and the reference "
+                         "oracle (default: 1 = classic loop)")
     ap.add_argument("--platform", choices=available_platforms(),
                     default=DEFAULT_PLATFORM,
                     help="hardware target to synthesize for "
@@ -139,6 +145,19 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def _print_fastpath_stats(io_cache, exe_cache) -> None:
+    """The fast-path cache-effectiveness lines every CLI branch prints
+    under the verification-cache line (None = leg-local caches, e.g.
+    --isolate, nothing meaningful to print in the parent)."""
+    if io_cache is not None:
+        s = io_cache.stats()
+        print(f"io cache: {format_cache_stats(s)}, "
+              f"{s['oracle_computes']} oracle computes")
+    if exe_cache is not None:
+        print(f"executable cache: "
+              f"{format_cache_stats(exe_cache.stats())}")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     """CLI entry point; returns a process exit code (0 on success, 1 on
     empty --report-only logs or failed matrix legs, 2 on usage errors)."""
@@ -176,6 +195,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         ap.error("--leg-timeout only applies to thread-mode --matrix; with "
                  "--isolate, --timeout already bounds each leg (the child "
                  "process is killed on expiry)")
+    if args.fanout < 1:
+        ap.error(f"--fanout must be >= 1, got {args.fanout} (1 = the "
+                 "classic single-candidate loop)")
     if args.record and args.replay:
         ap.error("--record and --replay are mutually exclusive (a replayed "
                  "session makes no live calls to record)")
@@ -215,9 +237,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                       single_shot=args.single_shot,
                       use_reference=args.reference,
                       use_profiling=args.profiling, seed=args.seed,
-                      platform=args.platform)
+                      platform=args.platform, fanout=args.fanout)
     cache = (VerificationCache.open(args.cache_path)
              if args.cache_path else VerificationCache())
+    # fast-path caches (DESIGN.md §4), shared by every leg of whatever runs
+    # below (the matrix swaps them for per-leg instances under --isolate)
+    io_cache = WorkloadIOCache()
+    exe_cache = ExecutableCache()
 
     llm_ctx = None
     if args.backend == "llm":
@@ -243,7 +269,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             isolation="process" if args.isolate else "thread",
             timeout_s=args.timeout, leg_timeout_s=args.leg_timeout,
             log_path=args.log, resume=not args.no_resume,
-            backend=args.backend, analysis=args.analysis, llm=llm_ctx)
+            backend=args.backend, analysis=args.analysis, llm=llm_ctx,
+            io_cache=io_cache, exe_cache=exe_cache)
         tele = matrix.telemetry
         print(f"transfer matrix: {len(workloads)} workloads x "
               f"{len(matrix.legs)} ordered pairs over "
@@ -257,6 +284,7 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"wall {tele['wall_s']:.1f}s vs "
               f"{tele['serial_sum_s']:.1f}s serial leg-time")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
+        _print_fastpath_stats(matrix.io_cache, matrix.exe_cache)
         if tele.get("llm_usage"):
             from repro.llm import format_usage
             print(f"llm usage: {format_usage(tele['llm_usage'])}")
@@ -281,10 +309,11 @@ def main(argv: Optional[List[str]] = None) -> int:
             max_workers=args.workers, timeout_s=args.timeout,
             log_path=log_path, resume=not args.no_resume,
             backend=args.backend, analysis=args.analysis, llm=llm_ctx,
-            scheduler=sweep_sched)
+            scheduler=sweep_sched, io_cache=io_cache, exe_cache=exe_cache)
         print(f"transfer sweep: {len(workloads)} workloads x 3 legs "
               f"({args.backend} backend) -> {log_path}")
         print(f"verification cache: {format_cache_stats(cache.stats())}")
+        _print_fastpath_stats(io_cache, exe_cache)
         if llm_ctx is not None:
             from repro.llm import format_usage
             print(f"llm usage: {format_usage(llm_ctx.usage.snapshot())}")
@@ -306,9 +335,10 @@ def main(argv: Optional[List[str]] = None) -> int:
             analyzer_factory=(llm_ctx.analyzer_factory(
                 platform=args.platform, scheduler=sched)
                 if args.analysis == "llm" else None),
-            usage=llm_ctx.usage)
+            usage=llm_ctx.usage, io_cache=io_cache, exe_cache=exe_cache)
     else:
-        campaign = Campaign(workloads, cfg, cache=cache)
+        campaign = Campaign(workloads, cfg, cache=cache,
+                            io_cache=io_cache, exe_cache=exe_cache)
     result = campaign.run()
 
     done = sum(1 for r in result.runs if r.error is None and not r.skipped)
@@ -317,6 +347,7 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"{done} ran ok) -> {result.log_path}")
     print(f"verification cache: "
           f"{format_cache_stats(result.cache.stats())}")
+    _print_fastpath_stats(io_cache, exe_cache)
     if result.llm_usage is not None:
         from repro.llm import format_usage
         print(f"llm usage: {format_usage(result.llm_usage)}")

@@ -14,9 +14,12 @@ One JSON object per line. Event kinds:
                    the transfer matrix's non-saturating warm-vs-cold
                    signal) — resume skips these workloads
   workload_error   scheduler-isolated failure (exception or timeout)
-  campaign_done    end-of-run marker with the verification-cache stats and,
-                   for LLM-backed campaigns, ``llm_usage`` — THIS
-                   campaign's token/request delta of the shared
+  campaign_done    end-of-run marker with the verification-cache stats,
+                   the fast-path cache stats (``io_cache`` — shared
+                   input/oracle reuse incl. ``oracle_computes`` — and
+                   ``exe_cache`` — compiled-executable reuse; DESIGN.md
+                   §4) and, for LLM-backed campaigns, ``llm_usage`` —
+                   THIS campaign's token/request delta of the shared
                    repro.llm.UsageMeter; report_from_events sums the
                    deltas of every campaign_done in a log
 

@@ -74,6 +74,7 @@ from repro.campaign.runner import CampaignResult, run_campaign
 from repro.campaign.scheduler import Scheduler
 from repro.campaign.transfer import (TransferSweepResult, harvest_hints,
                                      reference_sources)
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
 from repro.core.refinement import LoopConfig
 from repro.core.synthesis import TemplateSearchBackend
 from repro.core.workload import Workload
@@ -140,6 +141,12 @@ class TransferMatrix:
     cache: VerificationCache
     log_path: Optional[Path] = None
     telemetry: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # The fast-path caches every thread-mode leg shared (DESIGN.md §4):
+    # io_cache.oracle_computes staying strictly below legs × workloads is
+    # the cross-leg-sharing proof. None under process isolation, where each
+    # leg builds its own inside the forked child.
+    io_cache: Optional[WorkloadIOCache] = None
+    exe_cache: Optional[ExecutableCache] = None
 
     def leg(self, from_platform: str, to_platform: str) -> MatrixLeg:
         return self.legs[(from_platform, to_platform)]
@@ -171,6 +178,8 @@ class TransferMatrix:
             "best_pair": max(done, key=lambda kv: kv[1])[0] if done else None,
             "worst_pair": min(done, key=lambda kv: kv[1])[0] if done else None,
             "cache": self.cache.stats(),
+            "io_cache": self.io_cache.stats() if self.io_cache else None,
+            "exe_cache": self.exe_cache.stats() if self.exe_cache else None,
             "telemetry": self.telemetry,
         }
 
@@ -254,7 +263,10 @@ def run_transfer_matrix(workloads: Sequence[Workload],
                         resume: bool = True,
                         backend: str = "template",
                         analysis: str = "rule",
-                        llm=None) -> TransferMatrix:
+                        llm=None,
+                        io_cache: Optional[WorkloadIOCache] = None,
+                        exe_cache: Optional[ExecutableCache] = None
+                        ) -> TransferMatrix:
     """Run the §6.2 transfer sweep over every ordered platform pair as one
     dependency-aware job graph.
 
@@ -286,6 +298,14 @@ def run_transfer_matrix(workloads: Sequence[Workload],
             isolation each leg re-opens the cache's path inside its child
             (lock-bearing objects must be born after the fork), so only a
             persistent cache shares verifications across legs there.
+        io_cache / exe_cache: shared fast-path caches for ALL thread-mode
+            legs — workload inputs and the reference oracle are
+            platform-independent, so one IO entry per (workload, seed)
+            serves every leg (``oracle_computes`` < legs × workloads is
+            the sharing proof; see ``TransferMatrix.io_cache``). Ignored
+            under ``isolation="process"``: locks and compiled executables
+            cannot cross a fork, so each leg builds fresh per-campaign
+            caches inside its child (sharing still applies within a leg).
         max_workers: default for both pool levels when the explicit knobs
             are not given.
         matrix_workers: how many campaign legs run concurrently (the graph
@@ -386,8 +406,20 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         return VerificationCache.open(cache_path) if cache_path \
             else VerificationCache()
 
+    # fast-path caches: one shared pair for every thread-mode leg. Under
+    # process isolation they stay None — run_campaign's per-campaign
+    # defaults are then born inside each forked child (same fork rule as
+    # leg_cache; compiled executables additionally don't pickle, so there
+    # is no file-backed sharing medium for them).
+    if isolation != "process":
+        io_cache = io_cache if io_cache is not None else WorkloadIOCache()
+        exe_cache = exe_cache if exe_cache is not None else ExecutableCache()
+    else:
+        io_cache = exe_cache = None
+
     common = dict(max_workers=leg_pool_width, timeout_s=timeout_s,
-                  log_path=log_path, resume=resume, scheduler=work_sched)
+                  log_path=log_path, resume=resume, scheduler=work_sched,
+                  io_cache=io_cache, exe_cache=exe_cache)
 
     # Phase 1 — submit one base campaign per platform, all at once. Each
     # doubles as source AND cold leg of every pair that touches it.
@@ -510,6 +542,8 @@ def run_transfer_matrix(workloads: Sequence[Workload],
         "isolation": isolation,
         "backend": backend,
         "analysis": analysis,
+        "io_cache": io_cache.stats() if io_cache is not None else None,
+        "exe_cache": exe_cache.stats() if exe_cache is not None else None,
         "llm_usage": llm.usage.snapshot() if llm is not None else None,
         "peak_concurrent_legs": graph.telemetry()["peak_concurrent"],
         "jobs": {job.name: {"started_at": job.started_at,
@@ -525,4 +559,5 @@ def run_transfer_matrix(workloads: Sequence[Workload],
     }
     return TransferMatrix(platforms=names, legs=legs, cache=cache,
                           log_path=Path(log_path) if log_path else None,
-                          telemetry=telemetry)
+                          telemetry=telemetry,
+                          io_cache=io_cache, exe_cache=exe_cache)

@@ -43,6 +43,8 @@ def report_from_events(events: Iterable[Dict[str, Any]],
     """
     terminal: Dict[str, Dict[str, Any]] = {}
     cache_stats = None
+    io_cache_stats = None
+    exe_cache_stats = None
     llm_usage = None
     for ev in events:
         if ev.get("event") in ("workload_done", "workload_error"):
@@ -51,6 +53,11 @@ def report_from_events(events: Iterable[Dict[str, Any]],
                 terminal[ev["workload"]] = ev
         elif ev.get("event") == "campaign_done":
             cache_stats = ev.get("cache")
+            # fast-path caches are shared objects like the verification
+            # cache: each campaign_done snapshots the cumulative counters,
+            # so the latest event carries the log's totals
+            io_cache_stats = ev.get("io_cache", io_cache_stats)
+            exe_cache_stats = ev.get("exe_cache", exe_cache_stats)
             # each campaign_done journals its own usage DELTA, so summing
             # them totals the log — across sweep legs sharing one meter
             # and across the separate processes of a resumed run alike
@@ -99,6 +106,10 @@ def report_from_events(events: Iterable[Dict[str, Any]],
             "states": state_histogram(all_rs),
         },
         "cache": cache_stats,
+        # fast-path cache effectiveness (DESIGN.md §4): shared-input/oracle
+        # and compiled-executable reuse, from the latest campaign_done
+        "io_cache": io_cache_stats,
+        "exe_cache": exe_cache_stats,
         # token/request accounting of LLM-backed runs (None for the
         # offline template backend): the campaign_done llm_usage snapshot
         "llm_usage": llm_usage,
@@ -135,6 +146,16 @@ def format_report(report: Dict[str, Any]) -> str:
         lines.append(f"  cache: {c.get('hits', 0)} hits / "
                      f"{c.get('misses', 0)} misses "
                      f"({c.get('entries', 0)} entries)")
+    if report.get("io_cache"):
+        c = report["io_cache"]
+        lines.append(f"  io cache: {c.get('hits', 0)} hits / "
+                     f"{c.get('misses', 0)} misses "
+                     f"({c.get('oracle_computes', 0)} oracle computes)")
+    if report.get("exe_cache"):
+        c = report["exe_cache"]
+        lines.append(f"  exe cache: {c.get('hits', 0)} hits / "
+                     f"{c.get('misses', 0)} misses "
+                     f"({c.get('entries', 0)} compiled)")
     if report.get("llm_usage"):
         from repro.llm import format_usage
         lines.append(f"  llm: {format_usage(report['llm_usage'])}")

@@ -26,6 +26,7 @@ from repro.campaign.report import format_report, report_from_events
 from repro.campaign.scheduler import JobResult, Scheduler
 from repro.core import verification as verif_mod
 from repro.core.analysis import RuleBasedAnalyzer
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
 from repro.core.refinement import LoopConfig, RefinementOutcome, run_workload
 from repro.core.states import EvalResult, ExecutionState
 from repro.core.synthesis import TemplateSearchBackend
@@ -113,10 +114,20 @@ class Campaign:
                  agent_factory: Optional[Callable[[], Any]] = None,
                  analyzer_factory: Optional[Callable[[], Any]] = None,
                  scheduler: Optional[Scheduler] = None,
-                 usage: Optional[Any] = None):
+                 usage: Optional[Any] = None,
+                 io_cache: Optional[WorkloadIOCache] = None,
+                 exe_cache: Optional[ExecutableCache] = None):
         self.workloads = list(workloads)
         self.cfg = cfg
         self.cache = cache if cache is not None else VerificationCache()
+        # fast-path cache layers (DESIGN.md §4): shared workload inputs +
+        # reference oracle per seed, and compiled-executable reuse. Inject
+        # shared instances to pool across campaigns (sweep/matrix legs in
+        # thread mode); the per-campaign defaults still pool across this
+        # campaign's workers and iterations.
+        self.io_cache = io_cache if io_cache is not None else WorkloadIOCache()
+        self.exe_cache = exe_cache if exe_cache is not None \
+            else ExecutableCache()
         # an injected scheduler lets several campaigns (e.g. every leg of a
         # transfer matrix) share one worker-pool/timeout policy
         self.scheduler = scheduler
@@ -167,7 +178,8 @@ class Campaign:
         return run_workload(
             wl, self.cfg.loop, agent=self.agent_factory(),
             analyzer=self.analyzer_factory(), cache=self.cache,
-            on_iteration=on_iteration)
+            on_iteration=on_iteration, io_cache=self.io_cache,
+            exe_cache=self.exe_cache)
 
     # -- campaign ----------------------------------------------------------
 
@@ -265,7 +277,13 @@ class Campaign:
                      if isinstance(v, float) else v - usage_start.get(k, 0)
                      for k, v in end.items()}
         if self.log is not None:
-            done = {"event": "campaign_done", "cache": self.cache.stats()}
+            # io_cache / exe_cache stats ride along so fast-path cache
+            # effectiveness is auditable from the event log alone; like
+            # `cache`, these are snapshots of possibly-shared objects (the
+            # report keeps the latest per log)
+            done = {"event": "campaign_done", "cache": self.cache.stats(),
+                    "io_cache": self.io_cache.stats(),
+                    "exe_cache": self.exe_cache.stats()}
             if usage is not None:
                 done["llm_usage"] = usage
             self.log.append(done)
@@ -298,7 +316,9 @@ def run_campaign(workloads: Sequence[Workload],
                  agent_factory: Optional[Callable[[], Any]] = None,
                  analyzer_factory: Optional[Callable[[], Any]] = None,
                  scheduler: Optional[Scheduler] = None,
-                 usage: Optional[Any] = None
+                 usage: Optional[Any] = None,
+                 io_cache: Optional[WorkloadIOCache] = None,
+                 exe_cache: Optional[ExecutableCache] = None
                  ) -> CampaignResult:
     """One-call campaign: the concurrent, cached replacement for
     ``run_suite`` that benchmarks and examples build on.
@@ -322,6 +342,12 @@ def run_campaign(workloads: Sequence[Workload],
             builds LLM backends; its snapshot is journaled on the
             ``campaign_done`` event and returned as
             ``CampaignResult.llm_usage``.
+        io_cache / exe_cache: shared fast-path caches
+            (:class:`repro.core.evalio.WorkloadIOCache` /
+            :class:`repro.core.evalio.ExecutableCache`); fresh per-campaign
+            instances when omitted. Pass one of each across several
+            campaigns (sweep/matrix legs) so they share generated inputs,
+            oracle outputs, and compiled executables.
 
     Returns:
         A :class:`CampaignResult` with one :class:`WorkloadRun` per
@@ -332,4 +358,5 @@ def run_campaign(workloads: Sequence[Workload],
                          resume=resume)
     return Campaign(workloads, cfg, cache=cache, agent_factory=agent_factory,
                     analyzer_factory=analyzer_factory,
-                    scheduler=scheduler, usage=usage).run()
+                    scheduler=scheduler, usage=usage,
+                    io_cache=io_cache, exe_cache=exe_cache).run()

@@ -27,6 +27,7 @@ from repro.campaign.cache import VerificationCache
 from repro.campaign.runner import CampaignResult, run_campaign
 from repro.campaign.scheduler import Scheduler
 from repro.core import transfer as core_transfer
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
 from repro.core.metrics import fast_p
 from repro.core.refinement import LoopConfig
 from repro.core.states import EvalResult
@@ -211,7 +212,10 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
                        scheduler: Optional[Scheduler] = None,
                        backend: str = "template",
                        analysis: str = "rule",
-                       llm=None) -> TransferSweepResult:
+                       llm=None,
+                       io_cache: Optional[WorkloadIOCache] = None,
+                       exe_cache: Optional[ExecutableCache] = None
+                       ) -> TransferSweepResult:
     """Run the §6.2 transfer experiment between two registered platforms.
 
     Args:
@@ -243,6 +247,11 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
         llm: a :class:`repro.llm.LLMContext` (transport + rate limiter +
             usage meter) when ``backend="llm"``; a MockTransport-backed
             context is built when omitted.
+        io_cache / exe_cache: fast-path caches shared by all three legs
+            (fresh shared instances when omitted). Workload inputs and the
+            reference oracle are platform-independent, so the cold and warm
+            target legs — and the source leg, where seeds coincide — reuse
+            the same IO entries instead of regenerating per leg.
 
     Returns:
         A :class:`TransferSweepResult` (source/cold/warm campaigns, the
@@ -273,8 +282,11 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
         llm = build_llm_context()
     base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
+    io_cache = io_cache if io_cache is not None else WorkloadIOCache()
+    exe_cache = exe_cache if exe_cache is not None else ExecutableCache()
     common = dict(cache=cache, max_workers=max_workers, timeout_s=timeout_s,
-                  log_path=log_path, resume=resume, scheduler=scheduler)
+                  log_path=log_path, resume=resume, scheduler=scheduler,
+                  io_cache=io_cache, exe_cache=exe_cache)
     if llm is not None:
         common["usage"] = llm.usage
 

@@ -1,0 +1,231 @@
+"""Verification fast path: shared input/oracle and executable caches.
+
+Verification is the hot path of the whole system — every candidate, every
+refinement iteration, every matrix leg funnels through ``verify()``.  Two
+of its per-call costs are *not* candidate-specific and this module
+memoizes them (DESIGN.md §4, "Verification fast path"):
+
+* :class:`WorkloadIOCache` — the workload inputs for one seed, the
+  kernel-level input dict derived from them, and (lazily) the
+  reference-oracle output.  All three are **platform-independent**, so a
+  single entry serves every candidate of a refinement iteration AND every
+  leg of a transfer matrix that shares the (workload, seed) pair.
+
+* :class:`ExecutableCache` — compiled executables (the product of
+  ``jax.jit(fn).lower(...).compile()``) keyed by candidate content +
+  kernel io signature + platform.  Candidates revisited under *different
+  seeds* miss the result-level VerificationCache (the seed is part of its
+  content address, §7.3) but compile to the identical executable — this
+  cache hands it back.
+
+Neither cache weakens the §7.3 anti-cheating defense: the IO cache keys on
+the seed (two seeds never share inputs or an oracle output), and the
+executable cache stores compiled *programs*, never results.
+
+Both are thread-safe, bounded (LRU), and expose ``stats()`` snapshots that
+campaigns journal next to the VerificationCache stats.  Neither survives a
+fork or a pickle round-trip by design: locks and compiled executables must
+be born in the process that uses them (matrix legs under process isolation
+build fresh caches inside each child, mirroring ``leg_cache()``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import kernelbench as kb
+from repro.core.workload import Workload
+
+
+class ShapeOnlyRng:
+    """A ``numpy.random.Generator`` stand-in whose draws are constant.
+
+    ``io_signature`` only needs the *shapes and dtypes* a workload's
+    ``input_fn`` produces; spending random-bit generation (hundreds of ms
+    for the large suites) to read metadata is waste.  The known ``input_fn``
+    draw methods return zero-filled (or low-bound-filled, to stay in any
+    domain the op expects) arrays of the right shape and dtype instead.
+    Any other Generator method falls through to a real seeded generator,
+    so exotic future ``input_fn``s stay correct, just slower.
+    """
+
+    def __init__(self) -> None:
+        self._real = None
+
+    def _fallback(self):
+        if self._real is None:
+            self._real = np.random.default_rng(0)
+        return self._real
+
+    def standard_normal(self, size=None, dtype=np.float64):
+        return np.zeros(() if size is None else size, dtype=dtype)
+
+    def uniform(self, low=0.0, high=1.0, size=None):
+        return np.full(() if size is None else size, low, dtype=np.float64)
+
+    def integers(self, low, high=None, size=None, dtype=np.int64,
+                 endpoint=False):
+        fill = 0 if high is None else low
+        return np.full(() if size is None else size, fill, dtype=dtype)
+
+    def __getattr__(self, name):
+        return getattr(self._fallback(), name)
+
+
+class IOEntry:
+    """Materialized verification inputs for one (workload, seed).
+
+    Carries the named input arrays, the kernel-level input dict, and their
+    shapes; the reference-oracle output is computed lazily on first
+    :meth:`expected` call (a batch of candidates that all fail compilation
+    never pays for the oracle) and memoized under a per-entry lock so
+    concurrent legs compute it once.
+    """
+
+    __slots__ = ("wl", "seed", "inputs", "kernel_inputs", "shapes",
+                 "_expected", "_lock", "_on_oracle")
+
+    def __init__(self, wl: Workload, seed: int,
+                 on_oracle: Optional[Callable[[], None]] = None) -> None:
+        self.wl = wl
+        self.seed = int(seed)
+        self.inputs = wl.inputs(seed)
+        self.kernel_inputs = kb.workload_for_candidate_inputs(wl, self.inputs)
+        self.shapes = {k: tuple(v.shape)
+                       for k, v in self.kernel_inputs.items()}
+        self._expected = None
+        self._lock = threading.Lock()
+        self._on_oracle = on_oracle
+
+    def expected(self):
+        """The reference-oracle output for these inputs (computed once)."""
+        with self._lock:
+            if self._expected is None:
+                self._expected = self.wl.reference(self.inputs)
+                if self._on_oracle is not None:
+                    self._on_oracle()
+            return self._expected
+
+
+def _workload_key(wl: Workload, seed: int) -> Tuple:
+    """IO-cache key: workload identity + input seed.  ``input_shapes`` is
+    part of the key because the small and full suites share workload names
+    (same reason the campaign resume path compares io signatures)."""
+    return (wl.name, wl.level,
+            tuple(sorted((k, tuple(int(d) for d in v))
+                         for k, v in wl.input_shapes.items())),
+            int(seed))
+
+
+class WorkloadIOCache:
+    """Thread-safe bounded LRU of :class:`IOEntry` per (workload, seed).
+
+    ``max_entries=0`` disables storage entirely (every call builds a fresh
+    entry and counts a miss) — the benchmark's cold arm and a memory
+    escape hatch.  ``oracle_computes`` counts reference-oracle evaluations
+    actually performed through entries this cache handed out; with sharing
+    working, a matrix run's count stays strictly below legs × workloads.
+    """
+
+    def __init__(self, max_entries: int = 128) -> None:
+        self.max_entries = int(max_entries)
+        self._store: "OrderedDict[Tuple, IOEntry]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.oracle_computes = 0
+        self.input_computes = 0
+
+    def _count_oracle(self) -> None:
+        with self._lock:
+            self.oracle_computes += 1
+
+    def entry(self, wl: Workload, seed: int) -> IOEntry:
+        """The (possibly cached) IOEntry for one (workload, seed)."""
+        key = _workload_key(wl, seed)
+        with self._lock:
+            cached = self._store.get(key)
+            if cached is not None:
+                self.hits += 1
+                self._store.move_to_end(key)
+                return cached
+            self.misses += 1
+        # Build outside the cache lock: input generation is the expensive
+        # part and must not serialize unrelated workloads. If two threads
+        # race the same key, the first to publish wins; the loser's entry
+        # is dropped unused (its counters were already charged — they
+        # reflect work genuinely done).
+        entry = IOEntry(wl, seed, on_oracle=self._count_oracle)
+        with self._lock:
+            self.input_computes += 1
+            current = self._store.get(key)
+            if current is not None:
+                return current
+            if self.max_entries > 0:
+                self._store[key] = entry
+                while len(self._store) > self.max_entries:
+                    self._store.popitem(last=False)
+        return entry
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of {entries, hits, misses, oracle_computes,
+        input_computes} — journaled on campaign_done events next to the
+        VerificationCache stats."""
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses,
+                    "oracle_computes": self.oracle_computes,
+                    "input_computes": self.input_computes}
+
+
+class ExecutableCache:
+    """Thread-safe bounded LRU of compiled executables.
+
+    Keys come from :func:`repro.core.verification.executable_key` — the
+    candidate content address minus seed and tolerance (the compiled
+    program depends on neither).  Values are whatever
+    ``jax.jit(fn).lower(...).compile()`` returned; they are process-local
+    and never pickled or journaled (only the counters are).
+    """
+
+    def __init__(self, max_entries: int = 256) -> None:
+        self.max_entries = int(max_entries)
+        self._store: "OrderedDict[str, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            exe = self._store.get(key)
+            if exe is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+                self._store.move_to_end(key)
+            return exe
+
+    def put(self, key: str, exe: Any) -> None:
+        if self.max_entries <= 0:
+            return
+        with self._lock:
+            self._store[key] = exe
+            while len(self._store) > self.max_entries:
+                self._store.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of {entries, hits, misses}."""
+        with self._lock:
+            return {"entries": len(self._store), "hits": self.hits,
+                    "misses": self.misses}

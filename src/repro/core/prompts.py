@@ -142,8 +142,11 @@ def render_analysis(accelerator: str, profile: dict,
     ``space`` the platform-legal parameter space for the profile's op
     (``candidates.space_for``). Both render as deterministic JSON
     (sorted keys), so identical inputs produce byte-identical prompts —
-    what record/replay sessions key on."""
+    what record/replay sessions key on. Wall-clock measurement keys
+    (``phase_s``) are stripped first: their values differ on every run,
+    and a prompt that embeds them can never replay."""
     import json
+    profile = {k: v for k, v in profile.items() if k != "phase_s"}
     return ANALYSIS_TEMPLATE.format(
         accelerator=accelerator,
         profile_json=json.dumps(profile, indent=2, sort_keys=True,

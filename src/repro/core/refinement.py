@@ -18,7 +18,7 @@ from repro.core import candidates as cand_mod
 from repro.core.analysis import Recommendation, RuleBasedAnalyzer
 from repro.core.states import EvalResult, ExecutionState
 from repro.core.synthesis import Generation, TemplateSearchBackend
-from repro.core.verification import verify
+from repro.core.verification import io_signature, verify, verify_batch
 from repro.core.workload import Workload
 from repro.platforms import resolve_platform
 
@@ -74,16 +74,62 @@ class LoopConfig:
     # log — without it, resume would let (A -> B) warm results masquerade as
     # (C -> B) warm results, since both run on B with use_reference=True.
     transfer_from: Optional[str] = None
+    # Mutation fan-out width for optimization iterations: each iteration
+    # verifies the agent's proposal PLUS the top (fanout - 1) predicted
+    # single-parameter mutations as one verify_batch sharing the
+    # iteration's inputs and reference oracle. 1 = classic single-candidate
+    # loop. Only declarative (template) candidates fan out; LLM callables
+    # verify singly regardless.
+    fanout: int = 1
+
+
+def _fanout_candidates(cand, wl, platform, agent, k: int,
+                       seen: dict) -> List[cand_mod.Candidate]:
+    """The top-``k`` single-parameter mutations of ``cand`` by modeled
+    time — the refinement loop's verify_batch companions. Skips candidates
+    already evaluated this loop and (when the agent exposes a legality
+    probe, e.g. ``TemplateSearchBackend._legal``) workload-illegal tilings,
+    so the batch spends its budget on plausible programs. Ranking uses the
+    kernel-level shapes from :func:`io_signature`, the same shapes the
+    verifier scores against."""
+    if k <= 0:
+        return []
+    shapes = {name: tuple(dims) for name, dims, _ in io_signature(wl)}
+    legal = getattr(agent, "_legal", None)
+    scored = []
+    for m in cand_mod.mutations(cand, platform).values():
+        mk = (m.op, tuple(sorted(m.params.items())))
+        if mk in seen:
+            continue
+        if legal is not None and not legal(m, wl):
+            continue
+        try:
+            t = cand_mod.model_time(m, shapes, platform)
+        except Exception:  # noqa: BLE001 — op/shape combos the model lacks
+            continue
+        if t != t or t == float("inf"):
+            continue
+        scored.append((t, m.describe(), m))
+    scored.sort(key=lambda s: (s[0], s[1]))
+    return [m for _, _, m in scored[:k]]
 
 
 def run_workload(wl: Workload, cfg: LoopConfig, *,
                  agent=None, analyzer=None, cache=None,
-                 on_iteration=None) -> RefinementOutcome:
+                 on_iteration=None, io_cache=None,
+                 exe_cache=None) -> RefinementOutcome:
     """Run the refinement loop for one workload.
 
     ``cache`` (optional) is a verification cache (see
     :func:`repro.core.verification.verify`): repeated candidate+seed pairs —
     across configs or across whole campaign runs — skip re-verification.
+
+    ``io_cache`` / ``exe_cache`` (optional) are the fast-path cache layers
+    (:class:`repro.core.evalio.WorkloadIOCache` /
+    :class:`repro.core.evalio.ExecutableCache`): shared workload inputs +
+    reference oracle per seed, and compiled-executable reuse across seeds.
+    Pass ONE of each per campaign (or per matrix) so concurrent workloads
+    and legs share them.
 
     ``on_iteration`` (optional) is called with each :class:`IterationLog`
     as soon as it exists — the campaign runner journals iterations through
@@ -134,11 +180,38 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
                                 seen[key], "converged",
                                 candidate=gen.candidate))
             break
-        result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
-                        wl, seed=cfg.seed + i, fn=gen.callable_fn,
-                        cache=cache, platform=platform)
-        if key is not None:
-            seen[key] = result
+        fan: List[cand_mod.Candidate] = []
+        if cfg.fanout > 1 and phase == "optimization" and key is not None:
+            fan = _fanout_candidates(gen.candidate, wl, platform, agent,
+                                     cfg.fanout - 1, seen)
+        if fan:
+            # batched iteration: the proposal plus its best predicted
+            # mutations share one input set and one oracle evaluation;
+            # every member lands in `seen`, and the iteration carries the
+            # batch's best CORRECT result (the agent's own proposal when
+            # nothing verified correct) so the next iteration refines from
+            # the strongest member.
+            batch = [gen.candidate] + fan
+            batch_results = verify_batch(batch, wl, seed=cfg.seed + i,
+                                         cache=cache, platform=platform,
+                                         io_cache=io_cache,
+                                         exe_cache=exe_cache)
+            for c, r in zip(batch, batch_results):
+                seen[(c.op, tuple(sorted(c.params.items())))] = r
+            best_j = min((j for j, r in enumerate(batch_results)
+                          if r.correct),
+                         key=lambda j: batch_results[j].model_time_s or 1e9,
+                         default=0)
+            result = batch_results[best_j]
+            gen = dataclasses.replace(gen, candidate=batch[best_j],
+                                      source=batch[best_j].describe())
+        else:
+            result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
+                            wl, seed=cfg.seed + i, fn=gen.callable_fn,
+                            cache=cache, platform=platform,
+                            io_cache=io_cache, exe_cache=exe_cache)
+            if key is not None:
+                seen[key] = result
         rec_text = rec_source = None
         if result.correct and cfg.use_profiling and not cfg.single_shot:
             rec = analyzer.analyze(result.profile)

@@ -13,6 +13,14 @@ platform, seed) tuple across iterations, configs, or whole campaigns is
 never re-verified. The platform is part of the content address — results
 modeled for different hardware targets must not collide.
 
+Two more cache layers make up the verification fast path (DESIGN.md §4):
+a :class:`repro.core.evalio.WorkloadIOCache` shares the generated inputs
+and the reference-oracle output per (workload, seed) across candidates and
+matrix legs, and a :class:`repro.core.evalio.ExecutableCache` reuses
+compiled executables across seeds.  :func:`verify_batch` evaluates many
+candidates of one workload against a single shared input set, deduping
+identical candidates by content address first.
+
 When no ``seed`` is passed, verify draws one from a deterministic per-call
 counter (NOT wall-clock entropy): the Nth seedless call of a process always
 sees the same inputs, so runs are reproducible and the cache stays
@@ -24,19 +32,18 @@ import hashlib
 import itertools
 import json
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import candidates as cand_mod
+from repro.core import evalio
 from repro.core import kernelbench as kb
+from repro.core.evalio import ExecutableCache, IOEntry, WorkloadIOCache
 from repro.core.states import EvalResult, ExecutionState
 from repro.core.workload import Workload
 from repro.platforms import PlatformLike, resolve_platform
-
-_TRACE_ERRORS = (TypeError, ValueError, AssertionError, KeyError,
-                 IndexError, NotImplementedError)
 
 # Deterministic fallback seed source for seedless verify() calls.
 _FRESH_SEEDS = itertools.count(1)
@@ -45,17 +52,31 @@ _FRESH_SEEDS = itertools.count(1)
 def io_signature(wl: Workload):
     """Kernel-level input (name, shape, dtype) triples for a workload.
 
-    Shapes/dtypes are seed-independent, so the signature is memoized on the
-    workload instance itself (computing it generates one set of inputs; the
-    cache-hit path must stay free of input generation). ``_io_sig`` is not a
-    dataclass field, so ``dataclasses.replace`` clones — e.g. the shrunken
-    small-suite workloads — never inherit a stale signature.
+    Computed abstractly: the workload's ``input_fn`` runs against a
+    :class:`repro.core.evalio.ShapeOnlyRng` (constant fills, no random-bit
+    generation) and the kernel-input transform is traced with
+    ``jax.eval_shape``, so reading a signature never executes the L3 block
+    math or materializes candidate-sized arrays.  Shapes/dtypes are
+    seed-independent, so the signature is memoized on the workload instance
+    itself.  ``_io_sig`` is not a dataclass field, so ``dataclasses.replace``
+    clones — e.g. the shrunken small-suite workloads — never inherit a
+    stale signature.
     """
     sig = getattr(wl, "_io_sig", None)
     if sig is None:
-        kernel_inputs = kb.workload_for_candidate_inputs(wl, wl.inputs(0))
+        try:
+            raw = wl.input_fn(evalio.ShapeOnlyRng())
+            structs = {k: jax.ShapeDtypeStruct(np.shape(v),
+                                               getattr(v, "dtype", None)
+                                               or np.asarray(v).dtype)
+                       for k, v in raw.items()}
+            kernel = jax.eval_shape(
+                lambda ins: kb.workload_for_candidate_inputs(wl, ins),
+                structs)
+        except Exception:  # noqa: BLE001 — exotic input_fn: concrete path
+            kernel = kb.workload_for_candidate_inputs(wl, wl.inputs(0))
         sig = sorted((k, [int(d) for d in v.shape], str(v.dtype))
-                     for k, v in kernel_inputs.items())
+                     for k, v in kernel.items())
         wl._io_sig = sig
     return sig
 
@@ -84,12 +105,39 @@ def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int,
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
+def executable_key(candidate: cand_mod.Candidate, wl: Workload,
+                   platform: PlatformLike = None) -> str:
+    """Content address of one *compiled executable*: :func:`cache_key`
+    minus seed and tolerance — the program ``jax.jit(...).lower().compile()``
+    produces depends on the candidate, the kernel input shapes/dtypes, and
+    the platform's compiler params, but not on which seed filled the arrays
+    or how tightly the oracle is compared.  This is what lets a candidate
+    revisited under a *fresh* seed (the §7.3 anti-cheating ladder) skip
+    recompilation even though its verification result cannot be reused.
+    """
+    sig = {
+        "op": candidate.op,
+        "params": sorted((k, repr(v)) for k, v in candidate.params.items()),
+        "io": io_signature(wl),
+        "platform": resolve_platform(platform).name,
+    }
+    blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def verify(candidate: cand_mod.Candidate, wl: Workload, *,
            seed: Optional[int] = None, measure_wall: bool = False,
            fn: Optional[Callable] = None, cache=None,
-           platform: PlatformLike = None) -> EvalResult:
+           platform: PlatformLike = None,
+           io_cache: Optional[WorkloadIOCache] = None,
+           exe_cache: Optional[ExecutableCache] = None) -> EvalResult:
     """Run the verification pipeline for one candidate against one workload,
-    scoring performance against ``platform``'s roofline profile."""
+    scoring performance against ``platform``'s roofline profile.
+
+    ``io_cache`` / ``exe_cache`` (optional) plug in the fast-path cache
+    layers: shared inputs + reference oracle per (workload, seed), and
+    compiled-executable reuse per (candidate, io, platform).
+    """
     plat = resolve_platform(platform)
     # Deterministic per-call counter, NOT time_ns(): wall-clock seeds defeat
     # the cache and make runs irreproducible. Pass a seed for fresh entropy.
@@ -106,21 +154,87 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
                                 or hit.wall_time_s is not None):
             return hit
 
-    inputs = wl.inputs(seed)
-    kernel_inputs = kb.workload_for_candidate_inputs(wl, inputs)
-    shapes = {k: tuple(v.shape) for k, v in kernel_inputs.items()}
-    result = _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes,
-                              measure_wall=measure_wall, fn=fn, platform=plat)
+    t0 = time.perf_counter()
+    entry = io_cache.entry(wl, seed) if io_cache is not None \
+        else IOEntry(wl, seed)
+    phase = {"input_gen": time.perf_counter() - t0}
+    result = _verify_uncached(candidate, wl, entry,
+                              measure_wall=measure_wall, fn=fn, platform=plat,
+                              exe_cache=exe_cache, phase=phase)
     result.cache_key = key
     if key is not None:
         cache.put(key, result)
     return result
 
 
-def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
-                     measure_wall, fn, platform) -> EvalResult:
+def verify_batch(candidates: Sequence[cand_mod.Candidate], wl: Workload, *,
+                 seed: Optional[int] = None, measure_wall: bool = False,
+                 cache=None, platform: PlatformLike = None,
+                 io_cache: Optional[WorkloadIOCache] = None,
+                 exe_cache: Optional[ExecutableCache] = None
+                 ) -> List[EvalResult]:
+    """Verify many declarative candidates of ONE workload in a batch.
+
+    All candidates see the SAME seed (so the refinement loop's fan-out
+    shares one input set and one reference-oracle evaluation); the §7.3
+    freshness defense lives at the *iteration* level, where each batch
+    draws a new seed.  Before any work, candidates are deduped by
+    :func:`cache_key` — exact duplicates (common in overlapping mutation
+    neighborhoods) get the first occurrence's result object.  Input
+    generation happens lazily: a batch fully served by the verification
+    cache never touches the arrays.  Results come back in input order.
+
+    Callable (LLM) candidates are not batchable — they have no content
+    address to dedupe or compile-cache on; verify them singly.
+    """
+    plat = resolve_platform(platform)
+    seed = next(_FRESH_SEEDS) % (2 ** 31) if seed is None else seed
+    results: List[Optional[EvalResult]] = [None] * len(candidates)
+    first_of: Dict[str, int] = {}
+    keys: List[Optional[str]] = [None] * len(candidates)
+    entry: Optional[IOEntry] = None
+    for i, cand in enumerate(candidates):
+        key = cache_key(cand, wl, seed, plat)
+        keys[i] = key
+        if key in first_of:          # duplicate: resolved after the loop
+            continue
+        first_of[key] = i
+        if cache is not None:
+            hit = cache.get(key)
+            if hit is not None and (not measure_wall
+                                    or hit.wall_time_s is not None):
+                results[i] = hit
+                continue
+        if entry is None:
+            t0 = time.perf_counter()
+            entry = io_cache.entry(wl, seed) if io_cache is not None \
+                else IOEntry(wl, seed)
+            input_gen_s = time.perf_counter() - t0
+        result = _verify_uncached(cand, wl, entry,
+                                  measure_wall=measure_wall, fn=None,
+                                  platform=plat, exe_cache=exe_cache,
+                                  phase={"input_gen": input_gen_s})
+        input_gen_s = 0.0            # amortized: charged to the first miss
+        result.cache_key = key
+        if cache is not None:
+            cache.put(key, result)
+        results[i] = result
+    for i, key in enumerate(keys):
+        if results[i] is None:
+            results[i] = results[first_of[key]]
+    return results
+
+
+def _verify_uncached(candidate, wl, entry: IOEntry, *,
+                     measure_wall, fn, platform,
+                     exe_cache: Optional[ExecutableCache] = None,
+                     phase: Optional[Dict[str, float]] = None) -> EvalResult:
+    phase = {} if phase is None else phase
+    kernel_inputs = entry.kernel_inputs
+    shapes = entry.shapes
 
     # -- generation state handled by the caller; here candidate exists -------
+    declarative = fn is None
     if fn is None:
         try:
             fn = cand_mod.materialize(candidate, platform=platform)
@@ -129,28 +243,36 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
                               error=f"{type(exc).__name__}: {exc}")
 
     # -- compilation: trace + lower ------------------------------------------
-    try:
-        jitted = jax.jit(fn)
-        lowered = jitted.lower(*kernel_inputs.values())
-        compiled = lowered.compile()
-    except _TRACE_ERRORS as exc:
-        return EvalResult(ExecutionState.COMPILATION_FAILURE,
-                          error=f"{type(exc).__name__}: {exc}")
-    except Exception as exc:  # noqa: BLE001
-        return EvalResult(ExecutionState.COMPILATION_FAILURE,
-                          error=f"{type(exc).__name__}: {exc}")
+    t0 = time.perf_counter()
+    exe_key = compiled = None
+    if exe_cache is not None and declarative:
+        exe_key = executable_key(candidate, wl, platform)
+        compiled = exe_cache.get(exe_key)
+    if compiled is None:
+        try:
+            compiled = jax.jit(fn).lower(*kernel_inputs.values()).compile()
+        except Exception as exc:  # noqa: BLE001 — trace errors (TypeError,
+            # ValueError, ...) and lowering errors classify identically
+            return EvalResult(ExecutionState.COMPILATION_FAILURE,
+                              error=f"{type(exc).__name__}: {exc}")
+        if exe_key is not None:
+            exe_cache.put(exe_key, compiled)
+    phase["compile"] = time.perf_counter() - t0
 
     # -- runtime ---------------------------------------------------------------
+    t0 = time.perf_counter()
     try:
         out = compiled(*kernel_inputs.values())
         out = jax.block_until_ready(out)
     except Exception as exc:  # noqa: BLE001
         return EvalResult(ExecutionState.RUNTIME_ERROR,
                           error=f"{type(exc).__name__}: {exc}")
+    phase["run"] = time.perf_counter() - t0
 
     # -- numeric / shape check ---------------------------------------------------
-    expected = wl.reference(inputs)
-    full_out = kb.finish_candidate_output(wl, inputs, out)
+    t0 = time.perf_counter()
+    expected = entry.expected()
+    full_out = kb.finish_candidate_output(wl, entry.inputs, out)
     if tuple(full_out.shape) != tuple(expected.shape):
         return EvalResult(
             ExecutionState.NUMERIC_MISMATCH,
@@ -166,16 +288,19 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
         return EvalResult(ExecutionState.NUMERIC_MISMATCH,
                           error=f"max rel err {err:.2e} > tol {wl.tol:.0e}",
                           max_abs_err=err)
+    phase["check"] = time.perf_counter() - t0
 
     # -- performance ----------------------------------------------------------
+    t0 = time.perf_counter()
     model_t = _model_time_tolerant(candidate, shapes, platform)
     base_t = _baseline_time_tolerant(candidate.op, shapes, platform)
     wall = None
     if measure_wall:
-        t0 = time.perf_counter()
+        t_w = time.perf_counter()
         for _ in range(3):
             jax.block_until_ready(compiled(*kernel_inputs.values()))
-        wall = (time.perf_counter() - t0) / 3
+        wall = (time.perf_counter() - t_w) / 3
+    phase["model"] = time.perf_counter() - t0
     profile = {
         "op": candidate.op,
         "platform": platform.name,
@@ -184,6 +309,9 @@ def _verify_uncached(candidate, wl, kernel_inputs, inputs, shapes, *,
         "model_time_s": model_t,
         "baseline_time_s": base_t,
         "flops": _op_flops(candidate.op, shapes),
+        # per-phase wall seconds of THIS verification (journaled with the
+        # iteration event; bench_verify_throughput aggregates them)
+        "phase_s": {k: round(v, 6) for k, v in phase.items()},
     }
     return EvalResult(ExecutionState.CORRECT, wall_time_s=wall,
                       model_time_s=model_t, baseline_model_time_s=base_t,

@@ -1,0 +1,360 @@
+"""Verification fast path (DESIGN.md §4): abstract io signatures, the
+shared input/oracle cache, the compiled-executable cache, batched candidate
+verification, and the §7.3 anti-cheating properties they must preserve."""
+import numpy as np
+import pytest
+
+from repro.campaign import (EventLog, format_report, report_from_events,
+                            run_campaign, run_transfer_matrix)
+from repro.core import (Candidate, LoopConfig, kernelbench, run_workload,
+                        verify)
+from repro.core.evalio import ExecutableCache, ShapeOnlyRng, WorkloadIOCache
+from repro.core.states import ExecutionState as ES
+from repro.core.verification import (cache_key, executable_key, io_signature,
+                                     verify_batch)
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+
+
+def _tiny(name="T1/softmax", op="softmax", shape=(64, 512), scale=60.0,
+          ref_fn=None):
+    refs = {"softmax": ref.softmax, "swish": ref.swish}
+    return Workload(
+        name=name, level=1, op=op,
+        ref_fn=ref_fn or refs[op],
+        input_fn=lambda rng: {"x": randn(rng, shape, scale)},
+        input_shapes={"x": shape})
+
+
+def _concrete_signature(wl):
+    """The io signature computed the pre-fast-path way: materialize real
+    inputs and run the kernel-input transform concretely."""
+    from repro.core import kernelbench as kb
+    kernel = kb.workload_for_candidate_inputs(wl, wl.inputs(0))
+    return sorted((k, [int(d) for d in v.shape], str(v.dtype))
+                  for k, v in kernel.items())
+
+
+# ---------------------------------------------------------------------------
+# io_signature: abstract == concrete, memoized, fallback-safe
+# ---------------------------------------------------------------------------
+
+def test_io_signature_matches_concrete_small_suite():
+    for wl in kernelbench.suite(small=True):
+        if getattr(wl, "_io_sig", None) is not None:
+            del wl._io_sig          # defeat memoization from earlier tests
+        assert io_signature(wl) == _concrete_signature(wl), wl.name
+
+
+@pytest.mark.slow
+def test_io_signature_matches_concrete_full_suite():
+    for wl in kernelbench.suite(small=False):
+        if getattr(wl, "_io_sig", None) is not None:
+            del wl._io_sig
+        assert io_signature(wl) == _concrete_signature(wl), wl.name
+
+
+def test_io_signature_memoized_without_rerunning_input_fn():
+    calls = {"n": 0}
+
+    def input_fn(rng):
+        calls["n"] += 1
+        return {"x": randn(rng, (16, 128), 1.0)}
+
+    wl = Workload(name="T1/sig", level=1, op="swish", ref_fn=ref.swish,
+                  input_fn=input_fn, input_shapes={"x": (16, 128)})
+    first = io_signature(wl)
+    n_after_first = calls["n"]
+    assert io_signature(wl) == first
+    assert calls["n"] == n_after_first   # second read served from the memo
+
+
+def test_io_signature_exotic_rng_falls_back_to_real_generator():
+    # rng.normal is not one of ShapeOnlyRng's shape-only draws — it must
+    # fall through to a real generator and still yield the right signature
+    wl = Workload(
+        name="T1/exotic", level=1, op="softmax", ref_fn=ref.softmax,
+        input_fn=lambda rng: {
+            "x": rng.normal(size=(8, 128)).astype(np.float32)},
+        input_shapes={"x": (8, 128)})
+    assert io_signature(wl) == _concrete_signature(wl)
+
+
+def test_shape_only_rng_draws_are_cheap_and_shaped():
+    rng = ShapeOnlyRng()
+    assert rng.standard_normal((3, 4), dtype=np.float32).shape == (3, 4)
+    assert rng.uniform(2.0, 5.0, size=(2,)).tolist() == [2.0, 2.0]
+    assert rng.integers(7, 9, size=(2,)).tolist() == [7, 7]
+
+
+# ---------------------------------------------------------------------------
+# WorkloadIOCache: hit/miss/eviction, laziness, seed isolation (§7.3)
+# ---------------------------------------------------------------------------
+
+def test_io_cache_hit_and_lazy_oracle():
+    cache = WorkloadIOCache()
+    wl = _tiny()
+    e1 = cache.entry(wl, seed=0)
+    assert cache.stats()["oracle_computes"] == 0   # oracle not touched yet
+    e2 = cache.entry(wl, seed=0)
+    assert e1 is e2
+    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
+                             "oracle_computes": 0, "input_computes": 1}
+    out1 = e1.expected()
+    out2 = e2.expected()
+    assert out1 is out2
+    assert cache.stats()["oracle_computes"] == 1   # computed exactly once
+
+
+def test_io_cache_two_seeds_never_share_inputs_or_oracle():
+    """§7.3: the freshness defense requires each seed its own entry."""
+    cache = WorkloadIOCache()
+    wl = _tiny()
+    e0, e1 = cache.entry(wl, seed=0), cache.entry(wl, seed=1)
+    assert e0 is not e1
+    assert cache.stats()["hits"] == 0 and cache.stats()["misses"] == 2
+    assert not np.array_equal(e0.inputs["x"], e1.inputs["x"])
+    e0.expected(), e1.expected()
+    assert cache.stats()["oracle_computes"] == 2
+
+
+def test_io_cache_lru_eviction_bound():
+    cache = WorkloadIOCache(max_entries=1)
+    wl = _tiny()
+    cache.entry(wl, seed=0)
+    cache.entry(wl, seed=1)          # evicts seed 0
+    assert len(cache) == 1
+    cache.entry(wl, seed=0)          # must rebuild: miss, not hit
+    assert cache.stats()["misses"] == 3 and cache.stats()["hits"] == 0
+
+
+def test_io_cache_disabled_with_zero_entries():
+    cache = WorkloadIOCache(max_entries=0)
+    wl = _tiny()
+    a, b = cache.entry(wl, seed=0), cache.entry(wl, seed=0)
+    assert a is not b
+    assert len(cache) == 0
+    assert cache.stats()["hits"] == 0 and cache.stats()["misses"] == 2
+
+
+def test_io_cache_key_separates_small_and_full_suite_shapes():
+    small = _tiny(shape=(64, 512))
+    full = _tiny(shape=(2048, 2048), scale=1.0)
+    cache = WorkloadIOCache()
+    cache.entry(small, seed=0)
+    cache.entry(full, seed=0)        # same name+seed, different shapes
+    assert cache.stats()["misses"] == 2 and len(cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# Anti-cheating with a shared IO cache (§7.3)
+# ---------------------------------------------------------------------------
+
+def test_constant_output_cheat_still_flagged_under_shared_io_cache():
+    import jax.numpy as jnp
+    wl = kernelbench.by_name("L1/swish")
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    cheat = lambda x: jnp.zeros_like(x)  # noqa: E731
+    io_cache = WorkloadIOCache()
+    for seed in (123, 124):              # the refinement loop's seed ladder
+        res = verify(cand, wl, seed=seed, fn=cheat, io_cache=io_cache)
+        assert res.state is ES.NUMERIC_MISMATCH
+    # two fresh seeds -> two independent entries, two oracle evaluations
+    s = io_cache.stats()
+    assert s["entries"] == 2 and s["oracle_computes"] == 2
+
+
+# ---------------------------------------------------------------------------
+# ExecutableCache + executable_key
+# ---------------------------------------------------------------------------
+
+def test_executable_key_is_seed_and_tol_independent():
+    wl = _tiny()
+    cand = Candidate("softmax", {"block_rows": 8, "online": True})
+    assert cache_key(cand, wl, 0) != cache_key(cand, wl, 1)
+    assert executable_key(cand, wl) == executable_key(cand, wl)
+    other = Candidate("softmax", {"block_rows": 16, "online": True})
+    assert executable_key(cand, wl) != executable_key(other, wl)
+
+
+def test_exe_cache_reuses_compiled_program_across_seeds():
+    wl = kernelbench.by_name("L1/swish")
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    exe = ExecutableCache()
+    r0 = verify(cand, wl, seed=0, exe_cache=exe)
+    r1 = verify(cand, wl, seed=1, exe_cache=exe)
+    assert r0.state is ES.CORRECT and r1.state is ES.CORRECT
+    s = exe.stats()
+    assert s == {"entries": 1, "hits": 1, "misses": 1}
+    # and the fresh seed still produced a fresh numeric check
+    assert r0.max_abs_err != r1.max_abs_err or r0.max_abs_err == 0.0
+
+
+def test_exe_cache_lru_bound_and_disabled_mode():
+    exe = ExecutableCache(max_entries=1)
+    exe.put("a", object())
+    exe.put("b", object())
+    assert len(exe) == 1 and exe.get("a") is None
+    off = ExecutableCache(max_entries=0)
+    off.put("a", object())
+    assert len(off) == 0 and off.get("a") is None
+
+
+def test_compile_failure_error_keeps_exception_type_prefix():
+    """The collapsed compile except-branch must preserve the old
+    'ExcType: message' error format the analyzer prompts rely on."""
+    wl = kernelbench.by_name("L1/swish")
+    cand = Candidate("swish", {"block_rows": 8, "block_lanes": 2048 + 512})
+    res = verify(cand, wl, seed=0)
+    assert res.state is ES.COMPILATION_FAILURE
+    head = res.error.split(":")[0]
+    assert head.isidentifier(), res.error
+
+
+# ---------------------------------------------------------------------------
+# verify_batch: order, dedup, shared inputs, single oracle
+# ---------------------------------------------------------------------------
+
+def test_verify_batch_order_dedup_and_mixed_states():
+    wl = kernelbench.by_name("L1/swish")
+    good = Candidate("swish", {"block_rows": 8, "block_lanes": 512})
+    bad = Candidate("swish", {"block_rows": 8, "block_lanes": 2048 + 512})
+    rs = verify_batch([good, bad, good], wl, seed=0)
+    assert [r.state for r in rs] == [ES.CORRECT, ES.COMPILATION_FAILURE,
+                                     ES.CORRECT]
+    assert rs[0] is rs[2]            # duplicate shares the result object
+
+
+def test_verify_batch_computes_oracle_once():
+    oracle_calls = {"n": 0}
+
+    def counting_ref(x):
+        oracle_calls["n"] += 1
+        return ref.swish(x)
+
+    wl = _tiny("T1/swish", op="swish", scale=1.0, ref_fn=counting_ref)
+    cands = [Candidate("swish", {"block_rows": r, "block_lanes": 512})
+             for r in (8, 16, 32)]
+    rs = verify_batch(cands, wl, seed=0, io_cache=WorkloadIOCache())
+    assert all(r.state is ES.CORRECT for r in rs)
+    assert oracle_calls["n"] == 1
+
+
+def test_verify_batch_served_from_cache_never_builds_inputs():
+    from repro.campaign import VerificationCache
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    cands = [Candidate("swish", {"block_rows": r, "block_lanes": 512})
+             for r in (8, 16)]
+    cache = VerificationCache()
+    verify_batch(cands, wl, seed=0, cache=cache)   # populate
+    io_cache = WorkloadIOCache()
+    rs = verify_batch(cands, wl, seed=0, cache=cache, io_cache=io_cache)
+    assert all(r.state is ES.CORRECT for r in rs)
+    # fully cache-served: the io cache was never consulted
+    assert io_cache.stats()["misses"] == 0
+    assert io_cache.stats()["input_computes"] == 0
+
+
+def test_analysis_prompt_strips_volatile_phase_timings():
+    """phase_s values differ on every run; a prompt embedding them would
+    never hit a record/replay session twice."""
+    from repro.core.prompts import render_analysis
+    p1 = {"op": "swish", "phase_s": {"compile": 0.1}}
+    p2 = {"op": "swish", "phase_s": {"compile": 0.9}}
+    assert render_analysis("ACC", p1) == render_analysis("ACC", p2)
+    assert "phase_s" not in render_analysis("ACC", p1)
+
+
+def test_verify_batch_results_carry_phase_timings():
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    [r] = verify_batch(
+        [Candidate("swish", {"block_rows": 8, "block_lanes": 512})],
+        wl, seed=0)
+    phases = r.profile["phase_s"]
+    assert set(phases) == {"input_gen", "compile", "run", "check", "model"}
+    assert all(v >= 0 for v in phases.values())
+
+
+# ---------------------------------------------------------------------------
+# Fan-out refinement (LoopConfig.fanout)
+# ---------------------------------------------------------------------------
+
+def test_fanout_rejected_below_one_by_cli(capsys):
+    from repro.campaign.__main__ import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--fanout", "0"])
+    assert exc.value.code != 0
+    assert "--fanout must be >= 1" in capsys.readouterr().err
+
+
+def test_fanout_converges_and_shares_batch_inputs():
+    wl = kernelbench.by_name("L1/softmax")
+    io_cache, exe_cache = WorkloadIOCache(), ExecutableCache()
+    plain = run_workload(wl, LoopConfig(num_iterations=4))
+    fan = run_workload(wl, LoopConfig(num_iterations=4, fanout=3),
+                       io_cache=io_cache, exe_cache=exe_cache)
+    assert fan.final.correct
+    # batched iterations verified >1 candidate against ONE entry per seed:
+    # more compile-level lookups (one per verification) than input sets
+    s, e = io_cache.stats(), exe_cache.stats()
+    assert s["misses"] >= 1
+    assert e["hits"] + e["misses"] > s["misses"]
+    # exploring the proposal's neighborhood can only improve the best
+    # model time at equal iteration budget (deterministic backend)
+    assert (fan.best.model_time_s or 1e9) <= \
+        (plain.best.model_time_s or 1e9) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Campaign / matrix / report integration
+# ---------------------------------------------------------------------------
+
+def test_campaign_done_journals_fastpath_cache_stats(tmp_path):
+    wl = _tiny("T1/swish", op="swish", scale=1.0)
+    log = tmp_path / "ev.jsonl"
+    run_campaign([wl], LoopConfig(num_iterations=2), log_path=log,
+                 max_workers=1)
+    done = [e for e in EventLog(log).events()
+            if e.get("event") == "campaign_done"]
+    assert done
+    assert {"entries", "hits", "misses", "oracle_computes",
+            "input_computes"} <= set(done[-1]["io_cache"])
+    assert {"entries", "hits", "misses"} <= set(done[-1]["exe_cache"])
+
+
+def test_matrix_thread_mode_shares_oracles_across_legs():
+    """Acceptance: a matrix run computes strictly fewer reference oracles
+    than legs x workloads — cross-leg sharing is real, not per-leg."""
+    wls = [_tiny("T1/swish", op="swish", scale=1.0),
+           _tiny("T1/softmax", op="softmax")]
+    platforms = ["tpu_v5e", "metal_m2"]
+    matrix = run_transfer_matrix(wls, platforms,
+                                 loop=LoopConfig(num_iterations=2),
+                                 max_workers=2)
+    assert matrix.n_failed == 0
+    n_legs = len(platforms) + len(platforms) * (len(platforms) - 1)
+    s = matrix.io_cache.stats()
+    assert s["oracle_computes"] < n_legs * len(wls)
+    assert s["hits"] > 0
+    assert matrix.report()["io_cache"] == s
+
+
+def test_report_formats_fastpath_cache_lines():
+    events = [{"event": "campaign_done",
+               "cache": {"entries": 1, "hits": 2, "misses": 3},
+               "io_cache": {"entries": 4, "hits": 5, "misses": 6,
+                            "oracle_computes": 7, "input_computes": 8},
+               "exe_cache": {"entries": 9, "hits": 10, "misses": 11}}]
+    report = report_from_events(events)
+    assert report["io_cache"]["oracle_computes"] == 7
+    text = format_report(report)
+    assert "io cache: 5 hits / 6 misses (7 oracle computes)" in text
+    assert "exe cache: 10 hits / 11 misses (9 compiled)" in text
+
+
+def test_report_tolerates_logs_without_fastpath_stats():
+    events = [{"event": "campaign_done",
+               "cache": {"entries": 0, "hits": 0, "misses": 0}}]
+    report = report_from_events(events)
+    assert report["io_cache"] is None and report["exe_cache"] is None
+    assert "io cache" not in format_report(report)

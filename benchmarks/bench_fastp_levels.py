@@ -1,13 +1,37 @@
-"""Paper Fig. 2 — iterative-refinement fast_p per KernelBench level.
+"""Paper Fig. 2 — refinement fast_p per KernelBench level, now with a
+population-search arm.
 
-Rows: fastp/<config>/L<level>/p<threshold>, value = fast_p fraction
-(us_per_call column carries the mean best model-time in µs for the level).
+Rows: ``fastp/<config>/L<level>/p<threshold>`` with the fast_p fraction in
+the derived column (us_per_call carries the mean best model-time in µs for
+the level), plus ``iters/<config>/L<level>`` with the mean iterations (or
+PBT generations) to the first correct verification.
 
-Runs on the campaign runner: one verification cache is shared across both
-configs and all levels, so candidates the single-shot and iterative configs
-both visit (e.g. every iteration-0 initial candidate) verify exactly once.
+Configs: ``single_shot`` (iteration 0 only), ``iterative`` (the default
+single-lineage refinement loop), and ``pbt`` (population-based search,
+K=4 × 5 generations — same per-workload verification budget class as
+iterative's 5 iterations × 4-wide mutation neighborhoods).
+
+Runs on the campaign runner: one verification cache is shared across all
+configs and levels, so candidates several configs visit (e.g. every
+initial candidate) verify exactly once.
+
+Standalone CLI (from the repo root)::
+
+  PYTHONPATH=src python -m benchmarks.bench_fastp_levels --smoke \
+      --json BENCH_pbt.json             # CI fast lane (level 1, 2 gens)
+  PYTHONPATH=src python -m benchmarks.bench_fastp_levels \
+      --json BENCH_pbt.json             # full small suite, all levels
+
+``--smoke`` trims to level 1 with shortened configs (iterative: 2
+iterations; pbt: K=4 × 2 generations) and gates on the PBT arm matching
+the iterative arm's fast_1 — the CI regression tripwire for the
+population-search path.
 """
 from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
 
 from repro.campaign import VerificationCache, run_campaign
 from repro.core import LoopConfig, fast_p, kernelbench
@@ -17,23 +41,99 @@ from benchmarks.common import Row, CAMPAIGN_WORKERS, campaign_finals
 CONFIGS = {
     "single_shot": LoopConfig(single_shot=True),
     "iterative": LoopConfig(num_iterations=5),
+    "pbt": LoopConfig(search="pbt", population=4, generations=5),
+}
+# CI fast-lane shapes: same search modes, budget cut to keep the lane quick.
+SMOKE_CONFIGS = {
+    "iterative": LoopConfig(num_iterations=2),
+    "pbt": LoopConfig(search="pbt", population=4, generations=2),
 }
 THRESHOLDS = (0.0, 1.0, 1.5, 2.0)
 
 
-def run(small: bool = True):
-    rows: list[Row] = []
+def _mean(xs: List[float]) -> Optional[float]:
+    return sum(xs) / len(xs) if xs else None
+
+
+def run(small: bool = True, smoke: bool = False,
+        json_path: Optional[str] = None) -> List[Row]:
+    configs = SMOKE_CONFIGS if smoke else CONFIGS
+    levels = (1,) if smoke else (1, 2, 3)
+    rows: List[Row] = []
+    report: Dict[str, Dict] = {}
     cache = VerificationCache()
-    for cname, cfg in CONFIGS.items():
-        for level in (1, 2, 3):
+    for cname, cfg in configs.items():
+        report[cname] = {}
+        for level in levels:
             wls = kernelbench.suite(level, small=small)
             result = run_campaign(wls, cfg, cache=cache,
                                   max_workers=CAMPAIGN_WORKERS)
             finals = campaign_finals(result)
             times = [r.model_time_s for r in finals
                      if r.correct and r.model_time_s]
-            mean_us = (sum(times) / len(times) * 1e6) if times else 0.0
+            mean_us = (_mean(times) or 0.0) * 1e6
+            iters = [r.iters_to_correct for r in result.runs
+                     if r.iters_to_correct is not None]
+            curve = {f"{p:g}": round(fast_p(finals, p), 3)
+                     for p in THRESHOLDS}
+            report[cname][f"L{level}"] = {
+                "n": len(finals),
+                "fast_p": curve,
+                "mean_best_model_time_us": round(mean_us, 3),
+                "mean_iters_to_correct": _mean(iters),
+            }
             for p in THRESHOLDS:
                 rows.append((f"fastp/{cname}/L{level}/p{p}", mean_us,
                              f"{fast_p(finals, p):.3f}"))
+            mit = _mean(iters)
+            rows.append((f"iters/{cname}/L{level}", mean_us,
+                         f"{mit:.2f}" if mit is not None else "none"))
+    if json_path:
+        payload = {"bench": "fastp_levels",
+                   "suite": "small" if small else "full",
+                   "smoke": smoke,
+                   "cache": cache.stats(),
+                   "configs": report}
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     return rows
+
+
+def _fast1(rows: List[Row], cname: str, level: int = 1) -> float:
+    return float(next(d for n, _, d in rows
+                      if n == f"fastp/{cname}/L{level}/p1.0"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fast_p per level: single-shot vs iterative vs "
+                    "population search")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast-lane mode: level 1 only, 2 iterations / "
+                         "2 generations, with a pbt-vs-iterative fast_1 gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the full report as JSON (e.g. "
+                         "BENCH_pbt.json)")
+    ap.add_argument("--full-size", action="store_true",
+                    help="full-size workloads (slow on CPU)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    rows = run(small=not args.full_size, smoke=args.smoke,
+               json_path=args.json)
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}", flush=True)
+    if args.smoke:
+        pbt, it = _fast1(rows, "pbt"), _fast1(rows, "iterative")
+        # population search must not regress the single-lineage loop on the
+        # smoke suite — both are deterministic, so this is a stable gate
+        if pbt < it:
+            print(f"FAIL: pbt fast_1 {pbt} < iterative {it}", flush=True)
+            return 1
+        print(f"# ok: pbt fast_1 {pbt} >= iterative {it}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

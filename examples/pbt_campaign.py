@@ -1,0 +1,70 @@
+"""Run a population-based (PBT-style) synthesis campaign.
+
+``LoopConfig(search="pbt")`` replaces the single-lineage refinement loop
+with K candidate lineages per workload (DESIGN.md §10): each generation
+evaluates all members through one batched verification, truncation-selects
+by speedup tier, exploit-copies winners' tiling params into losers, and
+explores via model-ranked platform-legal mutations. Every generation is
+journaled to the event log, so the search is deterministic under a fixed
+seed and resumable mid-generation — kill this script halfway and run it
+again: completed generations replay from the log and their verifications
+are 100% cache hits.
+
+Usage::
+
+  PYTHONPATH=src python examples/pbt_campaign.py [log.jsonl]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.campaign import Campaign, CampaignConfig, VerificationCache
+from repro.core import LoopConfig, kernelbench
+
+
+def main() -> None:
+    log_path = sys.argv[1] if len(sys.argv) > 1 else "pbt-example.jsonl"
+    workloads = kernelbench.suite(1, small=True)
+
+    cfg = CampaignConfig(
+        loop=LoopConfig(search="pbt", population=4, generations=3, seed=7),
+        max_workers=4,
+        log_path=log_path,
+        resume=True,
+    )
+    campaign = Campaign(workloads, cfg, cache=VerificationCache())
+    result = campaign.run()
+
+    print(f"{len(result.runs)} workloads: "
+          f"{result.n_skipped} resumed from {log_path}, "
+          f"{result.n_failed} failed")
+    print(f"cache: {result.cache.stats()}")
+    print()
+    print(campaign.report_text())
+
+    # What the journal recorded: per-generation winners and the
+    # exploit/explore decisions their losers made.
+    print("\ngeneration journal (first workload):")
+    with open(log_path) as fh:
+        events = [json.loads(line) for line in fh]
+    gens = [ev for ev in events if ev.get("event") == "generation_done"
+            and ev["workload"] == workloads[0].name]
+    for ev in gens:
+        moves = [f"{m['lineage']}<-{m['exploited_from']}"
+                 f"({m['explored'] or 'copy'})"
+                 for m in ev["members"] if m["origin"] == "exploit"]
+        print(f"  gen {ev['generation']}: winners={ev['winners']} "
+              f"moves={moves or '(none)'}")
+
+    # Re-run the identical campaign against the same cache: every member
+    # of every generation is a verification-cache hit.
+    before = result.cache.misses
+    Campaign(workloads, CampaignConfig(loop=cfg.loop, max_workers=4),
+             cache=result.cache).run()
+    print(f"\nre-run new verifications: {result.cache.misses - before} "
+          "(the whole search replayed from cache)")
+
+
+if __name__ == "__main__":
+    main()

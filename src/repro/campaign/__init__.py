@@ -13,8 +13,12 @@ from repro.core.evalio import (  # noqa: F401 — fast-path cache layers
     ExecutableCache, WorkloadIOCache,
 )
 from repro.campaign.events import (  # noqa: F401
-    EventLog, completed_workloads, iteration_event, result_from_dict,
-    result_to_dict, warm_cache,
+    EventLog, completed_workloads, generation_events, iteration_event,
+    result_from_dict, result_to_dict, warm_cache,
+)
+from repro.campaign.population import (  # noqa: F401
+    Member, PBTOutcome, evaluate_generation, evolve, generation_event,
+    init_population, member_score, run_workload_pbt, truncation_split,
 )
 from repro.campaign.report import (  # noqa: F401
     FAST_P_THRESHOLDS, distinct_loop_configs, format_report,

@@ -5,6 +5,7 @@ Examples::
 
   python -m repro.campaign --suite small
   python -m repro.campaign --suite small --level 2 --workers 8 --iters 5
+  python -m repro.campaign --search pbt --population 6 --generations 5
   python -m repro.campaign --suite small --platform gpu_sim
   python -m repro.campaign --suite small --platform gpu_sim \
       --transfer-from tpu_v5e                 # §6.2 transfer sweep
@@ -69,6 +70,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "predicted mutations per optimization iteration "
                          "as one batch sharing inputs and the reference "
                          "oracle (default: 1 = classic loop)")
+    ap.add_argument("--search", choices=("lineage", "pbt"),
+                    default="lineage",
+                    help="candidate search mode: the single-lineage "
+                         "refinement loop (default) or population-based "
+                         "search — K lineages per workload evolved by "
+                         "truncation selection + exploit/explore "
+                         "(repro.campaign.population)")
+    ap.add_argument("--population", type=int, default=None, metavar="K",
+                    help="(--search pbt) lineages per workload "
+                         "(default: 4)")
+    ap.add_argument("--generations", type=int, default=None, metavar="G",
+                    help="(--search pbt) generations of the exploit/"
+                         "explore loop per workload (default: 4)")
     ap.add_argument("--platform", choices=available_platforms(),
                     default=DEFAULT_PLATFORM,
                     help="hardware target to synthesize for "
@@ -198,6 +212,28 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.fanout < 1:
         ap.error(f"--fanout must be >= 1, got {args.fanout} (1 = the "
                  "classic single-candidate loop)")
+    for flag, value in (("--population", args.population),
+                        ("--generations", args.generations)):
+        if value is not None and args.search != "pbt":
+            ap.error(f"{flag} only applies to --search pbt")
+    if args.search == "pbt":
+        if args.backend == "llm":
+            ap.error("--search pbt requires --backend template: population "
+                     "search exploit-copies and mutates declarative tiling "
+                     "params, which LLM callable candidates do not carry")
+        if args.single_shot:
+            ap.error("--search pbt cannot run --single-shot (a population "
+                     "generation is already one batch; use --generations 1 "
+                     "for a single generation)")
+        if args.fanout != 1:
+            ap.error("--fanout is the single-lineage loop's batch knob; "
+                     "--search pbt already verifies whole generations as "
+                     "batches")
+        if args.population is not None and args.population < 2:
+            ap.error(f"--population must be >= 2, got {args.population} "
+                     "(one member is just the single-lineage loop)")
+        if args.generations is not None and args.generations < 1:
+            ap.error(f"--generations must be >= 1, got {args.generations}")
     if args.record and args.replay:
         ap.error("--record and --replay are mutually exclusive (a replayed "
                  "session makes no live calls to record)")
@@ -233,11 +269,17 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
 
     workloads = kernelbench.suite(args.level, small=args.suite == "small")
+    pbt_kw = {}
+    if args.population is not None:
+        pbt_kw["population"] = args.population
+    if args.generations is not None:
+        pbt_kw["generations"] = args.generations
     loop = LoopConfig(num_iterations=args.iters,
                       single_shot=args.single_shot,
                       use_reference=args.reference,
                       use_profiling=args.profiling, seed=args.seed,
-                      platform=args.platform, fanout=args.fanout)
+                      platform=args.platform, fanout=args.fanout,
+                      search=args.search, **pbt_kw)
     cache = (VerificationCache.open(args.cache_path)
              if args.cache_path else VerificationCache())
     # fast-path caches (DESIGN.md §4), shared by every leg of whatever runs

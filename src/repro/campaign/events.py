@@ -8,6 +8,13 @@ One JSON object per line. Event kinds:
                    (workload, iteration, phase, candidate, state, timing,
                    cache_key, recommendation, recommendation_source,
                    platform)
+  generation_done  one per PBT generation (``--search pbt``): the full
+                   population state — member lineage ids, params, scores,
+                   exploit/explore provenance, serialized results — plus
+                   the selection outcome (winner/loser lineages). Written
+                   by :mod:`repro.campaign.population`; resume replays
+                   the journaled generation prefix with zero
+                   re-verification
   workload_done    terminal per-workload record with the serialized final
                    EvalResult and ``iters_to_correct`` (how many refinement
                    iterations ran before the first CORRECT verification —
@@ -186,15 +193,59 @@ def completed_workloads(events: Iterable[Dict[str, Any]],
 
 
 def warm_cache(cache, events: Iterable[Dict[str, Any]]) -> int:
-    """Pre-load a VerificationCache from logged iteration events; returns the
-    number of entries loaded."""
+    """Pre-load a VerificationCache from logged verification results —
+    ``iteration`` events and every member of ``generation_done`` events;
+    returns the number of entries loaded."""
     n = 0
     for ev in events:
-        if ev.get("event") != "iteration":
+        kind = ev.get("event")
+        if kind == "iteration":
+            result_dicts = [ev.get("result")]
+        elif kind == "generation_done":
+            result_dicts = [m.get("result")
+                            for m in ev.get("members", [])]
+        else:
             continue
-        key: Optional[str] = (ev.get("result") or {}).get("cache_key")
-        if not key:
-            continue
-        cache.warm(key, result_from_dict(ev["result"]))
-        n += 1
+        for rd in result_dicts:
+            key: Optional[str] = (rd or {}).get("cache_key")
+            if not key:
+                continue
+            cache.warm(key, result_from_dict(rd))
+            n += 1
     return n
+
+
+def generation_events(events: Iterable[Dict[str, Any]], workload: str,
+                      loop: Optional[Dict[str, Any]] = None,
+                      io: Any = None) -> List[Dict[str, Any]]:
+    """The journaled ``generation_done`` prefix of one workload's PBT
+    search: generations 0..n in order, from the LATEST run in the log.
+
+    A retried workload restarts at generation 0, so a fresh prefix
+    supersedes any earlier (possibly torn) one; a log is only resumable
+    up to its last *contiguous* generation index — anything after a gap
+    (torn tail) is discarded and re-run.
+
+    ``loop`` restricts to one loop config (compared through
+    :func:`normalize_loop`, like terminal events) and ``io`` to one io
+    signature — pass the live ``io_signature(wl)`` so the small/full
+    suites' shared workload names never masquerade as each other.
+    """
+    loop_n = normalize_loop(loop) if loop is not None else None
+    io_blob = json.dumps(io) if io is not None else None
+    prefix: List[Dict[str, Any]] = []
+    for ev in events:
+        if ev.get("event") != "generation_done" \
+                or ev.get("workload") != workload:
+            continue
+        if loop_n is not None \
+                and normalize_loop(ev.get("loop")) != loop_n:
+            continue
+        if io_blob is not None and json.dumps(ev.get("io")) != io_blob:
+            continue
+        g = ev.get("generation")
+        if g == 0:
+            prefix = [ev]
+        elif g == len(prefix):
+            prefix.append(ev)
+    return prefix

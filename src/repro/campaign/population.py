@@ -1,0 +1,586 @@
+"""Population-based candidate search (PBT) over the campaign fleet.
+
+The paper's refinement loop (§3) follows ONE candidate lineage per
+workload. This module keeps a *population*: K lineages per workload,
+evolved over G generations of the classic PBT exploit/explore cycle —
+the §6.2 cross-platform transfer insight (copy tiling knowledge between
+searches) applied *within* a platform, between members of one search.
+
+One generation is:
+
+  evaluate   one :func:`repro.core.verification.verify_batch` call over
+             all K members — shared inputs, shared reference oracle,
+             shared compiled executables, content-addressed results.
+             When a :class:`repro.campaign.scheduler.Scheduler` is
+             available the unique candidates are sharded across its
+             slots (re-entrant ``wait``, so a generation fanned out from
+             inside a workload job never deadlocks the pool).
+  select     truncation selection on ``member_score``: fast_p tier first
+             (speedup > 1.5, > 1.0, correct, failed), modeled time as
+             the tie-break. The bottom quarter are losers; failed
+             members are never winners.
+  exploit    each loser copies a winner's tiling params
+             (:func:`repro.core.candidates.copy_tiling` — validated
+             against ``space_for(op, platform)``, illegal values snap
+             legal).
+  explore    one mutation on top: the winner's journaled agent-G
+             recommendation when it is legal and changes the candidate
+             (recommendations propagate with the params they were made
+             for), else a seeded draw from the platform-legal mutation
+             operators.
+
+Every generation is journaled as a ``generation_done`` event (see
+:func:`generation_event`), so a killed PBT campaign resumes mid-search:
+restored generations replay from the journal with ZERO re-verification,
+and the continuation evolves from the last journaled generation exactly
+as the killed run would have. Determinism: all randomness flows from
+``random.Random`` seeded by ``(cfg.seed, generation)``; identical seeds
+produce identical generation journals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.campaign.events import result_from_dict, result_to_dict
+from repro.core import candidates as cand_mod
+from repro.core.analysis import RuleBasedAnalyzer
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
+from repro.core.refinement import (IterationLog, LoopConfig,
+                                   RefinementOutcome)
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.synthesis import TemplateSearchBackend
+from repro.core.verification import (cache_key, io_signature, verify,
+                                     verify_batch)
+from repro.core.workload import Workload
+from repro.platforms import resolve_platform
+
+# score tiers, best first: the fast_p thresholds a member clears. Tier
+# index = first threshold it fails; one past the end = not even correct.
+SELECTION_TIERS = (1.5, 1.0)
+FAILED_TIER = len(SELECTION_TIERS) + 1
+# truncation fraction: bottom quarter of the population are losers (and
+# symmetrically at most the top quarter — never more than half — are the
+# winners they exploit)
+TRUNCATION_FRAC = 0.25
+# explore draws uniformly from the top-N mutations by predicted modeled
+# time (when a ranking is available): greedy enough to hill-climb a
+# winner's neighborhood, wide enough to keep the population diverse
+EXPLORE_TOP = 3
+
+Score = Tuple[int, float]
+
+
+@dataclasses.dataclass(frozen=True)
+class Member:
+    """One lineage of the population. ``lineage`` ids are slot-stable
+    ("m0".."m{K-1}"): a loser that exploit-copies a winner keeps its own
+    id — the journal tracks where each slot's params came from via
+    ``origin``/``exploited_from``/``explored``, not by renaming slots."""
+    lineage: str
+    candidate: cand_mod.Candidate
+    origin: str = "init"                 # init | survivor | exploit | explore
+    exploited_from: Optional[str] = None  # winner lineage copied from
+    explored: Optional[str] = None        # mutation applied ("param->value")
+    # which analyzer produced the adopted recommendation ("rule" | "llm");
+    # None when explore drew from the mutation operators instead
+    recommendation_source: Optional[str] = None
+
+
+def member_score(result: EvalResult) -> Score:
+    """Selection score, lower is better: (fast_p tier, modeled time).
+
+    Tier 0: correct and speedup > 1.5; tier 1: speedup > 1.0; tier 2:
+    correct; tier 3 (``FAILED_TIER``): not correct. Ties inside a tier
+    break on modeled kernel time (wall time when the model has none;
+    +inf for failures, so a failed member never outranks anything).
+    """
+    if not result.correct:
+        return (FAILED_TIER, float("inf"))
+    tier = len(SELECTION_TIERS)
+    for t, threshold in enumerate(SELECTION_TIERS):
+        if (result.speedup or 0.0) > threshold:
+            tier = t
+            break
+    time_s = result.model_time_s
+    if time_s is None:
+        time_s = result.wall_time_s
+    return (tier, time_s if time_s is not None else float("inf"))
+
+
+def truncation_split(scores: Sequence[Score],
+                     frac: float = TRUNCATION_FRAC
+                     ) -> Tuple[List[int], List[int]]:
+    """Truncation selection: (winner indices, loser indices), each in
+    score order (best winner first, worst loser last).
+
+    The cut is ``max(1, min(int(n * frac), n // 2))`` members off each
+    end — PLUS every failed member (``FAILED_TIER``) on the loser side:
+    a failing candidate holds nothing worth keeping, so it is always up
+    for exploit/explore, not just when it lands in the bottom quarter.
+    Failed members are symmetrically excluded from the winner set — a
+    generation where everything failed has winners == [] and evolve
+    falls back to explore-only (every loser mutates its own params).
+    Winners and losers stay disjoint and selection stays monotone (every
+    winner's score <= every loser's; failed scores are maximal).
+    Populations below 2 have nothing to select over.
+    """
+    n = len(scores)
+    if n < 2:
+        return [], []
+    order = sorted(range(n), key=lambda i: (scores[i], i))
+    cut = max(1, min(int(n * frac), n // 2))
+    winners = [i for i in order[:cut] if scores[i][0] < FAILED_TIER]
+    loser_set = set(order[n - cut:])
+    loser_set.update(i for i in range(n) if scores[i][0] >= FAILED_TIER)
+    loser_set.difference_update(winners)
+    losers = [i for i in order if i in loser_set]
+    return winners, losers
+
+
+def _derive_rng(seed: int, generation: int) -> random.Random:
+    """One deterministic stream per (campaign seed, generation);
+    generation -1 is population init."""
+    return random.Random((int(seed) & 0xFFFFFFFF) * 1_000_003
+                         + generation + 1)
+
+
+def mutation_ranker(wl: Workload, platform,
+                    legal: Optional[Callable] = None
+                    ) -> Callable[[cand_mod.Candidate], List[str]]:
+    """A ranking closure for :func:`evolve`/:func:`init_population`:
+    candidate -> its workload-legal mutation names, best predicted
+    modeled time first (deterministic — ties break on name). Mutations
+    the performance model cannot score sort last, not out: on a
+    workload the model lacks, ranking degrades to name order instead of
+    an empty neighborhood."""
+    shapes = {name: tuple(dims) for name, dims, _ in io_signature(wl)}
+
+    def rank(cand: cand_mod.Candidate) -> List[str]:
+        muts = cand_mod.mutations(cand, platform)
+        scored = []
+        for name in sorted(muts):
+            if legal is not None and not legal(muts[name]):
+                continue
+            try:
+                t = cand_mod.model_time(muts[name], shapes, platform)
+            except Exception:  # noqa: BLE001 — op/shape combos it lacks
+                t = float("inf")
+            if t != t:   # NaN
+                t = float("inf")
+            scored.append((t, name))
+        scored.sort()
+        return [name for _, name in scored]
+
+    return rank
+
+
+def evolve(members: Sequence[Member], results: Sequence[EvalResult], *,
+           platform=None, seed: int = 0, generation: int = 0,
+           truncation: float = TRUNCATION_FRAC,
+           legal: Optional[Callable[[cand_mod.Candidate], bool]] = None,
+           recommendations: Optional[Dict[str, Any]] = None,
+           rank: Optional[Callable[[cand_mod.Candidate],
+                                   List[str]]] = None
+           ) -> List[Member]:
+    """One exploit/explore step: the next generation's members.
+
+    Non-losers survive with their params unchanged. Each loser
+    round-robins over the winners (best first): exploit = copy that
+    winner's tiling params (snapped legal), then explore = the winner's
+    agent-G recommendation (``recommendations`` maps winner lineage ->
+    :class:`repro.core.analysis.Recommendation`) when it is in-space,
+    workload-legal and actually changes the candidate — else one seeded
+    platform-legal mutation. When every member failed (no winners),
+    losers keep their own params and explore only.
+
+    ``rank`` (optional, see :func:`mutation_ranker`) orders a
+    candidate's legal mutation names best-predicted first; explore then
+    draws among the top ``EXPLORE_TOP`` — hill-climbing the exploited
+    winner's neighborhood instead of wandering it. Without it, explore
+    draws uniformly over all legal mutations.
+
+    Deterministic: the only randomness is ``random.Random`` seeded from
+    ``(seed, generation)``, drawing over deterministically-ordered
+    mutation names.
+    """
+    if len(members) != len(results):
+        raise ValueError(f"{len(members)} members vs {len(results)} results")
+    plat = resolve_platform(platform)
+    scores = [member_score(r) for r in results]
+    winners, losers = truncation_split(scores, truncation)
+    loser_rank = {idx: rank for rank, idx in enumerate(losers)}
+    recommendations = recommendations or {}
+    rng = _derive_rng(seed, generation)
+    nxt: List[Member] = []
+    for i, m in enumerate(members):
+        if i not in loser_rank:
+            nxt.append(dataclasses.replace(
+                m, origin="survivor", exploited_from=None, explored=None,
+                recommendation_source=None))
+            continue
+        rec = None
+        if winners:
+            w = members[winners[loser_rank[i] % len(winners)]]
+            cand = cand_mod.copy_tiling(m.candidate, w.candidate, plat)
+            origin, exploited_from = "exploit", w.lineage
+            rec = recommendations.get(w.lineage)
+        else:
+            cand, origin, exploited_from = m.candidate, "explore", None
+        explored = rec_source = None
+        if rec is not None and getattr(rec, "param", None) is not None:
+            adopted = rec.apply(cand)
+            if adopted.params != cand.params \
+                    and cand_mod.in_space(adopted, plat) \
+                    and (legal is None or legal(adopted)):
+                cand = adopted
+                explored = f"{rec.param}->{rec.value}"
+                rec_source = getattr(rec, "source", None)
+        if explored is None:
+            muts = cand_mod.mutations(cand, plat)
+            if rank is not None:
+                names = rank(cand)[:EXPLORE_TOP]
+            else:
+                names = [k for k in sorted(muts)
+                         if legal is None or legal(muts[k])]
+            if names:
+                explored = rng.choice(names)
+                cand = muts[explored]
+        nxt.append(Member(lineage=m.lineage, candidate=cand, origin=origin,
+                          exploited_from=exploited_from, explored=explored,
+                          recommendation_source=rec_source))
+    return nxt
+
+
+def init_population(wl: Workload, cfg: LoopConfig, *, agent, platform,
+                    legal: Optional[Callable] = None,
+                    rank: Optional[Callable] = None
+                    ) -> Tuple[Optional[List[Member]], Optional[str]]:
+    """Generation-0 members: m0 is the agent's initial candidate (so
+    reference hints flow in on warm transfer legs), m1..m{K-1} are its
+    workload-legal single-parameter mutations — best predicted first
+    when a ``rank`` closure (:func:`mutation_ranker`) is given, name
+    order otherwise — cycling when the space is smaller than the
+    population (duplicate members are fine — verify_batch dedupes them
+    by cache_key).
+
+    Returns ``(members, None)`` or ``(None, error)`` when the agent
+    cannot produce a declarative candidate (population search exploits
+    and mutates template params; an opaque callable has neither).
+    """
+    gen = agent.generate(wl, use_reference=cfg.use_reference)
+    if gen.failure or gen.candidate is None:
+        return None, (gen.failure or
+                      "agent produced no declarative candidate — population "
+                      "search needs template params to exploit and mutate")
+    base = gen.candidate
+    members = [Member("m0", base, origin="init")]
+    muts = cand_mod.mutations(base, platform)
+    if rank is not None:
+        names = rank(base)
+    else:
+        names = [k for k in sorted(muts) if legal is None or legal(muts[k])]
+    for i in range(1, cfg.population):
+        if names:
+            pick = names[(i - 1) % len(names)]
+            members.append(Member(f"m{i}", muts[pick], origin="init",
+                                  explored=pick))
+        else:
+            members.append(Member(f"m{i}", base, origin="init"))
+    return members, None
+
+
+def evaluate_generation(cands: Sequence[cand_mod.Candidate], wl: Workload,
+                        *, seed: int, cache=None, platform=None,
+                        io_cache: Optional[WorkloadIOCache] = None,
+                        exe_cache: Optional[ExecutableCache] = None,
+                        scheduler=None, label: str = "pbt"
+                        ) -> List[EvalResult]:
+    """Verify one generation; one result per candidate, in order.
+
+    The whole generation is one :func:`verify_batch` (shared inputs,
+    oracle, executables). With a scheduler and more than one unique
+    candidate, the unique set is sharded across the pool's slots —
+    nested ``wait`` yields the caller's slot, so generations fanned out
+    from inside a campaign's workload job stay within the existing slot
+    budget without deadlocking.
+
+    Fault isolation: if the batch path raises (a candidate poisoning the
+    whole batch), every member is re-verified singly and a member whose
+    verification still raises is scored ``RUNTIME_ERROR`` — the
+    generation always completes with K results, and a faulty member
+    simply lands in ``FAILED_TIER``.
+    """
+    plat = resolve_platform(platform)
+    if io_cache is None:
+        io_cache = WorkloadIOCache()   # batch path requires one
+    try:
+        if scheduler is not None and scheduler.max_workers > 1 \
+                and len(cands) > 1:
+            return _evaluate_sharded(cands, wl, seed=seed, cache=cache,
+                                     plat=plat, io_cache=io_cache,
+                                     exe_cache=exe_cache,
+                                     scheduler=scheduler, label=label)
+        return verify_batch(cands, wl, seed=seed, cache=cache,
+                            platform=plat, io_cache=io_cache,
+                            exe_cache=exe_cache)
+    except Exception:  # noqa: BLE001 — isolate the faulty member below
+        results: List[EvalResult] = []
+        for c in cands:
+            try:
+                results.append(verify(c, wl, seed=seed, cache=cache,
+                                      platform=plat, io_cache=io_cache,
+                                      exe_cache=exe_cache))
+            except Exception as exc:  # noqa: BLE001
+                results.append(EvalResult(
+                    ExecutionState.RUNTIME_ERROR,
+                    error=("verification raised: "
+                           f"{type(exc).__name__}: {exc}")))
+        return results
+
+
+def _evaluate_sharded(cands, wl, *, seed, cache, plat, io_cache, exe_cache,
+                      scheduler, label) -> List[EvalResult]:
+    """Shard the UNIQUE candidates round-robin over scheduler slots; each
+    shard is its own verify_batch against the shared caches. Duplicate
+    candidates resolve to their unique result afterwards, exactly like
+    verify_batch's own dedupe."""
+    uniq_idx: Dict[str, int] = {}
+    uniq: List[cand_mod.Candidate] = []
+    keys: List[str] = []
+    for c in cands:
+        k = cache_key(c, wl, seed, plat)
+        keys.append(k)
+        if k not in uniq_idx:
+            uniq_idx[k] = len(uniq)
+            uniq.append(c)
+    shards = min(scheduler.max_workers, len(uniq))
+    jobs = [scheduler.submit(
+        f"{label}.shard{i}",
+        lambda part=uniq[i::shards]: verify_batch(
+            part, wl, seed=seed, cache=cache, platform=plat,
+            io_cache=io_cache, exe_cache=exe_cache))
+        for i in range(shards)]
+    shard_results = scheduler.wait(jobs)
+    bad = next((r for r in shard_results if not r.ok), None)
+    if bad is not None:
+        # surfaces to evaluate_generation's fallback, which isolates the
+        # faulty member; the other shards' results are already cached, so
+        # the fallback re-verifies them for free
+        raise RuntimeError(f"generation shard failed: {bad.error}")
+    uniq_results: List[Optional[EvalResult]] = [None] * len(uniq)
+    for i, jr in enumerate(shard_results):
+        for j, r in enumerate(jr.value):
+            uniq_results[i + j * shards] = r
+    return [uniq_results[uniq_idx[k]] for k in keys]
+
+
+def _score_record(s: Score) -> Dict[str, Any]:
+    return {"tier": s[0],
+            "time_s": None if s[1] == float("inf") else s[1]}
+
+
+def member_record(m: Member, r: EvalResult, s: Score) -> Dict[str, Any]:
+    """One member's journal record. Each member gets its OWN dicts even
+    when verify_batch deduped it onto a shared result object — per-member
+    lineage attribution (lineage/origin/exploited_from/explored) must stay
+    distinct in the journal regardless of result sharing."""
+    return {
+        "lineage": m.lineage,
+        "origin": m.origin,
+        "exploited_from": m.exploited_from,
+        "explored": m.explored,
+        "recommendation_source": m.recommendation_source,
+        "params": dict(m.candidate.params),
+        "score": _score_record(s),
+        "state": r.state.value,
+        "result": result_to_dict(r),
+    }
+
+
+def generation_event(wl: Workload, loop: Dict[str, Any], *,
+                     generation: int, seed: int, platform: str,
+                     members: Sequence[Member],
+                     results: Sequence[EvalResult],
+                     scores: Sequence[Score],
+                     winners: Sequence[int], losers: Sequence[int]
+                     ) -> Dict[str, Any]:
+    """The ``generation_done`` JSONL event: the full population state of
+    one generation — member lineages, params, scores, exploit/explore
+    provenance, serialized results (with cache keys — what resume
+    pre-warms the verification cache from), and the selection outcome."""
+    return {
+        "event": "generation_done",
+        "workload": wl.name,
+        "level": wl.level,
+        "platform": platform,
+        "loop": dict(loop),
+        "io": io_signature(wl),
+        "generation": generation,
+        "seed": seed,
+        "population": len(members),
+        "winners": [members[i].lineage for i in winners],
+        "losers": [members[i].lineage for i in losers],
+        "members": [member_record(m, r, s)
+                    for m, r, s in zip(members, results, scores)],
+    }
+
+
+def _restore(wl: Workload, ev: Dict[str, Any]
+             ) -> Tuple[List[Member], List[EvalResult]]:
+    """Members + results of one journaled generation — no verification."""
+    members = [Member(lineage=mr["lineage"],
+                      candidate=cand_mod.Candidate(wl.op,
+                                                   dict(mr["params"])),
+                      origin=mr.get("origin", "survivor"),
+                      exploited_from=mr.get("exploited_from"),
+                      explored=mr.get("explored"),
+                      recommendation_source=mr.get("recommendation_source"))
+               for mr in ev["members"]]
+    results = [result_from_dict(mr["result"]) for mr in ev["members"]]
+    return members, results
+
+
+@dataclasses.dataclass
+class PBTOutcome(RefinementOutcome):
+    """A population search's outcome. ``logs`` carries one per-generation
+    IterationLog (phase "pbt", the generation's best member) so campaign
+    plumbing built on RefinementOutcome — ``iterations_to_correct``,
+    reports, transfer hint harvesting via ``best_candidate`` — works
+    unchanged; ``generations`` carries the full per-generation journal
+    records (the same dicts written to the EventLog)."""
+    generations: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
+
+
+def run_workload_pbt(wl: Workload, cfg: LoopConfig, *,
+                     agent=None, analyzer=None, cache=None,
+                     on_generation=None, io_cache=None, exe_cache=None,
+                     scheduler=None, prior_events=None) -> PBTOutcome:
+    """Population-based search for one workload (``cfg.search == "pbt"``).
+
+    ``on_generation`` (optional) receives each ``generation_done`` event
+    dict the moment the generation completes — the campaign runner
+    journals generations through it, so a run killed mid-search keeps
+    every generation it paid for.
+
+    ``prior_events`` (optional) is the journaled ``generation_done``
+    prefix of an earlier run of this exact search (see
+    :func:`repro.campaign.events.generation_events`): those generations
+    are restored — members, scores, best — with zero re-verification,
+    and the search continues from the next generation index,
+    deterministically identical to the run that was killed.
+
+    ``scheduler`` (optional) fans each generation's unique candidates
+    across the pool (see :func:`evaluate_generation`).
+    """
+    platform = resolve_platform(cfg.platform)
+    if cfg.population < 2:
+        raise ValueError(f"PBT needs population >= 2, got {cfg.population} "
+                         "(one member is just the single-lineage loop)")
+    if cfg.generations < 1:
+        raise ValueError(
+            f"PBT needs generations >= 1, got {cfg.generations}")
+    agent = agent or TemplateSearchBackend(platform=platform)
+    analyzer = analyzer or RuleBasedAnalyzer(platform=platform)
+    loop_dict = dataclasses.asdict(cfg)
+    legal_probe = getattr(agent, "_legal", None)
+    legal = (None if legal_probe is None
+             else (lambda c: legal_probe(c, wl)))
+    rank = mutation_ranker(wl, platform, legal)
+
+    logs: List[IterationLog] = []
+    records: List[Dict[str, Any]] = []
+    best: Optional[EvalResult] = None
+    best_cand: Optional[cand_mod.Candidate] = None
+
+    def bookkeep(members, results, scores, g, seed):
+        """Per-generation IterationLog (the generation's best member) +
+        global best tracking."""
+        nonlocal best, best_cand
+        top = min(range(len(members)), key=lambda i: (scores[i], i))
+        logs.append(IterationLog(
+            iteration=g, phase="pbt",
+            candidate_desc=members[top].candidate.describe(),
+            result=results[top], candidate=members[top].candidate,
+            seed=seed))
+        r = results[top]
+        if r.correct and (best is None or (r.model_time_s or 1e9) <
+                          (best.model_time_s or 1e9)):
+            best, best_cand = r, members[top].candidate
+
+    def recommend(members, results, winners) -> Dict[str, Any]:
+        """Agent-G recommendations for the winners (profiling mode only):
+        winner lineage -> Recommendation. These propagate to the losers
+        that exploit that winner — the two-agent loop applied to a
+        population instead of one candidate."""
+        recs: Dict[str, Any] = {}
+        if not cfg.use_profiling:
+            return recs
+        for i in winners:
+            r = results[i]
+            if r.correct and r.profile:
+                try:
+                    recs[members[i].lineage] = analyzer.analyze(r.profile)
+                except Exception:  # noqa: BLE001 — advice, not a dependency
+                    continue
+        return recs
+
+    # -- restore journaled generations (resume mid-search) ------------------
+    members: Optional[List[Member]] = None
+    results: List[EvalResult] = []
+    start_gen = 0
+    for ev in (prior_events or []):
+        members, results = _restore(wl, ev)
+        scores = [member_score(r) for r in results]
+        bookkeep(members, results, scores, ev["generation"], ev.get("seed"))
+        records.append(ev)
+        start_gen = ev["generation"] + 1
+
+    if members is None:
+        members, err = init_population(wl, cfg, agent=agent,
+                                       platform=platform, legal=legal,
+                                       rank=rank)
+        if err is not None:
+            res = EvalResult(ExecutionState.GENERATION_FAILURE, error=err)
+            return PBTOutcome(workload=wl.name, best=None,
+                              best_candidate=None,
+                              logs=[IterationLog(0, "pbt", None, res)],
+                              generations=[])
+    elif start_gen < cfg.generations:
+        # continue the restored search: evolve the last journaled
+        # generation exactly as the killed run would have
+        scores = [member_score(r) for r in results]
+        winners, _ = truncation_split(scores)
+        members = evolve(members, results, platform=platform,
+                         seed=cfg.seed, generation=start_gen - 1,
+                         legal=legal, rank=rank,
+                         recommendations=recommend(members, results,
+                                                   winners))
+
+    for g in range(start_gen, cfg.generations):
+        seed = cfg.seed + g     # fresh inputs per generation (paper §7.3)
+        results = evaluate_generation(
+            [m.candidate for m in members], wl, seed=seed, cache=cache,
+            platform=platform, io_cache=io_cache, exe_cache=exe_cache,
+            scheduler=scheduler, label=f"pbt[{wl.name}].g{g}")
+        scores = [member_score(r) for r in results]
+        winners, losers = truncation_split(scores)
+        ev = generation_event(wl, loop_dict, generation=g, seed=seed,
+                              platform=platform.name, members=members,
+                              results=results, scores=scores,
+                              winners=winners, losers=losers)
+        records.append(ev)
+        if on_generation is not None:
+            on_generation(ev)
+        bookkeep(members, results, scores, g, seed)
+        if g + 1 < cfg.generations:
+            members = evolve(members, results, platform=platform,
+                             seed=cfg.seed, generation=g, legal=legal,
+                             rank=rank,
+                             recommendations=recommend(members, results,
+                                                       winners))
+
+    return PBTOutcome(workload=wl.name, best=best, best_candidate=best_cand,
+                      logs=logs, generations=records)

@@ -141,6 +141,12 @@ class Campaign:
         self.analyzer_factory = analyzer_factory or (
             lambda: RuleBasedAnalyzer(platform=plat))
         self.log = EventLog(cfg.log_path) if cfg.log_path else None
+        # raw replayed events (set by _load_previous): what PBT workloads
+        # restore their journaled generation prefix from
+        self._prior_events: List[Dict[str, Any]] = []
+        # the scheduler run() is currently executing on — PBT workloads fan
+        # their generations across it (re-entrant wait, same slot budget)
+        self._active_sched: Optional[Scheduler] = None
 
     # -- resume ------------------------------------------------------------
 
@@ -160,6 +166,7 @@ class Campaign:
         events = self.log.events()
         if not events:
             return {}
+        self._prior_events = events
         ev_mod.warm_cache(self.cache, events)
         return ev_mod.completed_workloads(
             events, loop=dataclasses.asdict(self.cfg.loop))
@@ -167,6 +174,8 @@ class Campaign:
     # -- one workload ------------------------------------------------------
 
     def _run_one(self, wl: Workload) -> RefinementOutcome:
+        if self.cfg.loop.search == "pbt":
+            return self._run_one_pbt(wl)
         on_iteration = None
         if self.log is not None:
             # journal each iteration the moment it completes: a campaign
@@ -180,6 +189,34 @@ class Campaign:
             analyzer=self.analyzer_factory(), cache=self.cache,
             on_iteration=on_iteration, io_cache=self.io_cache,
             exe_cache=self.exe_cache)
+
+    def _run_one_pbt(self, wl: Workload) -> RefinementOutcome:
+        """Population search for one workload: journal each generation as
+        it completes (so a killed campaign keeps its paid-for
+        generations), restore the journaled generation prefix on resume,
+        and fan generations across the campaign's own scheduler."""
+        from repro.campaign import population as pop_mod
+        prior = None
+        if self.cfg.resume and self._prior_events:
+            prior = ev_mod.generation_events(
+                self._prior_events, wl.name,
+                loop=dataclasses.asdict(self.cfg.loop),
+                io=verif_mod.io_signature(wl))
+        on_generation = self.log.append if self.log is not None else None
+        # generation fan-out shares the campaign's own thread pool
+        # (re-entrant wait). Under process isolation the workload job runs
+        # in a forked child where the scheduler is a mid-run copy —
+        # verify the generation in-process there instead.
+        sched = self._active_sched
+        if sched is not None and \
+                getattr(sched, "isolation", "thread") != "thread":
+            sched = None
+        return pop_mod.run_workload_pbt(
+            wl, self.cfg.loop, agent=self.agent_factory(),
+            analyzer=self.analyzer_factory(), cache=self.cache,
+            on_generation=on_generation, io_cache=self.io_cache,
+            exe_cache=self.exe_cache, scheduler=sched,
+            prior_events=prior)
 
     # -- campaign ----------------------------------------------------------
 
@@ -267,6 +304,7 @@ class Campaign:
             sched = self.scheduler or Scheduler(
                 max_workers=self.cfg.max_workers,
                 timeout_s=self.cfg.timeout_s)
+            self._active_sched = sched
             sched.run([(wl.name, (lambda wl=wl: self._run_one(wl)))
                        for wl in todo], on_result=record)
 

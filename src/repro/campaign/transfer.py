@@ -277,10 +277,15 @@ def run_transfer_sweep(workloads: Sequence[Workload], *,
             "analysis='llm' requires backend='llm': the LLM analyzer rides "
             "the LLM context's transport sessions; the template backend "
             "has none to offer")
+    base = loop or LoopConfig()
+    if base.search == "pbt" and backend == "llm":
+        raise ValueError(
+            "search='pbt' runs on declarative template candidates (tiling "
+            "params to exploit-copy and mutate); LLM callable candidates "
+            "carry neither — use backend='template' for population sweeps")
     if backend == "llm" and llm is None:
         from repro.llm import build_llm_context
         llm = build_llm_context()
-    base = loop or LoopConfig()
     cache = cache if cache is not None else VerificationCache()
     io_cache = io_cache if io_cache is not None else WorkloadIOCache()
     exe_cache = exe_cache if exe_cache is not None else ExecutableCache()

@@ -176,6 +176,29 @@ def mutations(cand: Candidate,
     return out
 
 
+def in_space(cand: Candidate, platform: PlatformLike = None) -> bool:
+    """True iff every param names a known axis and holds a platform-legal
+    value — the legality predicate population search applies before
+    adopting an analyzer recommendation into a member."""
+    space = space_for(cand.op, platform)
+    return all(k in space and v in space[k] for k, v in cand.params.items())
+
+
+def copy_tiling(dst: Candidate, src: Candidate,
+                platform: PlatformLike = None) -> Candidate:
+    """The PBT exploit step: ``dst`` with ``src``'s tile params (block_*,
+    chunk) copied over, validated against the platform-legal space — a
+    copied value outside it snaps to the largest legal choice below it.
+    Strategy axes (online, fused, form) stay ``dst``'s own; they are what
+    the explore step mutates."""
+    space = space_for(dst.op, platform)
+    p = dict(dst.params)
+    for k, v in src.params.items():
+        if _is_tile_key(k) and k in space:
+            p[k] = v
+    return Candidate(dst.op, _snap_to_space(dst.op, p, space))
+
+
 # ---------------------------------------------------------------------------
 # Materialization: candidate -> callable
 # ---------------------------------------------------------------------------

@@ -81,6 +81,15 @@ class LoopConfig:
     # loop. Only declarative (template) candidates fan out; LLM callables
     # verify singly regardless.
     fanout: int = 1
+    # Candidate-search mode. "lineage" (default) is the single-lineage
+    # refinement loop above; "pbt" maintains a population of `population`
+    # candidate lineages per workload and runs `generations` rounds of
+    # truncation selection + exploit/explore over them
+    # (repro.campaign.population). num_iterations is ignored under "pbt";
+    # population/generations are ignored under "lineage".
+    search: str = "lineage"
+    population: int = 4
+    generations: int = 4
 
 
 def _fanout_candidates(cand, wl, platform, agent, k: int,
@@ -141,7 +150,24 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
     its thresholds from its profile, and every verification is scored (and
     cache-addressed) against it. Explicitly passed agents/analyzers are
     used as-is — construct them with the same platform.
+
+    ``cfg.search`` selects the search mode: ``"lineage"`` runs the loop
+    below; ``"pbt"`` dispatches to
+    :func:`repro.campaign.population.run_workload_pbt` (population-based
+    search journals per *generation*, so ``on_iteration`` does not apply
+    there — campaign journaling goes through its ``on_generation`` hook).
     """
+    if cfg.search == "pbt":
+        # lazy import: repro.core must stay importable without the campaign
+        # layer (population lives there because it builds on verify_batch
+        # scheduling + event journaling)
+        from repro.campaign.population import run_workload_pbt
+        return run_workload_pbt(wl, cfg, agent=agent, analyzer=analyzer,
+                                cache=cache, io_cache=io_cache,
+                                exe_cache=exe_cache)
+    if cfg.search != "lineage":
+        raise ValueError(f"unknown search mode {cfg.search!r}; "
+                         "expected 'lineage' or 'pbt'")
     platform = resolve_platform(cfg.platform)
     agent = agent or TemplateSearchBackend(platform=platform)
     analyzer = analyzer or RuleBasedAnalyzer(platform=platform)

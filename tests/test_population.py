@@ -1,0 +1,549 @@
+"""Population-based search: selection/exploit/explore semantics, journal
+determinism, EventLog resume with zero re-verification, fault injection
+(a member that raises inside verify_batch), shared-cache-key lineage
+attribution, and the CLI/engine validation surface."""
+import json
+
+import pytest
+
+from repro.campaign import (Campaign, CampaignConfig, EventLog, Scheduler,
+                            VerificationCache)
+from repro.campaign import events as ev_mod
+from repro.campaign import population as pop
+from repro.campaign.__main__ import main
+from repro.campaign.matrix import run_transfer_matrix
+from repro.campaign.transfer import run_transfer_sweep
+from repro.core import LoopConfig
+from repro.core import candidates as cand_mod
+from repro.core.analysis import Recommendation
+from repro.core.refinement import run_workload
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.workload import Workload, randn
+
+
+def _tiny_workload(name="T1/swish", op="swish", rows=8, lanes=512):
+    from repro.kernels import ref
+    return Workload(
+        name=name, level=1, op=op,
+        ref_fn=lambda x: ref.swish(x),
+        input_fn=lambda rng: {"x": randn(rng, (rows, lanes))},
+        input_shapes={"x": (rows, lanes)})
+
+
+def _res(speedup=None, correct=True, t=1.0):
+    """Fabricated EvalResult: ``speedup`` x faster than baseline when
+    correct, NUMERIC_MISMATCH otherwise."""
+    if not correct:
+        return EvalResult(ExecutionState.NUMERIC_MISMATCH, error="mismatch")
+    return EvalResult(ExecutionState.CORRECT, model_time_s=t,
+                      baseline_model_time_s=(speedup or 1.0) * t)
+
+
+def _members(params_list, op="swish"):
+    return [pop.Member(f"m{i}", cand_mod.Candidate(op, dict(p)))
+            for i, p in enumerate(params_list)]
+
+
+def _strip_volatile(ev):
+    """A generation event with wall-clock noise removed: everything left
+    is deterministic under a fixed seed."""
+    ev = json.loads(json.dumps(ev))
+    for m in ev["members"]:
+        m["result"].pop("wall_time_s", None)
+        (m["result"].get("profile") or {}).pop("phase_s", None)
+    return ev
+
+
+# ---------------------------------------------------------------------------
+# Selection: member_score and truncation_split
+# ---------------------------------------------------------------------------
+
+
+def test_member_score_tiers_and_tie_break():
+    assert pop.member_score(_res(speedup=2.0)) == (0, 1.0)
+    assert pop.member_score(_res(speedup=1.2)) == (1, 1.0)
+    assert pop.member_score(_res(speedup=0.8)) == (2, 1.0)
+    assert pop.member_score(_res(correct=False)) == \
+        (pop.FAILED_TIER, float("inf"))
+    # inside a tier, faster modeled time wins
+    assert pop.member_score(_res(speedup=2.0, t=0.5)) < \
+        pop.member_score(_res(speedup=2.0, t=1.0))
+    # a failed member never outranks any correct one
+    assert pop.member_score(_res(speedup=0.1)) < \
+        pop.member_score(_res(correct=False))
+
+
+def test_truncation_split_monotone_and_disjoint():
+    scores = [pop.member_score(r) for r in
+              (_res(speedup=2.0), _res(speedup=1.2), _res(speedup=0.9),
+               _res(correct=False))]
+    winners, losers = pop.truncation_split(scores)
+    assert winners == [0]
+    assert 3 in losers                      # failed member is always a loser
+    assert not set(winners) & set(losers)
+    for w in winners:
+        for l in losers:
+            assert scores[w] <= scores[l]   # selection is monotone
+
+
+def test_truncation_split_all_failed_and_degenerate():
+    failed = [pop.member_score(_res(correct=False))] * 4
+    winners, losers = pop.truncation_split(failed)
+    assert winners == []
+    assert sorted(losers) == [0, 1, 2, 3]   # everyone is up for explore
+    assert pop.truncation_split([]) == ([], [])
+    assert pop.truncation_split([(0, 1.0)]) == ([], [])
+
+
+def test_failed_members_are_losers_even_outside_bottom_quarter():
+    # 1 winner, 3 failed, K=8: the bottom-quarter cut alone (2) would
+    # leave one failing member surviving untouched forever
+    scores = [pop.member_score(r) for r in
+              (_res(speedup=2.0), _res(correct=False), _res(correct=False),
+               _res(correct=False), _res(speedup=1.2), _res(speedup=1.1),
+               _res(speedup=1.05), _res(speedup=0.9))]
+    winners, losers = pop.truncation_split(scores)
+    assert winners == [0, 4]                 # n=8 -> cut=2, best two
+    assert {1, 2, 3} <= set(losers)
+
+
+# ---------------------------------------------------------------------------
+# Exploit/explore: copy_tiling, in_space, evolve
+# ---------------------------------------------------------------------------
+
+
+def test_copy_tiling_copies_tiles_snaps_and_keeps_strategy():
+    dst = cand_mod.Candidate("softmax", {"block_rows": 1, "online": False})
+    src = cand_mod.Candidate("softmax", {"block_rows": 64, "online": True})
+    out = cand_mod.copy_tiling(dst, src)
+    assert out.params["block_rows"] == 64      # tile copied
+    assert out.params["online"] is False       # strategy axis stays dst's
+    assert cand_mod.in_space(out)
+
+
+def test_in_space_rejects_unknown_axes_and_illegal_values():
+    assert cand_mod.in_space(
+        cand_mod.Candidate("swish", {"block_rows": 8, "block_lanes": 128}))
+    assert not cand_mod.in_space(
+        cand_mod.Candidate("swish", {"block_rows": 7}))
+    assert not cand_mod.in_space(
+        cand_mod.Candidate("swish", {"bogus_axis": 1}))
+
+
+def test_evolve_losers_exploit_winners_and_explore():
+    members = _members([
+        {"block_rows": 64, "block_lanes": 2048},    # winner
+        {"block_rows": 8, "block_lanes": 512},
+        {"block_rows": 8, "block_lanes": 128},
+        {"block_rows": 1, "block_lanes": 128},      # failed -> loser
+    ])
+    results = [_res(speedup=2.0), _res(speedup=1.2, t=1.0),
+               _res(speedup=1.1, t=2.0), _res(correct=False)]
+    nxt = pop.evolve(members, results, seed=3, generation=0)
+    assert len(nxt) == len(members)
+    assert [m.lineage for m in nxt] == ["m0", "m1", "m2", "m3"]
+    # survivors keep their params
+    for i in (0, 1, 2):
+        assert nxt[i].origin == "survivor"
+        assert nxt[i].candidate.params == members[i].candidate.params
+    # the loser exploited the winner (tiling copied) then explored
+    loser = nxt[3]
+    assert loser.origin == "exploit"
+    assert loser.exploited_from == "m0"
+    assert loser.explored is not None
+    assert cand_mod.in_space(loser.candidate)
+    # one mutation away from the winner's tiling: exactly one param of the
+    # exploited copy differs
+    base = cand_mod.copy_tiling(members[3].candidate, members[0].candidate)
+    diff = [k for k in loser.candidate.params
+            if loser.candidate.params[k] != base.params.get(k)]
+    assert len(diff) == 1
+
+
+def test_evolve_is_deterministic_per_seed():
+    members = _members([{"block_rows": 64, "block_lanes": 2048},
+                        {"block_rows": 1, "block_lanes": 128}])
+    results = [_res(speedup=2.0), _res(correct=False)]
+    a = pop.evolve(members, results, seed=11, generation=2)
+    b = pop.evolve(members, results, seed=11, generation=2)
+    assert a == b
+
+
+def test_evolve_all_failed_explores_every_member():
+    members = _members([{"block_rows": 1, "block_lanes": 128},
+                        {"block_rows": 8, "block_lanes": 128},
+                        {"block_rows": 8, "block_lanes": 512}])
+    results = [_res(correct=False)] * 3
+    nxt = pop.evolve(members, results, seed=0, generation=1)
+    for before, after in zip(members, nxt):
+        assert after.origin == "explore"
+        assert after.exploited_from is None
+        assert after.explored is not None
+        assert after.candidate.params != before.candidate.params
+        assert cand_mod.in_space(after.candidate)
+
+
+def test_evolve_propagates_winner_recommendation():
+    members = _members([{"block_rows": 64, "block_lanes": 2048},
+                        {"block_rows": 1, "block_lanes": 128}])
+    results = [_res(speedup=2.0), _res(correct=False)]
+    rec = Recommendation(text="shrink lanes", param="block_lanes",
+                         value=512, source="rule")
+    nxt = pop.evolve(members, results, seed=0, generation=0,
+                     recommendations={"m0": rec})
+    loser = nxt[1]
+    assert loser.origin == "exploit" and loser.exploited_from == "m0"
+    assert loser.explored == "block_lanes->512"
+    assert loser.recommendation_source == "rule"
+    assert loser.candidate.params["block_lanes"] == 512
+    assert loser.candidate.params["block_rows"] == 64   # exploited tiling
+
+
+def test_evolve_ignores_recommendation_outside_space():
+    members = _members([{"block_rows": 64, "block_lanes": 2048},
+                        {"block_rows": 1, "block_lanes": 128}])
+    results = [_res(speedup=2.0), _res(correct=False)]
+    rec = Recommendation(text="bogus", param="block_lanes", value=7,
+                         source="llm")
+    nxt = pop.evolve(members, results, seed=0, generation=0,
+                     recommendations={"m0": rec})
+    assert nxt[1].recommendation_source is None   # fell back to mutation
+    assert cand_mod.in_space(nxt[1].candidate)
+
+
+# ---------------------------------------------------------------------------
+# run_workload dispatch + end-to-end search
+# ---------------------------------------------------------------------------
+
+
+def test_run_workload_dispatches_on_search():
+    wl = _tiny_workload()
+    out = run_workload(wl, LoopConfig(search="pbt", population=2,
+                                      generations=1))
+    assert isinstance(out, pop.PBTOutcome)
+    with pytest.raises(ValueError, match="unknown search"):
+        run_workload(wl, LoopConfig(search="genetic"))
+    with pytest.raises(ValueError, match="population"):
+        run_workload(wl, LoopConfig(search="pbt", population=1))
+    with pytest.raises(ValueError, match="generations"):
+        run_workload(wl, LoopConfig(search="pbt", generations=0))
+
+
+def test_pbt_search_end_to_end():
+    wl = _tiny_workload()
+    events = []
+    out = pop.run_workload_pbt(
+        wl, LoopConfig(search="pbt", population=3, generations=2),
+        on_generation=events.append)
+    assert out.best is not None and out.best.correct
+    assert [ev["generation"] for ev in events] == [0, 1]
+    assert out.generations == events
+    # one IterationLog per generation keeps iterations_to_correct and the
+    # campaign report working unchanged
+    assert [log.iteration for log in out.logs] == [0, 1]
+    assert all(log.phase == "pbt" for log in out.logs)
+    for ev in events:
+        assert ev["population"] == 3
+        assert sorted(m["lineage"] for m in ev["members"]) == \
+            ["m0", "m1", "m2"]
+        for m in ev["members"]:
+            assert cand_mod.in_space(cand_mod.Candidate(wl.op, m["params"]))
+        assert set(ev["winners"]) | set(ev["losers"]) <= \
+            {m["lineage"] for m in ev["members"]}
+        assert not set(ev["winners"]) & set(ev["losers"])
+
+
+def test_pbt_journal_deterministic_across_runs():
+    wl = _tiny_workload()
+    cfg = LoopConfig(search="pbt", population=3, generations=3, seed=7)
+    evs1, evs2 = [], []
+    pop.run_workload_pbt(wl, cfg, on_generation=evs1.append)
+    pop.run_workload_pbt(wl, cfg, on_generation=evs2.append)
+    assert [_strip_volatile(e) for e in evs1] == \
+        [_strip_volatile(e) for e in evs2]
+
+
+def test_pbt_generations_fan_across_scheduler():
+    wl = _tiny_workload(rows=64, lanes=2048)
+    sched = Scheduler(max_workers=3)
+    out = pop.run_workload_pbt(
+        wl, LoopConfig(search="pbt", population=4, generations=2),
+        scheduler=sched)
+    assert out.best is not None and out.best.correct
+    tele = sched.telemetry()
+    assert tele["running"] == 0                  # every slot reclaimed
+    assert tele["completed"] >= 2                # shards actually ran
+
+
+# ---------------------------------------------------------------------------
+# Shared cache_key after exploit-copying: lineage attribution stays distinct
+# ---------------------------------------------------------------------------
+
+
+def test_shared_cache_key_keeps_lineage_attribution(monkeypatch):
+    # tiny swish (8x512) has only 2 workload-legal mutations of the initial
+    # candidate, so K=5 necessarily holds duplicate members — the same
+    # dedupe that exploit-copying produces mid-search
+    wl = _tiny_workload()
+    calls = []                     # list.append is atomic across threads
+    real = cand_mod.materialize
+
+    def counting(c, **kw):
+        calls.append(1)
+        return real(c, **kw)
+
+    monkeypatch.setattr(cand_mod, "materialize", counting)
+    events = []
+    pop.run_workload_pbt(
+        wl, LoopConfig(search="pbt", population=5, generations=1),
+        on_generation=events.append)
+    members = events[0]["members"]
+    assert [m["lineage"] for m in members] == \
+        ["m0", "m1", "m2", "m3", "m4"]           # every member journaled
+    keys = [m["result"]["cache_key"] for m in members]
+    unique_params = {json.dumps(m["params"], sort_keys=True)
+                     for m in members}
+    assert len(unique_params) < len(members)      # duplicates exist...
+    assert len(set(keys)) == len(unique_params)   # ...and share cache keys
+    assert len(calls) == len(unique_params)       # verified once per unique
+    # duplicate members share the result but keep their own attribution
+    by_key = {}
+    for m in members:
+        by_key.setdefault(m["result"]["cache_key"], []).append(m)
+    shared = [ms for ms in by_key.values() if len(ms) > 1]
+    assert shared
+    for ms in shared:
+        assert len({m["lineage"] for m in ms}) == len(ms)
+        assert len({json.dumps(m["result"], sort_keys=True)
+                    for m in ms}) == 1
+
+
+# ---------------------------------------------------------------------------
+# EventLog: warm_cache + generation_events helpers
+# ---------------------------------------------------------------------------
+
+
+def _fake_generation(workload, g, keys, loop=None, io=None):
+    return {"event": "generation_done", "workload": workload,
+            "generation": g, "seed": g, "loop": loop, "io": io,
+            "winners": [], "losers": [],
+            "members": [{"lineage": f"m{i}", "params": {},
+                         "result": {"state": "correct", "cache_key": k}}
+                        for i, k in enumerate(keys)]}
+
+
+def test_warm_cache_loads_generation_members():
+    cache = VerificationCache()
+    n = ev_mod.warm_cache(cache, [_fake_generation("W", 0, ["k1", "k2"]),
+                                  _fake_generation("W", 1, ["k3"])])
+    assert n == 3
+    assert cache.get("k2") is not None and cache.get("k2").correct
+
+
+def test_generation_events_latest_complete_prefix():
+    evs = [_fake_generation("W", 0, ["a"]), _fake_generation("W", 1, ["b"]),
+           _fake_generation("W", 2, ["c"]),
+           # a second (retried) run of the same workload, killed after g1
+           _fake_generation("W", 0, ["d"]), _fake_generation("W", 1, ["e"]),
+           # noise: another workload, and a non-generation event
+           _fake_generation("X", 0, ["f"]), {"event": "workload_done"}]
+    prefix = ev_mod.generation_events(evs, "W")
+    assert [e["generation"] for e in prefix] == [0, 1]
+    assert prefix[0]["members"][0]["result"]["cache_key"] == "d"
+    # a torn log whose head is gone (no generation 0) is not resumable
+    assert ev_mod.generation_events(
+        [_fake_generation("W", 1, ["x"])], "W") == []
+
+
+def test_generation_events_filters_loop_and_io():
+    loop_a = {"search": "pbt", "population": 4}
+    loop_b = {"search": "pbt", "population": 6}
+    evs = [_fake_generation("W", 0, ["a"], loop=loop_a, io=[["x", [8], "f32"]]),
+           _fake_generation("W", 0, ["b"], loop=loop_b, io=[["x", [8], "f32"]])]
+    got = ev_mod.generation_events(evs, "W", loop=loop_a,
+                                   io=[["x", [8], "f32"]])
+    assert len(got) == 1
+    assert got[0]["members"][0]["result"]["cache_key"] == "a"
+    assert ev_mod.generation_events(evs, "W", loop=loop_a,
+                                    io=[["x", [16], "f32"]]) == []
+
+
+def test_normalize_loop_backfills_search_fields():
+    old = {"num_iterations": 5, "platform": "tpu_v5e"}
+    n = ev_mod.normalize_loop(old)
+    assert n["search"] == "lineage"
+    assert n["population"] == 4 and n["generations"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Campaign resume: restored generations re-verify NOTHING
+# ---------------------------------------------------------------------------
+
+
+def _replay_log(tmp_path, events, name="replayed.jsonl"):
+    log = EventLog(tmp_path / name)
+    for ev in events:
+        log.append(ev)
+    return log.path
+
+
+def test_pbt_campaign_resumes_with_zero_reverification(tmp_path,
+                                                       monkeypatch):
+    wl = _tiny_workload()
+    loop = LoopConfig(search="pbt", population=3, generations=2)
+    log = tmp_path / "c.jsonl"
+    res1 = Campaign([wl], CampaignConfig(loop=loop, log_path=log)).run()
+    assert res1.runs[0].final.correct
+    events = EventLog(log).events()
+    gens = [e for e in events if e["event"] == "generation_done"]
+    assert len(gens) == 2
+
+    # simulate a campaign killed after its last generation but before the
+    # terminal workload_done event was written
+    kept = [e for e in events
+            if e["event"] not in ("workload_done", "campaign_done")]
+    log2 = _replay_log(tmp_path, kept)
+    calls = []
+    real = cand_mod.materialize
+
+    def counting(c, **kw):
+        calls.append(1)
+        return real(c, **kw)
+
+    monkeypatch.setattr(cand_mod, "materialize", counting)
+    res2 = Campaign([wl], CampaignConfig(loop=loop, log_path=log2)).run()
+    run2 = res2.runs[0]
+    assert calls == []                            # ZERO re-verification
+    assert res2.cache.misses == 0                 # 100% cache hits
+    assert not run2.skipped and run2.final.correct
+    assert run2.final.cache_key == res1.runs[0].final.cache_key
+    assert run2.iters_to_correct == res1.runs[0].iters_to_correct
+    # generation index, member lineages, and scores all restored
+    assert run2.outcome.generations == gens
+
+
+def test_pbt_campaign_resumes_mid_generation(tmp_path, monkeypatch):
+    wl = _tiny_workload()
+    loop = LoopConfig(search="pbt", population=3, generations=3)
+    log = tmp_path / "c.jsonl"
+    Campaign([wl], CampaignConfig(loop=loop, log_path=log)).run()
+    gens = [e for e in EventLog(log).events()
+            if e["event"] == "generation_done"]
+    assert [e["generation"] for e in gens] == [0, 1, 2]
+
+    # kill mid-generation: the in-flight generation 2 never hit the log
+    log2 = _replay_log(tmp_path, gens[:2])
+    calls = []
+    real = cand_mod.materialize
+
+    def counting(c, **kw):
+        calls.append(1)
+        return real(c, **kw)
+
+    monkeypatch.setattr(cand_mod, "materialize", counting)
+    res2 = Campaign([wl], CampaignConfig(loop=loop, log_path=log2)).run()
+    gens2 = [e for e in EventLog(log2).events()
+             if e["event"] == "generation_done"]
+    assert [e["generation"] for e in gens2] == [0, 1, 2]
+    # the continuation is exactly the generation the killed run would have
+    # produced (deterministic evolve from the restored prefix)...
+    assert _strip_volatile(gens2[-1]) == _strip_volatile(gens[-1])
+    # ...and only that generation's unique members were verified
+    unique_last = {json.dumps(m["params"], sort_keys=True)
+                   for m in gens[-1]["members"]}
+    assert 0 < len(calls) <= len(unique_last)
+    assert res2.runs[0].final.correct
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: a member that raises inside verify_batch
+# ---------------------------------------------------------------------------
+
+
+def test_faulty_member_is_isolated_scored_failed_and_excluded(monkeypatch):
+    wl = _tiny_workload()
+    cfg = LoopConfig(search="pbt", population=3, generations=2)
+    # a clean run pins down generation 0's members (the search is
+    # deterministic); poison the m1 member's candidate for the real run
+    clean = []
+    pop.run_workload_pbt(wl, cfg, on_generation=clean.append)
+    poison = dict(clean[0]["members"][1]["params"])
+    assert poison != clean[0]["members"][0]["params"]
+
+    real_vb, real_v = pop.verify_batch, pop.verify
+
+    def poisoned_vb(cands, *a, **kw):
+        if any(c.params == poison for c in cands):
+            raise RuntimeError("injected batch fault")
+        return real_vb(cands, *a, **kw)
+
+    def poisoned_v(c, *a, **kw):
+        if c.params == poison:
+            raise RuntimeError("injected single fault")
+        return real_v(c, *a, **kw)
+
+    monkeypatch.setattr(pop, "verify_batch", poisoned_vb)
+    monkeypatch.setattr(pop, "verify", poisoned_v)
+
+    sched = Scheduler(max_workers=3)
+    events = []
+    out = pop.run_workload_pbt(wl, cfg, scheduler=sched,
+                               on_generation=events.append)
+
+    # the generation completed with a full population
+    ev = events[0]
+    assert len(ev["members"]) == 3
+    bad = [m for m in ev["members"] if m["params"] == poison]
+    assert len(bad) == 1
+    # the faulty member is scored failed and excluded from selection
+    assert bad[0]["state"] == "runtime_error"
+    assert bad[0]["score"]["tier"] == pop.FAILED_TIER
+    assert "verification raised" in bad[0]["result"]["error"]
+    assert bad[0]["lineage"] not in ev["winners"]
+    assert bad[0]["lineage"] in ev["losers"]
+    # the other members verified normally and the search still converged
+    good = [m for m in ev["members"] if m["params"] != poison]
+    assert all(m["state"] == "correct" for m in good)
+    assert out.best is not None and out.best.correct
+    # the scheduler slot the failing shard held was reclaimed
+    assert sched.telemetry()["running"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI + transfer-engine validation surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("argv", [
+    ["--population", "4"],
+    ["--generations", "2"],
+    ["--search", "pbt", "--backend", "llm"],
+    ["--search", "pbt", "--single-shot"],
+    ["--search", "pbt", "--fanout", "2"],
+    ["--search", "pbt", "--population", "1"],
+    ["--search", "pbt", "--generations", "0"],
+])
+def test_cli_rejects_invalid_pbt_combinations(argv):
+    with pytest.raises(SystemExit) as exc:
+        main(argv)
+    assert exc.value.code == 2
+
+
+def test_transfer_engines_reject_pbt_with_llm_backend():
+    loop = LoopConfig(search="pbt")
+    with pytest.raises(ValueError, match="pbt"):
+        run_transfer_sweep([], from_platform="tpu_v5e",
+                           to_platform="metal_m2", loop=loop, backend="llm")
+    with pytest.raises(ValueError, match="pbt"):
+        run_transfer_matrix([], ["tpu_v5e", "metal_m2"], loop=loop,
+                            backend="llm")
+
+
+@pytest.mark.slow
+def test_cli_pbt_campaign_end_to_end(tmp_path, capsys):
+    rc = main(["--search", "pbt", "--level", "1", "--population", "3",
+               "--generations", "2", "--workers", "2",
+               "--log", str(tmp_path / "pbt.jsonl")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "campaign[" in out and "fast_1" in out

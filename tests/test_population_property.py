@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on population-search invariants:
+size/lineage preservation, monotone truncation selection, space-legality
+of every exploited/explored member, and journal determinism under a
+fixed seed (what makes PBT record/replay and resume work)."""
+import json
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not vendored; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.campaign import population as pop
+from repro.core import LoopConfig
+from repro.core import candidates as cand_mod
+from repro.core.states import EvalResult, ExecutionState
+from repro.core.workload import Workload, randn
+from repro.platforms import available_platforms
+
+_OPS = sorted(cand_mod.SPACES)
+_PLATFORMS = available_platforms()
+
+
+@st.composite
+def _population(draw, min_size=2, max_size=8):
+    """(op, platform, members, results): K members with params drawn from
+    the platform-legal space and fabricated evaluation results."""
+    op = draw(st.sampled_from(_OPS))
+    platform = draw(st.sampled_from(_PLATFORMS))
+    space = cand_mod.space_for(op, platform)
+    k = draw(st.integers(min_size, max_size))
+    members, results = [], []
+    for i in range(k):
+        params = {key: draw(st.sampled_from(choices))
+                  for key, choices in space.items()}
+        members.append(pop.Member(f"m{i}", cand_mod.Candidate(op, params)))
+        correct = draw(st.booleans())
+        if correct:
+            t = draw(st.floats(1e-6, 10.0, allow_nan=False))
+            speedup = draw(st.floats(0.1, 5.0, allow_nan=False))
+            results.append(EvalResult(ExecutionState.CORRECT,
+                                      model_time_s=t,
+                                      baseline_model_time_s=speedup * t))
+        else:
+            results.append(EvalResult(ExecutionState.NUMERIC_MISMATCH,
+                                      error="mismatch"))
+    return op, platform, members, results
+
+
+@settings(max_examples=60, deadline=None)
+@given(_population(), st.integers(0, 2 ** 31 - 1), st.integers(0, 16))
+def test_evolve_preserves_population_size_and_lineages(drawn, seed, gen):
+    op, platform, members, results = drawn
+    nxt = pop.evolve(members, results, platform=platform, seed=seed,
+                     generation=gen)
+    assert len(nxt) == len(members)
+    assert [m.lineage for m in nxt] == [m.lineage for m in members]
+
+
+@settings(max_examples=60, deadline=None)
+@given(_population(), st.integers(0, 2 ** 31 - 1), st.integers(0, 16))
+def test_evolved_members_stay_space_legal(drawn, seed, gen):
+    op, platform, members, results = drawn
+    for m in pop.evolve(members, results, platform=platform, seed=seed,
+                        generation=gen):
+        assert cand_mod.in_space(m.candidate, platform)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_population(), st.integers(0, 2 ** 31 - 1), st.integers(0, 16))
+def test_evolve_is_deterministic_in_seed_and_generation(drawn, seed, gen):
+    op, platform, members, results = drawn
+    a = pop.evolve(members, results, platform=platform, seed=seed,
+                   generation=gen)
+    b = pop.evolve(members, results, platform=platform, seed=seed,
+                   generation=gen)
+    assert a == b
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just(True), st.floats(0.1, 5.0, allow_nan=False),
+                  st.floats(1e-6, 10.0, allow_nan=False)),
+        st.tuples(st.just(False), st.just(0.0), st.just(0.0))),
+    min_size=0, max_size=16))
+def test_truncation_selection_is_monotone_and_disjoint(items):
+    results = [EvalResult(ExecutionState.CORRECT, model_time_s=t,
+                          baseline_model_time_s=sp * t) if ok
+               else EvalResult(ExecutionState.NUMERIC_MISMATCH, error="x")
+               for ok, sp, t in items]
+    scores = [pop.member_score(r) for r in results]
+    winners, losers = pop.truncation_split(scores)
+    assert not set(winners) & set(losers)
+    assert set(winners) | set(losers) <= set(range(len(scores)))
+    for w in winners:
+        assert scores[w][0] < pop.FAILED_TIER    # failures never win
+        for l in losers:
+            assert scores[w] <= scores[l]        # monotone in score
+    # every failed member is a loser (nothing worth keeping)
+    for i, s in enumerate(scores):
+        if len(scores) >= 2 and s[0] >= pop.FAILED_TIER and i not in winners:
+            assert i in losers
+
+
+def _tiny_workload():
+    from repro.kernels import ref
+    return Workload(
+        name="P1/swish", level=1, op="swish",
+        ref_fn=lambda x: ref.swish(x),
+        input_fn=lambda rng: {"x": randn(rng, (8, 512))},
+        input_shapes={"x": (8, 512)})
+
+
+def _strip_volatile(ev):
+    ev = json.loads(json.dumps(ev))
+    for m in ev["members"]:
+        m["result"].pop("wall_time_s", None)
+        (m["result"].get("profile") or {}).pop("phase_s", None)
+    return ev
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 16), st.integers(2, 4))
+def test_identical_seeds_produce_identical_generation_journals(seed, k):
+    wl = _tiny_workload()
+    cfg = LoopConfig(search="pbt", population=k, generations=2, seed=seed)
+    evs1, evs2 = [], []
+    pop.run_workload_pbt(wl, cfg, on_generation=evs1.append)
+    pop.run_workload_pbt(wl, cfg, on_generation=evs2.append)
+    assert [_strip_volatile(e) for e in evs1] == \
+        [_strip_volatile(e) for e in evs2]
+    for ev in evs1:
+        assert ev["population"] == k
+        assert [m["lineage"] for m in ev["members"]] == \
+            [f"m{i}" for i in range(k)]

@@ -21,11 +21,21 @@ Standalone CLI (from the repo root)::
       --json BENCH_verify.json          # CI fast lane (level 1 subset)
   PYTHONPATH=src python -m benchmarks.bench_verify_throughput --matrix \
       --json BENCH_verify.json          # + matrix smoke wall-clock arm
+  PYTHONPATH=src python -m benchmarks.bench_verify_throughput --grad \
+      --smoke --json BENCH_grad.json    # fwd_bwd arm (grad verification)
 
 ``--matrix`` additionally runs the 2-platform transfer-matrix smoke twice —
 shared IO cache vs caches disabled — and reports the wall-clock win and the
 oracle-compute count (strictly below legs × workloads proves cross-leg
 sharing).
+
+``--grad`` switches to the training-shaped (``direction="fwd_bwd"``)
+throughput arm over the differentiable suite: per-candidate verification
+(no IO cache — every candidate re-draws the cotangent and recomputes the
+``jax.vjp`` oracle gradients) vs one ``verify_batch`` per workload with a
+shared :class:`WorkloadIOCache` (ONE cotangent draw and ONE oracle-gradient
+evaluation per workload).  The report carries per-workload pass counts so
+CI can surface how many gradient-checked candidates verified CORRECT.
 
 Harness rows (``python benchmarks/run.py --only verify_throughput``):
 ``verify_cold`` / ``verify_warm`` with verifications/sec and the speedup in
@@ -144,8 +154,80 @@ def _bench_matrix(small: bool) -> Dict:
     }
 
 
+def _bench_grad(small: bool, smoke: bool = False) -> Dict:
+    """The fwd_bwd throughput arm: per-candidate verification (no shared
+    caches — cotangent + oracle gradients recomputed for every candidate)
+    vs one batch per workload sharing them through the IO cache."""
+    workloads = kernelbench.suite(small=small, differentiable=True)
+    if smoke:
+        workloads = workloads[:2]
+    sets = {wl.name: candidate_list(wl) for wl in workloads}
+    n = sum(len(c) for c in sets.values())
+
+    wl0 = workloads[0]
+    verify(sets[wl0.name][0], wl0, seed=SEED, direction="fwd_bwd")
+
+    t0 = time.perf_counter()
+    for wl in workloads:
+        for cand in sets[wl.name]:
+            verify(cand, wl, seed=SEED, direction="fwd_bwd")
+    per_s = time.perf_counter() - t0
+
+    io_cache, exe_cache = WorkloadIOCache(), ExecutableCache()
+    pass_counts: Dict[str, Dict[str, int]] = {}
+    t0 = time.perf_counter()
+    for wl in workloads:
+        results = verify_batch(sets[wl.name], wl, seed=SEED,
+                               io_cache=io_cache, exe_cache=exe_cache,
+                               direction="fwd_bwd")
+        states: Dict[str, int] = {}
+        for r in results:
+            states[r.state.value] = states.get(r.state.value, 0) + 1
+        pass_counts[wl.name] = {
+            "n": len(results),
+            "correct": sum(1 for r in results if r.correct),
+            "states": states,
+        }
+    batch_s = time.perf_counter() - t0
+
+    return {
+        "n_workloads": len(workloads),
+        "workloads": [wl.name for wl in workloads],
+        "n_candidates": n,
+        "per_candidate_s": round(per_s, 3),
+        "batch_s": round(batch_s, 3),
+        "per_candidate_vps": round(n / per_s, 2),
+        "batch_vps": round(n / batch_s, 2),
+        "speedup": round(per_s / batch_s, 2),
+        "io_cache": io_cache.stats(),
+        "exe_cache": exe_cache.stats(),
+        # shared-cotangent proof: one grad-oracle evaluation per workload
+        "grad_oracle_computes": io_cache.stats()["grad_oracle_computes"],
+        "pass_counts": pass_counts,
+    }
+
+
 def run(small: bool = True, smoke: bool = False, matrix: bool = False,
-        json_path=None) -> List[Row]:
+        grad: bool = False, json_path=None) -> List[Row]:
+    if grad:
+        report = _bench_grad(small, smoke=smoke)
+        if json_path:
+            payload = {"bench": "verify_grad_throughput",
+                       "suite": "small" if small else "full",
+                       "smoke": smoke, **report}
+            with open(json_path, "w") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+        n = report["n_candidates"]
+        n_pass = sum(p["correct"] for p in report["pass_counts"].values())
+        return [
+            ("verify_grad_per", report["per_candidate_s"] / n * 1e6,
+             f"vps={report['per_candidate_vps']};n={n}"),
+            ("verify_grad_batch", report["batch_s"] / n * 1e6,
+             f"vps={report['batch_vps']};speedup={report['speedup']}x;"
+             f"pass={n_pass}/{n};"
+             f"grad_oracles={report['grad_oracle_computes']}"),
+        ]
     workloads = kernelbench.suite(1, small=small)
     if smoke:
         workloads = workloads[:3]
@@ -183,17 +265,41 @@ def main() -> int:
     ap.add_argument("--matrix", action="store_true",
                     help="also run the 2-platform matrix smoke with shared "
                          "caches vs disabled and report the wall-clock win")
+    ap.add_argument("--grad", action="store_true",
+                    help="fwd_bwd arm over the differentiable suite: "
+                         "per-candidate grad verification vs shared-"
+                         "cotangent batches (gate: batch >= 1.2x)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the full report as JSON (e.g. "
-                         "BENCH_verify.json)")
+                         "BENCH_verify.json / BENCH_grad.json)")
     ap.add_argument("--full-size", action="store_true",
                     help="full-size workloads (slow on CPU)")
     args = ap.parse_args()
     print("name,us_per_call,derived", flush=True)
     rows = run(small=not args.full_size, smoke=args.smoke,
-               matrix=args.matrix, json_path=args.json)
+               matrix=args.matrix, grad=args.grad, json_path=args.json)
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}", flush=True)
+    if args.grad:
+        batch = next(r for r in rows if r[0] == "verify_grad_batch")
+        derived = batch[2]
+        speedup = float(derived.split("speedup=")[1].split(";")[0]
+                        .rstrip("x"))
+        n_pass = int(derived.split("pass=")[1].split("/")[0])
+        # shared-cotangent batches must beat per-candidate grad checks,
+        # and at least one gradient-checked candidate must verify CORRECT
+        # (otherwise the arm silently measured nothing but failures)
+        if speedup < 1.2:
+            print(f"FAIL: grad batch/per speedup {speedup} < 1.2",
+                  flush=True)
+            return 1
+        if n_pass == 0:
+            print("FAIL: no gradient-checked candidate verified CORRECT",
+                  flush=True)
+            return 1
+        print(f"# ok: grad batch path {speedup}x per-candidate, "
+              f"{n_pass} candidates passed the gradient check", flush=True)
+        return 0
     warm = next(r for r in rows if r[0] == "verify_warm")
     speedup = float(warm[2].split("speedup=")[1].rstrip("x"))
     # the fast path must actually be fast: a regression below 1.5x warm

@@ -83,6 +83,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--generations", type=int, default=None, metavar="G",
                     help="(--search pbt) generations of the exploit/"
                          "explore loop per workload (default: 4)")
+    ap.add_argument("--direction", choices=("fwd", "fwd_bwd"),
+                    default="fwd",
+                    help="verification direction: forward output only "
+                         "(default) or forward plus input gradients "
+                         "against the jax.vjp oracle; fwd_bwd restricts "
+                         "the suite to differentiable workloads")
     ap.add_argument("--platform", choices=available_platforms(),
                     default=DEFAULT_PLATFORM,
                     help="hardware target to synthesize for "
@@ -165,8 +171,14 @@ def _print_fastpath_stats(io_cache, exe_cache) -> None:
     --isolate, nothing meaningful to print in the parent)."""
     if io_cache is not None:
         s = io_cache.stats()
-        print(f"io cache: {format_cache_stats(s)}, "
-              f"{s['oracle_computes']} oracle computes")
+        line = (f"io cache: {format_cache_stats(s)}, "
+                f"{s['oracle_computes']} oracle computes")
+        if s.get("grad_oracle_computes"):
+            line += f", {s['grad_oracle_computes']} grad oracle computes"
+        if s.get("io_sig_fallbacks"):
+            line += (f"  [WARNING: {s['io_sig_fallbacks']} io-signature "
+                     "concrete fallbacks]")
+        print(line)
     if exe_cache is not None:
         print(f"executable cache: "
               f"{format_cache_stats(exe_cache.stats())}")
@@ -268,7 +280,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print()
         return 0
 
-    workloads = kernelbench.suite(args.level, small=args.suite == "small")
+    suite_kw = {}
+    if args.direction == "fwd_bwd":
+        suite_kw["differentiable"] = True
+    workloads = kernelbench.suite(
+        args.level, small=args.suite == "small", **suite_kw)
+    if not workloads:
+        ap.error(f"--direction {args.direction} with --suite {args.suite}"
+                 + (f" --level {args.level}" if args.level else "")
+                 + ": no differentiable workloads in that selection "
+                 "(fwd_bwd verification needs a jax.vjp-compatible oracle)")
     pbt_kw = {}
     if args.population is not None:
         pbt_kw["population"] = args.population
@@ -279,7 +300,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                       use_reference=args.reference,
                       use_profiling=args.profiling, seed=args.seed,
                       platform=args.platform, fanout=args.fanout,
-                      search=args.search, **pbt_kw)
+                      search=args.search, direction=args.direction,
+                      **pbt_kw)
     cache = (VerificationCache.open(args.cache_path)
              if args.cache_path else VerificationCache())
     # fast-path caches (DESIGN.md §4), shared by every leg of whatever runs

@@ -295,8 +295,8 @@ def evaluate_generation(cands: Sequence[cand_mod.Candidate], wl: Workload,
                         *, seed: int, cache=None, platform=None,
                         io_cache: Optional[WorkloadIOCache] = None,
                         exe_cache: Optional[ExecutableCache] = None,
-                        scheduler=None, label: str = "pbt"
-                        ) -> List[EvalResult]:
+                        scheduler=None, label: str = "pbt",
+                        direction: str = "fwd") -> List[EvalResult]:
     """Verify one generation; one result per candidate, in order.
 
     The whole generation is one :func:`verify_batch` (shared inputs,
@@ -321,17 +321,19 @@ def evaluate_generation(cands: Sequence[cand_mod.Candidate], wl: Workload,
             return _evaluate_sharded(cands, wl, seed=seed, cache=cache,
                                      plat=plat, io_cache=io_cache,
                                      exe_cache=exe_cache,
-                                     scheduler=scheduler, label=label)
+                                     scheduler=scheduler, label=label,
+                                     direction=direction)
         return verify_batch(cands, wl, seed=seed, cache=cache,
                             platform=plat, io_cache=io_cache,
-                            exe_cache=exe_cache)
+                            exe_cache=exe_cache, direction=direction)
     except Exception:  # noqa: BLE001 — isolate the faulty member below
         results: List[EvalResult] = []
         for c in cands:
             try:
                 results.append(verify(c, wl, seed=seed, cache=cache,
                                       platform=plat, io_cache=io_cache,
-                                      exe_cache=exe_cache))
+                                      exe_cache=exe_cache,
+                                      direction=direction))
             except Exception as exc:  # noqa: BLE001
                 results.append(EvalResult(
                     ExecutionState.RUNTIME_ERROR,
@@ -341,7 +343,8 @@ def evaluate_generation(cands: Sequence[cand_mod.Candidate], wl: Workload,
 
 
 def _evaluate_sharded(cands, wl, *, seed, cache, plat, io_cache, exe_cache,
-                      scheduler, label) -> List[EvalResult]:
+                      scheduler, label,
+                      direction: str = "fwd") -> List[EvalResult]:
     """Shard the UNIQUE candidates round-robin over scheduler slots; each
     shard is its own verify_batch against the shared caches. Duplicate
     candidates resolve to their unique result afterwards, exactly like
@@ -350,7 +353,7 @@ def _evaluate_sharded(cands, wl, *, seed, cache, plat, io_cache, exe_cache,
     uniq: List[cand_mod.Candidate] = []
     keys: List[str] = []
     for c in cands:
-        k = cache_key(c, wl, seed, plat)
+        k = cache_key(c, wl, seed, plat, direction=direction)
         keys.append(k)
         if k not in uniq_idx:
             uniq_idx[k] = len(uniq)
@@ -360,7 +363,7 @@ def _evaluate_sharded(cands, wl, *, seed, cache, plat, io_cache, exe_cache,
         f"{label}.shard{i}",
         lambda part=uniq[i::shards]: verify_batch(
             part, wl, seed=seed, cache=cache, platform=plat,
-            io_cache=io_cache, exe_cache=exe_cache))
+            io_cache=io_cache, exe_cache=exe_cache, direction=direction))
         for i in range(shards)]
     shard_results = scheduler.wait(jobs)
     bad = next((r for r in shard_results if not r.ok), None)
@@ -415,6 +418,9 @@ def generation_event(wl: Workload, loop: Dict[str, Any], *,
         "workload": wl.name,
         "level": wl.level,
         "platform": platform,
+        # journaled top-level (not just inside loop) so log consumers can
+        # filter fwd vs fwd_bwd generations without parsing loop configs
+        "direction": dict(loop).get("direction", "fwd"),
         "loop": dict(loop),
         "io": io_signature(wl),
         "generation": generation,
@@ -564,7 +570,8 @@ def run_workload_pbt(wl: Workload, cfg: LoopConfig, *,
         results = evaluate_generation(
             [m.candidate for m in members], wl, seed=seed, cache=cache,
             platform=platform, io_cache=io_cache, exe_cache=exe_cache,
-            scheduler=scheduler, label=f"pbt[{wl.name}].g{g}")
+            scheduler=scheduler, label=f"pbt[{wl.name}].g{g}",
+            direction=cfg.direction)
         scores = [member_score(r) for r in results]
         winners, losers = truncation_split(scores)
         ev = generation_event(wl, loop_dict, generation=g, seed=seed,

@@ -148,9 +148,18 @@ def format_report(report: Dict[str, Any]) -> str:
                      f"({c.get('entries', 0)} entries)")
     if report.get("io_cache"):
         c = report["io_cache"]
-        lines.append(f"  io cache: {c.get('hits', 0)} hits / "
-                     f"{c.get('misses', 0)} misses "
-                     f"({c.get('oracle_computes', 0)} oracle computes)")
+        line = (f"  io cache: {c.get('hits', 0)} hits / "
+                f"{c.get('misses', 0)} misses "
+                f"({c.get('oracle_computes', 0)} oracle computes")
+        if c.get("grad_oracle_computes"):
+            line += f", {c['grad_oracle_computes']} grad oracle computes"
+        line += ")"
+        # nonzero = io_signature's abstract eval_shape path regressed and
+        # real inputs were generated just to read shapes — a perf bug
+        if c.get("io_sig_fallbacks"):
+            line += (f"  [WARNING: {c['io_sig_fallbacks']} io-signature "
+                     "concrete fallbacks]")
+        lines.append(line)
     if report.get("exe_cache"):
         c = report["exe_cache"]
         lines.append(f"  exe cache: {c.get('hits', 0)} hits / "

@@ -284,6 +284,10 @@ class Campaign:
                         "iters_to_correct": itc,
                         "io": verif_mod.io_signature(wl),
                         "platform": self.cfg.loop.platform,
+                        # top-level (duplicating loop.direction) so log
+                        # consumers filter fwd vs fwd_bwd terminals without
+                        # parsing loop configs
+                        "direction": self.cfg.loop.direction,
                         "loop": dataclasses.asdict(self.cfg.loop),
                         "final": ev_mod.result_to_dict(final),
                     })

@@ -27,8 +27,8 @@ import numpy as np
 
 from repro.kernels import ops, ref
 from repro.kernels import (flash_attention as _fa, matmul as _mm,
-                           rmsnorm as _rn, softmax as _sm, swiglu as _sg,
-                           swish as _sw, xent as _xe)
+                           rmsnorm as _rn, rope as _rp, softmax as _sm,
+                           swiglu as _sg, swish as _sw, xent as _xe)
 from repro.platforms import PlatformLike, resolve_platform
 
 # Historical name for the default target's matrix-unit width; prefer
@@ -66,6 +66,7 @@ SPACES: Dict[str, Dict[str, Tuple]] = {
     # state updates) vs matrix (chunk-parallel MXU form) — the same
     # transformation EXPERIMENTS.md §Perf B1 applies by hand.
     "ssd": {"chunk": (32, 64, 128, 256), "form": ("recurrent", "matrix")},
+    "rope": {"block_s": (64, 128, 256, 512)},
 }
 
 # Heuristic defaults a model proposes with NO reference implementation:
@@ -79,6 +80,7 @@ NAIVE_DEFAULTS: Dict[str, Dict[str, Any]] = {
     "attention": {"block_q": 64, "block_k": 64, "online": False},
     "xent": {"block_t": 32, "block_v": 512, "online": False},
     "ssd": {"chunk": 64, "form": "recurrent"},
+    "rope": {"block_s": 64},
 }
 
 # What a correct cross-platform reference implementation teaches the agent:
@@ -212,7 +214,8 @@ def _naive_softmax(x):
 
 
 def materialize(cand: Candidate, *, interpret: bool = True,
-                platform: PlatformLike = None) -> Callable:
+                platform: PlatformLike = None,
+                differentiable: bool = False) -> Callable:
     """Turn a candidate into a callable kernel.
 
     ``platform`` (name, instance, or None for the default target) selects
@@ -220,6 +223,16 @@ def materialize(cand: Candidate, *, interpret: bool = True,
     (``kernels.ops.compiler_params_for``): TPU targets get Mosaic params,
     other targets get none. Interpret-mode numerics are identical either
     way; on real hardware the compiled artifact differs.
+
+    ``differentiable`` makes the callable usable under ``jax.vjp`` for
+    ``direction="fwd_bwd"`` verification: Pallas-backed strategies (which
+    have no VJP rule) are wrapped in :func:`repro.kernels.ops.recompute_vjp`
+    — forward runs the kernel under test, backward is flash-style recompute
+    through the pure-XLA equivalent, exactly the ``_pallas_attention``
+    machinery generalized. Pure-jnp strategies (naive softmax/attention,
+    staged swiglu, both SSD forms) differentiate directly, so their
+    gradients are honestly the candidate's own. Forward numerics are
+    identical either way.
     """
     p = cand.params
     op = cand.op
@@ -234,6 +247,8 @@ def materialize(cand: Candidate, *, interpret: bool = True,
             return _sw.swish(x, block_rows=p["block_rows"],
                              block_lanes=p["block_lanes"],
                              interpret=interpret, platform=plat)
+        if differentiable:
+            return ops.recompute_vjp(fn, ref.swish)
         return fn
     if op == "softmax":
         def fn(x):
@@ -243,6 +258,8 @@ def materialize(cand: Candidate, *, interpret: bool = True,
                 raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
             return _sm.softmax(x, block_rows=p["block_rows"],
                                interpret=interpret, platform=plat)
+        if differentiable and p["online"]:
+            return ops.recompute_vjp(fn, ref.softmax)
         return fn
     if op == "rmsnorm":
         def fn(x, g):
@@ -250,6 +267,8 @@ def materialize(cand: Candidate, *, interpret: bool = True,
                 raise ValueError(f"rows {x.shape[0]} % {p['block_rows']} != 0")
             return _rn.rmsnorm(x, g, block_rows=p["block_rows"],
                                interpret=interpret, platform=plat)
+        if differentiable:
+            return ops.recompute_vjp(fn, ref.rmsnorm)
         return fn
     if op == "matmul":
         def fn(a, b):
@@ -261,6 +280,8 @@ def materialize(cand: Candidate, *, interpret: bool = True,
             return _mm.matmul(a, b, block_m=p["block_m"],
                               block_n=p["block_n"], block_k=p["block_k"],
                               interpret=interpret, platform=plat)
+        if differentiable:
+            return ops.recompute_vjp(fn, ref.matmul)
         return fn
     if op == "swiglu":
         def fn(g, u):
@@ -272,6 +293,10 @@ def materialize(cand: Candidate, *, interpret: bool = True,
             return _sg.swiglu_act(g, u, block_rows=p["block_rows"],
                                   block_cols=p["block_cols"],
                                   interpret=interpret, platform=plat)
+        if differentiable and p["fused"]:
+            return ops.recompute_vjp(
+                fn, lambda g, u: (ref.swish(g.astype(jnp.float32)) *
+                                  u.astype(jnp.float32)).astype(g.dtype))
         return fn
     if op == "attention":
         def fn(q, k, v):
@@ -294,6 +319,10 @@ def materialize(cand: Candidate, *, interpret: bool = True,
                                        block_q=p["block_q"],
                                        block_k=p["block_k"],
                                        interpret=interpret, platform=plat)
+        if differentiable and p["online"]:
+            return ops.recompute_vjp(
+                fn, lambda q, k, v: ops.xla_chunked_attention(
+                    q, k, v, causal=True))
         return fn
     if op == "ssd":
         def fn(x, a, b, c):
@@ -307,7 +336,7 @@ def materialize(cand: Candidate, *, interpret: bool = True,
                 raise ValueError(f"chunk {p['chunk']} does not divide T={t}")
             y, _ = _ops.ssd_matrix(x, a, b, c, chunk=p["chunk"])
             return y
-        return fn
+        return fn  # both SSD forms are pure jnp — natively differentiable
     if op == "xent":
         def fn(logits, labels):
             if not p["online"]:
@@ -321,6 +350,19 @@ def materialize(cand: Candidate, *, interpret: bool = True,
             return _xe.softmax_xent(logits, labels, block_t=p["block_t"],
                                     block_v=p["block_v"],
                                     interpret=interpret, platform=plat)
+        if differentiable and p["online"]:
+            return ops.recompute_vjp(fn, ref.softmax_xent)
+        return fn
+    if op == "rope":
+        def fn(x, positions):
+            if x.shape[1] % p["block_s"]:
+                raise ValueError(
+                    f"rope block_s {p['block_s']} does not divide "
+                    f"S={x.shape[1]}")
+            return _rp.rope(x, positions, block_s=p["block_s"],
+                            interpret=interpret, platform=plat)
+        if differentiable:
+            return ops.recompute_vjp(fn, ref.rope)
         return fn
     raise KeyError(f"unknown op family {op!r}")
 
@@ -418,6 +460,10 @@ def model_time(cand: Candidate, shapes: Dict[str, Tuple[int, ...]],
         eff = _mxu_eff(min(c, align))
         return max(flops / (peak * eff), bytes_ / bw) \
             + nc * plat.seq_step_latency_s
+    if op == "rope":
+        b, s, h, d = shapes["x"]
+        # positions traffic is s/(h*d) of x's — negligible; 2 streams (r+w)
+        return elemwise(b * s * h * d, 2, p["block_s"], h * d)
     raise KeyError(op)
 
 
@@ -433,3 +479,43 @@ def baseline_time(op: str, shapes: Dict[str, Tuple[int, ...]],
     analogue): unfused, non-online, 8-row tiles — on the same platform the
     candidate is modeled for, so speedups stay platform-internal."""
     return model_time(naive_candidate(op, platform), shapes, platform)
+
+
+# ---------------------------------------------------------------------------
+# Backward-pass cost model (direction="fwd_bwd", §8 extension)
+# ---------------------------------------------------------------------------
+
+# Relative dgrad FLOP count per op family: how much math the backward pass
+# does ON TOP of the flash-style recompute of the forward. matmul dgrad is
+# two GEMMs of the forward's size (dA = dY·Bᵀ, dB = Aᵀ·dY); attention
+# dq/dk/dv re-runs the score matmuls plus three output-sized GEMMs; the
+# SSD dgrad mirrors the chunked forward for both dx and d(b,c); pure
+# elementwise families pay roughly one more pass over the data.
+_BWD_DGRAD_FACTOR: Dict[str, float] = {
+    "swish": 1.0, "softmax": 1.0, "rmsnorm": 1.5, "matmul": 2.0,
+    "swiglu": 1.5, "attention": 1.5, "xent": 1.0, "ssd": 2.0, "rope": 1.0,
+}
+
+
+def bwd_cost_factor(op: str) -> float:
+    """bwd ≈ recompute (one forward) + dgrad FLOPs, as a multiple of the
+    forward roofline."""
+    return 1.0 + _BWD_DGRAD_FACTOR.get(op, 1.0)
+
+
+def model_time_bwd(cand: Candidate, shapes: Dict[str, Tuple[int, ...]],
+                   platform: PlatformLike = None) -> float:
+    """Roofline estimate of the candidate's backward pass on the target.
+
+    Scales the forward roofline by :func:`bwd_cost_factor` — the backward
+    of every differentiable strategy here is recompute-based (no residual
+    tensors round-trip HBM), so the forward's tiling-dependent traffic
+    model is the right base, and the estimate stays per-platform because
+    the forward roofline is."""
+    return model_time(cand, shapes, platform) * bwd_cost_factor(cand.op)
+
+
+def baseline_time_bwd(op: str, shapes: Dict[str, Tuple[int, ...]],
+                      platform: PlatformLike = None) -> float:
+    """Backward roofline of the naive/default implementation."""
+    return baseline_time(op, shapes, platform) * bwd_cost_factor(op)

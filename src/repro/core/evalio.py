@@ -82,14 +82,20 @@ class IOEntry:
     shapes; the reference-oracle output is computed lazily on first
     :meth:`expected` call (a batch of candidates that all fail compilation
     never pays for the oracle) and memoized under a per-entry lock so
-    concurrent legs compute it once.
+    concurrent legs compute it once.  ``direction="fwd_bwd"`` verification
+    additionally draws on :meth:`cotangent` (the seed-derived pull-back
+    vector) and :meth:`grads` (the ``jax.vjp`` oracle gradients) — both
+    lazy and memoized the same way, so a batch of candidates shares ONE
+    cotangent draw and ONE oracle-gradient evaluation per (workload, seed).
     """
 
     __slots__ = ("wl", "seed", "inputs", "kernel_inputs", "shapes",
-                 "_expected", "_lock", "_on_oracle")
+                 "_expected", "_cotangent", "_grads", "_lock", "_on_oracle",
+                 "_on_grad_oracle")
 
     def __init__(self, wl: Workload, seed: int,
-                 on_oracle: Optional[Callable[[], None]] = None) -> None:
+                 on_oracle: Optional[Callable[[], None]] = None,
+                 on_grad_oracle: Optional[Callable[[], None]] = None) -> None:
         self.wl = wl
         self.seed = int(seed)
         self.inputs = wl.inputs(seed)
@@ -97,8 +103,11 @@ class IOEntry:
         self.shapes = {k: tuple(v.shape)
                        for k, v in self.kernel_inputs.items()}
         self._expected = None
+        self._cotangent = None
+        self._grads = None
         self._lock = threading.Lock()
         self._on_oracle = on_oracle
+        self._on_grad_oracle = on_grad_oracle
 
     def expected(self):
         """The reference-oracle output for these inputs (computed once)."""
@@ -108,6 +117,23 @@ class IOEntry:
                 if self._on_oracle is not None:
                     self._on_oracle()
             return self._expected
+
+    def cotangent(self):
+        """The seed-derived cotangent for the backward check (drawn once)."""
+        with self._lock:
+            if self._cotangent is None:
+                self._cotangent = self.wl.cotangent(self.inputs, self.seed)
+            return self._cotangent
+
+    def grads(self):
+        """Oracle gradients (``jax.vjp`` over ``ref_fn``, computed once)."""
+        cot = self.cotangent()
+        with self._lock:
+            if self._grads is None:
+                self._grads = self.wl.grad_reference(self.inputs, cot)
+                if self._on_grad_oracle is not None:
+                    self._on_grad_oracle()
+            return self._grads
 
 
 def _workload_key(wl: Workload, seed: int) -> Tuple:
@@ -130,6 +156,16 @@ class WorkloadIOCache:
     working, a matrix run's count stays strictly below legs × workloads.
     """
 
+    # Process-wide tally of io_signature()'s concrete fallback (the
+    # abstract eval_shape path failed and real inputs were generated just
+    # to read metadata). Class-level on purpose: the fallback fires inside
+    # repro.core.verification.io_signature, which has no instance in
+    # scope, and a nonzero count is a performance regression worth
+    # surfacing in every campaign report regardless of which cache
+    # instance the campaign used.
+    _io_sig_fallbacks = 0
+    _class_lock = threading.Lock()
+
     def __init__(self, max_entries: int = 128) -> None:
         self.max_entries = int(max_entries)
         self._store: "OrderedDict[Tuple, IOEntry]" = OrderedDict()
@@ -137,11 +173,27 @@ class WorkloadIOCache:
         self.hits = 0
         self.misses = 0
         self.oracle_computes = 0
+        self.grad_oracle_computes = 0
         self.input_computes = 0
+
+    @classmethod
+    def count_io_sig_fallback(cls) -> None:
+        """Record one abstract-path failure in ``io_signature``."""
+        with cls._class_lock:
+            cls._io_sig_fallbacks += 1
+
+    @classmethod
+    def io_sig_fallbacks(cls) -> int:
+        with cls._class_lock:
+            return cls._io_sig_fallbacks
 
     def _count_oracle(self) -> None:
         with self._lock:
             self.oracle_computes += 1
+
+    def _count_grad_oracle(self) -> None:
+        with self._lock:
+            self.grad_oracle_computes += 1
 
     def entry(self, wl: Workload, seed: int) -> IOEntry:
         """The (possibly cached) IOEntry for one (workload, seed)."""
@@ -158,7 +210,8 @@ class WorkloadIOCache:
         # race the same key, the first to publish wins; the loser's entry
         # is dropped unused (its counters were already charged — they
         # reflect work genuinely done).
-        entry = IOEntry(wl, seed, on_oracle=self._count_oracle)
+        entry = IOEntry(wl, seed, on_oracle=self._count_oracle,
+                        on_grad_oracle=self._count_grad_oracle)
         with self._lock:
             self.input_computes += 1
             current = self._store.get(key)
@@ -176,13 +229,18 @@ class WorkloadIOCache:
 
     def stats(self) -> Dict[str, int]:
         """Snapshot of {entries, hits, misses, oracle_computes,
-        input_computes} — journaled on campaign_done events next to the
-        VerificationCache stats."""
+        grad_oracle_computes, input_computes, io_sig_fallbacks} —
+        journaled on campaign_done events next to the VerificationCache
+        stats. ``io_sig_fallbacks`` is the process-wide concrete-fallback
+        tally (see :meth:`count_io_sig_fallback`), snapshotted here so
+        abstract-path regressions surface in campaign reports."""
         with self._lock:
             return {"entries": len(self._store), "hits": self.hits,
                     "misses": self.misses,
                     "oracle_computes": self.oracle_computes,
-                    "input_computes": self.input_computes}
+                    "grad_oracle_computes": self.grad_oracle_computes,
+                    "input_computes": self.input_computes,
+                    "io_sig_fallbacks": self.io_sig_fallbacks()}
 
 
 class ExecutableCache:

@@ -57,11 +57,14 @@ def _shrink(wl: Workload, div: int = 4) -> Workload:
     return dataclasses.replace(wl, input_fn=input_fn, input_shapes=shapes)
 
 
-def suite(level=None, *, small: bool = False) -> List[Workload]:
+def suite(level=None, *, small: bool = False,
+          differentiable: bool = None) -> List[Workload]:
+    """Workloads by level; ``differentiable=True`` keeps only the
+    training-shaped workloads eligible for ``--direction fwd_bwd``."""
     pool = _SUITE_SMALL if small else _SUITE
-    if level is None:
-        return list(pool)
-    return [w for w in pool if w.level == level]
+    return [w for w in pool
+            if (level is None or w.level == level)
+            and (differentiable is None or w.differentiable == differentiable)]
 
 
 def by_name(name: str, *, small: bool = False) -> Workload:
@@ -122,6 +125,18 @@ _add(Workload(
         "labels": jnp.asarray(rng.integers(0, 32768, (512,)), jnp.int32)},
     input_shapes={"logits": (512, 32768), "labels": (512,)}))
 
+_add(Workload(
+    name="L1/rope", level=1, op="rope",
+    description="rotary position embedding over (B,S,H,Dh)=(2,1024,8,64), "
+                "angles computed in-kernel (llama-family positional path)",
+    ref_fn=lambda x, positions: ref.rope(x, positions),
+    input_fn=lambda rng: {
+        "x": randn(rng, (2, 1024, 8, 64)),
+        "positions": jnp.tile(jnp.arange(1024, dtype=jnp.int32)[None],
+                              (2, 1))},
+    input_shapes={"x": (2, 1024, 8, 64), "positions": (2, 1024)},
+    differentiable=True))
+
 
 # ---------------------------------------------------------------------------
 # Level 2 — fusable operation sequences
@@ -154,6 +169,28 @@ _add(Workload(
                           "v": randn(rng, (1, 2048, 8, 64))},
     input_shapes={"q": (1, 2048, 8, 64), "k": (1, 2048, 8, 64),
                   "v": (1, 2048, 8, 64)}))
+
+_add(Workload(
+    name="L2/attention_bwd", level=2, op="attention",
+    description="training-shaped causal MHA, S=512 H=8: fwd output AND "
+                "q/k/v gradients are verified (direction=fwd_bwd)",
+    ref_fn=lambda q, k, v: ref.attention(q, k, v, causal=True),
+    input_fn=lambda rng: {"q": randn(rng, (2, 512, 8, 64), 4.0),
+                          "k": randn(rng, (2, 512, 8, 64), 4.0),
+                          "v": randn(rng, (2, 512, 8, 64))},
+    input_shapes={"q": (2, 512, 8, 64), "k": (2, 512, 8, 64),
+                  "v": (2, 512, 8, 64)},
+    tol=5e-3, differentiable=True))
+
+_add(Workload(
+    name="L2/swiglu_bwd", level=2, op="swiglu",
+    description="training-shaped SwiGLU gate fusion: silu(g)*u plus "
+                "gate/up gradients (direction=fwd_bwd)",
+    ref_fn=lambda gate, up: ref.swish(gate) * up,
+    input_fn=lambda rng: {"gate": randn(rng, (2048, 2048)),
+                          "up": randn(rng, (2048, 2048))},
+    input_shapes={"gate": (2048, 2048), "up": (2048, 2048)},
+    differentiable=True))
 
 _add(Workload(
     name="L2/softmax_wide", level=2, op="softmax",
@@ -257,6 +294,23 @@ _add(Workload(
         "w": randn(rng, (512, 151936 + 2 * 1024 - 151936 % (2 * 1024)), 0.2),
         "labels": jnp.asarray(rng.integers(0, 151936, (128,)), jnp.int32)},
     input_shapes={"logits": (128, 153600), "labels": (128,)}))
+
+
+_add(Workload(
+    name="L3/mamba2_ssd_bwd", level=3, op="ssd",
+    description="training-shaped Mamba2 SSD (zamba2 head geometry): the "
+                "chunk-parallel form must also match the scan's gradients "
+                "for x/b/c and the decay gates (direction=fwd_bwd)",
+    arch_tag="zamba2-7b",
+    ref_fn=_ssd_ref,
+    input_fn=lambda rng: {
+        "x": randn(rng, (2, 512, 4, 64)),
+        "a": jnp.asarray(rng.uniform(0.5, 0.999, (2, 512, 4)), jnp.float32),
+        "b": randn(rng, (2, 512, 4, 16)),
+        "c": randn(rng, (2, 512, 4, 16))},
+    input_shapes={"x": (2, 512, 4, 64), "a": (2, 512, 4),
+                  "b": (2, 512, 4, 16), "c": (2, 512, 4, 16)},
+    tol=5e-3, differentiable=True))
 
 
 _add(Workload(

@@ -125,6 +125,18 @@ PARAM: <parameter name from the space above, or none>
 VALUE: <target value as a JSON literal, or none>
 """
 
+# Appended to the analysis prompt ONLY for training-shaped (fwd_bwd)
+# profiles — forward-only prompts stay byte-identical to their pre-direction
+# renderings (replay sessions and golden snapshots key on the bytes).
+ANALYSIS_FWD_BWD_NOTE = """
+This profile is training-shaped: the `fwd` and `bwd` sections carry
+separate roofline terms for the forward pass and the backward
+(gradient) pass, and the top-level modeled times are their sum. The
+backward pass recomputes the forward inside its VJP, so a tiling
+change moves BOTH terms — weigh the recommendation against the
+combined time, not the forward roofline alone.
+"""
+
 
 def is_analysis_prompt(prompt: str) -> bool:
     """True when ``prompt`` is (or re-prompts) an agent-G analysis turn —
@@ -147,11 +159,14 @@ def render_analysis(accelerator: str, profile: dict,
     and a prompt that embeds them can never replay."""
     import json
     profile = {k: v for k, v in profile.items() if k != "phase_s"}
-    return ANALYSIS_TEMPLATE.format(
+    prompt = ANALYSIS_TEMPLATE.format(
         accelerator=accelerator,
         profile_json=json.dumps(profile, indent=2, sort_keys=True,
                                 default=str),
         space_json=json.dumps(space or {}, sort_keys=True, default=str))
+    if profile.get("direction") == "fwd_bwd":
+        prompt += ANALYSIS_FWD_BWD_NOTE
+    return prompt
 
 
 def render_synthesis(accelerator: str, example_src: str, workload_src: str,

@@ -90,6 +90,12 @@ class LoopConfig:
     search: str = "lineage"
     population: int = 4
     generations: int = 4
+    # Verification direction: "fwd" checks the forward output only (the
+    # pre-existing behavior, byte-identical cache keys); "fwd_bwd" — legal
+    # only for differentiable workloads — additionally verifies input
+    # gradients against the jax.vjp oracle and scores both passes'
+    # rooflines (core/verification.py).
+    direction: str = "fwd"
 
 
 def _fanout_candidates(cand, wl, platform, agent, k: int,
@@ -221,7 +227,8 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
             batch_results = verify_batch(batch, wl, seed=cfg.seed + i,
                                          cache=cache, platform=platform,
                                          io_cache=io_cache,
-                                         exe_cache=exe_cache)
+                                         exe_cache=exe_cache,
+                                         direction=cfg.direction)
             for c, r in zip(batch, batch_results):
                 seen[(c.op, tuple(sorted(c.params.items())))] = r
             best_j = min((j for j, r in enumerate(batch_results)
@@ -235,7 +242,8 @@ def run_workload(wl: Workload, cfg: LoopConfig, *,
             result = verify(gen.candidate or cand_mod.Candidate(wl.op, {}),
                             wl, seed=cfg.seed + i, fn=gen.callable_fn,
                             cache=cache, platform=platform,
-                            io_cache=io_cache, exe_cache=exe_cache)
+                            io_cache=io_cache, exe_cache=exe_cache,
+                            direction=cfg.direction)
             if key is not None:
                 seen[key] = result
         rec_text = rec_source = None

@@ -1,10 +1,12 @@
 """Execution states and evaluation results (paper §3.3).
 
-Five terminal states per generation-evaluation iteration, mapped to JAX:
+Terminal states per generation-evaluation iteration, mapped to JAX:
   generation failure   — backend produced no usable candidate
   compilation failure  — trace/lower/Mosaic error while jitting
   runtime error        — exception while executing the compiled program
   numeric/shape mismatch — outputs differ from the ref.py oracle
+  grad mismatch        — fwd output matches but a gradient differs from
+                         the ``jax.vjp`` oracle (``direction="fwd_bwd"``)
   correct              — shapes, dtypes and values match
 """
 from __future__ import annotations
@@ -19,6 +21,7 @@ class ExecutionState(enum.Enum):
     COMPILATION_FAILURE = "compilation_failure"
     RUNTIME_ERROR = "runtime_error"
     NUMERIC_MISMATCH = "numeric_mismatch"
+    GRAD_MISMATCH = "grad_mismatch"
     CORRECT = "correct"
 
 

@@ -105,6 +105,19 @@ class TemplateSearchBackend:
                 fixed = self._repair_shapes(fixed, wl, "") or fixed
                 return Generation(candidate=fixed, source=fixed.describe())
             return Generation(failure=f"cannot repair numerics: {err}")
+        if state is ExecutionState.GRAD_MISMATCH:
+            # gradient-specific functional repair: the canonical cause is a
+            # numerically-unstable strategy whose forward squeaks under the
+            # tolerance while its backward blows up (naive softmax paths) —
+            # switch to the stable strategy axis when one exists.
+            p = dict(cand.params)
+            if "online" in cand_mod.SPACES[wl.op] and not p.get("online"):
+                p["online"] = True
+                fixed = cand_mod.Candidate(wl.op, p)
+                fixed = self._repair_shapes(fixed, wl, "") or fixed
+                return Generation(candidate=fixed, source=fixed.describe())
+            return Generation(
+                failure=f"cannot repair gradients: {prev_result.error}")
 
         # ---- optimization pass ---------------------------------------------
         if recommendation is not None and recommendation.param:
@@ -152,6 +165,7 @@ class TemplateSearchBackend:
             "block_q": dims.get("q", key0)[1] if "q" in dims else key0[0],
             "block_v": dims.get("logits", key0)[-1],
             "chunk": key0[1] if len(key0) > 1 else key0[0],
+            "block_s": key0[1] if len(key0) > 1 else key0[0],
         }
         params = dict(cand.params)
         changed = False

@@ -1,9 +1,24 @@
-"""Program verification (paper §3.3): classify each candidate into one of the
-five execution states and measure its performance.
+"""Program verification (paper §3.3): classify each candidate into one of
+the execution states and measure its performance.
 
 Inputs are re-randomized on every call (fresh seed), so constant-output
 "cheating" candidates (paper §7.3) are caught as numeric mismatches instead
 of surviving evaluation.
+
+``direction`` selects what is verified. ``"fwd"`` (the default, and the
+byte-identical special case of everything below) checks the forward output
+against the reference oracle, exactly as before this axis existed.
+``"fwd_bwd"`` — legal only for workloads registered ``differentiable=True``
+— additionally pulls a seed-derived cotangent back through the candidate
+with ``jax.vjp`` and compares every input gradient against the workload's
+gradient oracle; a forward-correct candidate whose gradients disagree
+scores the dedicated ``GRAD_MISMATCH`` state with feedback naming the
+worst-offending gradient, and a correct one carries a two-section profile
+(fwd + bwd phase timings and rooflines). Direction folds into
+:func:`cache_key`/:func:`executable_key` ONLY when it is ``"fwd_bwd"``, so
+every pre-existing forward key — including persistent caches on disk —
+stays byte-identical while fwd results are never served for fwd_bwd
+requests.
 
 ``verify`` optionally consults a verification cache (anything with
 ``get(key) -> Optional[EvalResult]`` / ``put(key, result)``, e.g.
@@ -74,6 +89,11 @@ def io_signature(wl: Workload):
                 lambda ins: kb.workload_for_candidate_inputs(wl, ins),
                 structs)
         except Exception:  # noqa: BLE001 — exotic input_fn: concrete path
+            # Count the fallback (WorkloadIOCache.stats()["io_sig_fallbacks"],
+            # surfaced in campaign reports): generating real inputs just to
+            # read metadata is the slow path, and a regression that breaks
+            # the abstract path for a whole suite must not stay silent.
+            evalio.WorkloadIOCache.count_io_sig_fallback()
             kernel = kb.workload_for_candidate_inputs(wl, wl.inputs(0))
         sig = sorted((k, [int(d) for d in v.shape], str(v.dtype))
                      for k, v in kernel.items())
@@ -81,18 +101,34 @@ def io_signature(wl: Workload):
     return sig
 
 
+def _fold_direction(sig: Dict, direction: str) -> Dict:
+    """Fold the verification direction into a content-address signature.
+
+    ``"fwd"`` adds NOTHING — the forward-only key must stay byte-identical
+    to what it was before the direction axis existed, so persistent caches
+    written by older runs remain valid. Any other direction becomes an
+    explicit key, so fwd and fwd_bwd results can never collide.
+    """
+    if direction != "fwd":
+        sig["direction"] = direction
+    return sig
+
+
 def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int,
-              platform: PlatformLike = None) -> str:
+              platform: PlatformLike = None, direction: str = "fwd") -> str:
     """Content address of one verification: op, sorted candidate params, the
-    kernel-level input shapes/dtypes, tolerance, the input seed, and the
-    hardware platform the performance model scored against.
+    kernel-level input shapes/dtypes, tolerance, the input seed, the
+    hardware platform the performance model scored against, and — for
+    ``fwd_bwd`` only — the verification direction.
 
     Two verify calls with equal keys see byte-identical inputs, an identical
     candidate program, and the same platform profile, so their
     ``EvalResult`` is interchangeable. Results for the same candidate on
-    different platforms carry different model times and must never collide.
+    different platforms carry different model times and must never collide;
+    neither may a forward-only result ever satisfy a ``fwd_bwd`` request
+    (it proved nothing about gradients).
     """
-    sig = {
+    sig = _fold_direction({
         "workload": wl.name,
         "op": candidate.op,
         "params": sorted((k, repr(v)) for k, v in candidate.params.items()),
@@ -100,13 +136,14 @@ def cache_key(candidate: cand_mod.Candidate, wl: Workload, seed: int,
         "tol": wl.tol,
         "seed": int(seed),
         "platform": resolve_platform(platform).name,
-    }
+    }, direction)
     blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
 def executable_key(candidate: cand_mod.Candidate, wl: Workload,
-                   platform: PlatformLike = None) -> str:
+                   platform: PlatformLike = None,
+                   direction: str = "fwd") -> str:
     """Content address of one *compiled executable*: :func:`cache_key`
     minus seed and tolerance — the program ``jax.jit(...).lower().compile()``
     produces depends on the candidate, the kernel input shapes/dtypes, and
@@ -114,15 +151,31 @@ def executable_key(candidate: cand_mod.Candidate, wl: Workload,
     or how tightly the oracle is compared.  This is what lets a candidate
     revisited under a *fresh* seed (the §7.3 anti-cheating ladder) skip
     recompilation even though its verification result cannot be reused.
+
+    ``direction="fwd_bwd"`` addresses the compiled *gradient* program — a
+    different executable from the forward one, stored under a direction-
+    folded key. The forward executable itself keeps the unchanged fwd key
+    and is shared between fwd and fwd_bwd verifications (the primal
+    computation is identical).
     """
-    sig = {
+    sig = _fold_direction({
         "op": candidate.op,
         "params": sorted((k, repr(v)) for k, v in candidate.params.items()),
         "io": io_signature(wl),
         "platform": resolve_platform(platform).name,
-    }
+    }, direction)
     blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _check_direction(direction: str, wl: Workload) -> None:
+    if direction not in ("fwd", "fwd_bwd"):
+        raise ValueError(f"unknown direction {direction!r}; "
+                         "expected 'fwd' or 'fwd_bwd'")
+    if direction == "fwd_bwd" and not wl.differentiable:
+        raise ValueError(
+            f"workload {wl.name!r} is not differentiable — register it "
+            "with differentiable=True to verify direction='fwd_bwd'")
 
 
 def verify(candidate: cand_mod.Candidate, wl: Workload, *,
@@ -130,15 +183,20 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
            fn: Optional[Callable] = None, cache=None,
            platform: PlatformLike = None,
            io_cache: Optional[WorkloadIOCache] = None,
-           exe_cache: Optional[ExecutableCache] = None) -> EvalResult:
+           exe_cache: Optional[ExecutableCache] = None,
+           direction: str = "fwd") -> EvalResult:
     """Run the verification pipeline for one candidate against one workload,
     scoring performance against ``platform``'s roofline profile.
 
     ``io_cache`` / ``exe_cache`` (optional) plug in the fast-path cache
     layers: shared inputs + reference oracle per (workload, seed), and
     compiled-executable reuse per (candidate, io, platform).
+
+    ``direction="fwd_bwd"`` (differentiable workloads only) adds the
+    gradient check — see the module docstring.
     """
     plat = resolve_platform(platform)
+    _check_direction(direction, wl)
     # Deterministic per-call counter, NOT time_ns(): wall-clock seeds defeat
     # the cache and make runs irreproducible. Pass a seed for fresh entropy.
     seed = next(_FRESH_SEEDS) % (2 ** 31) if seed is None else seed
@@ -146,7 +204,7 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
     # -- verification cache: only declarative candidates are addressable ----
     key = None
     if cache is not None and fn is None:
-        key = cache_key(candidate, wl, seed, plat)
+        key = cache_key(candidate, wl, seed, plat, direction)
         hit = cache.get(key)
         # a hit recorded without wall-clock cannot satisfy a measure_wall
         # request — fall through, re-verify, and upgrade the entry.
@@ -160,7 +218,8 @@ def verify(candidate: cand_mod.Candidate, wl: Workload, *,
     phase = {"input_gen": time.perf_counter() - t0}
     result = _verify_uncached(candidate, wl, entry,
                               measure_wall=measure_wall, fn=fn, platform=plat,
-                              exe_cache=exe_cache, phase=phase)
+                              exe_cache=exe_cache, phase=phase,
+                              direction=direction)
     result.cache_key = key
     if key is not None:
         cache.put(key, result)
@@ -171,8 +230,8 @@ def verify_batch(candidates: Sequence[cand_mod.Candidate], wl: Workload, *,
                  seed: Optional[int] = None, measure_wall: bool = False,
                  cache=None, platform: PlatformLike = None,
                  io_cache: Optional[WorkloadIOCache] = None,
-                 exe_cache: Optional[ExecutableCache] = None
-                 ) -> List[EvalResult]:
+                 exe_cache: Optional[ExecutableCache] = None,
+                 direction: str = "fwd") -> List[EvalResult]:
     """Verify many declarative candidates of ONE workload in a batch.
 
     All candidates see the SAME seed (so the refinement loop's fan-out
@@ -188,13 +247,14 @@ def verify_batch(candidates: Sequence[cand_mod.Candidate], wl: Workload, *,
     address to dedupe or compile-cache on; verify them singly.
     """
     plat = resolve_platform(platform)
+    _check_direction(direction, wl)
     seed = next(_FRESH_SEEDS) % (2 ** 31) if seed is None else seed
     results: List[Optional[EvalResult]] = [None] * len(candidates)
     first_of: Dict[str, int] = {}
     keys: List[Optional[str]] = [None] * len(candidates)
     entry: Optional[IOEntry] = None
     for i, cand in enumerate(candidates):
-        key = cache_key(cand, wl, seed, plat)
+        key = cache_key(cand, wl, seed, plat, direction)
         keys[i] = key
         if key in first_of:          # duplicate: resolved after the loop
             continue
@@ -213,7 +273,8 @@ def verify_batch(candidates: Sequence[cand_mod.Candidate], wl: Workload, *,
         result = _verify_uncached(cand, wl, entry,
                                   measure_wall=measure_wall, fn=None,
                                   platform=plat, exe_cache=exe_cache,
-                                  phase={"input_gen": input_gen_s})
+                                  phase={"input_gen": input_gen_s},
+                                  direction=direction)
         input_gen_s = 0.0            # amortized: charged to the first miss
         result.cache_key = key
         if cache is not None:
@@ -228,7 +289,8 @@ def verify_batch(candidates: Sequence[cand_mod.Candidate], wl: Workload, *,
 def _verify_uncached(candidate, wl, entry: IOEntry, *,
                      measure_wall, fn, platform,
                      exe_cache: Optional[ExecutableCache] = None,
-                     phase: Optional[Dict[str, float]] = None) -> EvalResult:
+                     phase: Optional[Dict[str, float]] = None,
+                     direction: str = "fwd") -> EvalResult:
     phase = {} if phase is None else phase
     kernel_inputs = entry.kernel_inputs
     shapes = entry.shapes
@@ -237,7 +299,9 @@ def _verify_uncached(candidate, wl, entry: IOEntry, *,
     declarative = fn is None
     if fn is None:
         try:
-            fn = cand_mod.materialize(candidate, platform=platform)
+            fn = cand_mod.materialize(
+                candidate, platform=platform,
+                differentiable=direction == "fwd_bwd")
         except Exception as exc:  # noqa: BLE001
             return EvalResult(ExecutionState.GENERATION_FAILURE,
                               error=f"{type(exc).__name__}: {exc}")
@@ -290,6 +354,16 @@ def _verify_uncached(candidate, wl, entry: IOEntry, *,
                           max_abs_err=err)
     phase["check"] = time.perf_counter() - t0
 
+    # -- backward pass (direction="fwd_bwd" only) -----------------------------
+    worst_grad_err = None
+    if direction == "fwd_bwd":
+        bad = _check_gradients(candidate, wl, entry, fn=fn,
+                               declarative=declarative, platform=platform,
+                               exe_cache=exe_cache, phase=phase)
+        if isinstance(bad, EvalResult):
+            return bad
+        worst_grad_err = bad
+
     # -- performance ----------------------------------------------------------
     t0 = time.perf_counter()
     model_t = _model_time_tolerant(candidate, shapes, platform)
@@ -313,9 +387,126 @@ def _verify_uncached(candidate, wl, entry: IOEntry, *,
         # iteration event; bench_verify_throughput aggregates them)
         "phase_s": {k: round(v, 6) for k, v in phase.items()},
     }
+    if direction == "fwd_bwd":
+        # Two-section profile: the top-level roofline keys become fwd+bwd
+        # TOTALS (so analyzers built on them keep working and speedups
+        # cover the whole training step), with each pass broken out.
+        factor = cand_mod.bwd_cost_factor(candidate.op)
+        flops = profile["flops"]
+        bwd_model_t = _bwd_time_tolerant(
+            cand_mod.model_time_bwd, candidate, shapes, platform)
+        bwd_base_t = _bwd_time_tolerant(
+            lambda c, s, p: cand_mod.baseline_time_bwd(c.op, s, p),
+            candidate, shapes, platform)
+        profile["direction"] = "fwd_bwd"
+        profile["fwd"] = {"model_time_s": model_t,
+                          "baseline_time_s": base_t, "flops": flops}
+        profile["bwd"] = {"model_time_s": bwd_model_t,
+                          "baseline_time_s": bwd_base_t,
+                          "flops": flops * factor,
+                          "max_rel_err": worst_grad_err}
+        model_t = None if (model_t is None or bwd_model_t is None) \
+            else model_t + bwd_model_t
+        base_t = None if (base_t is None or bwd_base_t is None) \
+            else base_t + bwd_base_t
+        profile["model_time_s"] = model_t
+        profile["baseline_time_s"] = base_t
     return EvalResult(ExecutionState.CORRECT, wall_time_s=wall,
                       model_time_s=model_t, baseline_model_time_s=base_t,
                       max_abs_err=err, profile=profile)
+
+
+def _check_gradients(candidate, wl, entry: IOEntry, *, fn, declarative,
+                     platform, exe_cache, phase):
+    """The ``fwd_bwd`` gradient leg of verification.
+
+    Differentiates the full composition the oracle is differentiated over
+    — workload inputs → kernel-input transform → candidate → output
+    completion — w.r.t. every float input, pulls the entry's shared
+    cotangent back through it, and compares each gradient against the
+    ``jax.vjp`` oracle under the workload's relative-error tolerance.
+
+    Returns an :class:`EvalResult` on failure (COMPILATION_FAILURE /
+    RUNTIME_ERROR with a ``bwd:`` prefix, or GRAD_MISMATCH naming the
+    worst-offending gradient), else the worst observed relative error.
+    The compiled gradient program is cached under the direction-folded
+    executable key; it takes all inputs as arguments (nothing is baked in
+    as a constant), so it is reusable across seeds like the forward one.
+    """
+    t0 = time.perf_counter()
+    cot = entry.cotangent()
+    diff_names = wl.grad_input_names(entry.inputs)
+    diff = {k: entry.inputs[k] for k in diff_names}
+    rest = {k: v for k, v in entry.inputs.items() if k not in diff_names}
+    grad_key = compiled_grad = None
+    if exe_cache is not None and declarative:
+        grad_key = executable_key(candidate, wl, platform,
+                                  direction="fwd_bwd")
+        compiled_grad = exe_cache.get(grad_key)
+    if compiled_grad is None:
+        # Dicts round-tripped through jit come back KEY-SORTED; the merge
+        # must rebuild the workload's declared input order or positional
+        # kernels would silently receive permuted arguments.
+        order = list(entry.inputs.keys())
+
+        def grad_call(diff_inputs, rest_inputs, cot):
+            def primal(d):
+                merged = {k: (d[k] if k in d else rest_inputs[k])
+                          for k in order}
+                kins = kb.workload_for_candidate_inputs(wl, merged)
+                out = fn(*kins.values())
+                return kb.finish_candidate_output(wl, merged, out)
+            _, vjp = jax.vjp(primal, diff_inputs)
+            return vjp(cot)[0]
+        try:
+            compiled_grad = jax.jit(grad_call) \
+                .lower(diff, rest, cot).compile()
+        except Exception as exc:  # noqa: BLE001 — bwd trace/lower errors
+            return EvalResult(ExecutionState.COMPILATION_FAILURE,
+                              error=f"bwd: {type(exc).__name__}: {exc}")
+        if grad_key is not None:
+            exe_cache.put(grad_key, compiled_grad)
+    phase["grad_compile"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    try:
+        got = jax.block_until_ready(compiled_grad(diff, rest, cot))
+    except Exception as exc:  # noqa: BLE001
+        return EvalResult(ExecutionState.RUNTIME_ERROR,
+                          error=f"bwd: {type(exc).__name__}: {exc}")
+    phase["grad_run"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    oracle = entry.grads()
+    worst_name, worst_err = None, 0.0
+    for name in sorted(oracle):
+        ga = np.asarray(got[name], np.float32)
+        gb = np.asarray(oracle[name], np.float32)
+        if not np.isfinite(ga).all():
+            return EvalResult(
+                ExecutionState.GRAD_MISMATCH,
+                error=f"non-finite values in gradient wrt '{name}'")
+        denom = np.maximum(np.abs(gb), 1.0)
+        gerr = float(np.max(np.abs(ga - gb) / denom)) if ga.size else 0.0
+        if gerr > worst_err:
+            worst_name, worst_err = name, gerr
+    phase["grad_check"] = time.perf_counter() - t0
+    if worst_err > wl.tol:
+        return EvalResult(
+            ExecutionState.GRAD_MISMATCH,
+            error=(f"gradient wrt '{worst_name}' (worst of "
+                   f"{len(oracle)}): max rel err {worst_err:.2e} > "
+                   f"tol {wl.tol:.0e}"),
+            max_abs_err=worst_err)
+    return worst_err
+
+
+def _bwd_time_tolerant(time_fn, candidate, shapes, platform
+                       ) -> Optional[float]:
+    try:
+        return time_fn(candidate, shapes, platform)
+    except Exception:  # noqa: BLE001 — op without a bwd model
+        return None
 
 
 def _model_time_tolerant(candidate, shapes, platform) -> Optional[float]:

@@ -5,6 +5,11 @@ KernelBench, here a pure-jnp reference), an input generator, the op family
 the generation agent targets, and a difficulty level (paper §4.1):
   L1 — single primitives, L2 — fusable operation sequences,
   L3 — architecture blocks from the assigned archs.
+
+Training-shaped workloads set ``differentiable=True`` and gain a gradient
+oracle: ``jax.vjp`` over ``ref_fn`` with a seed-derived cotangent.
+``direction="fwd_bwd"`` verification (core/verification.py) scores a
+candidate against both the forward output and these reference gradients.
 """
 from __future__ import annotations
 
@@ -27,12 +32,55 @@ class Workload:
     tol: float = 2e-3
     description: str = ""
     arch_tag: Optional[str] = None  # assigned architecture it derives from
+    differentiable: bool = False    # eligible for direction="fwd_bwd"
 
     def inputs(self, seed: int = 0) -> Dict[str, jax.Array]:
         return self.input_fn(np.random.default_rng(seed))
 
     def reference(self, inputs: Dict[str, jax.Array]) -> jax.Array:
         return self.ref_fn(**inputs)
+
+    # -- gradient oracle (direction="fwd_bwd") ------------------------------
+
+    def grad_input_names(self, inputs: Dict[str, jax.Array]) -> Tuple[str, ...]:
+        """Inputs the backward pass differentiates with respect to: the
+        inexact (floating-point) ones. Integer inputs (labels, positions)
+        carry no gradient."""
+        return tuple(k for k, v in inputs.items()
+                     if jnp.issubdtype(jnp.asarray(v).dtype, jnp.inexact))
+
+    def cotangent(self, inputs: Dict[str, jax.Array],
+                  seed: int = 0) -> jax.Array:
+        """Seed-derived cotangent shaped like the reference output.
+
+        Deterministic per (workload inputs, seed) and derived from a seed
+        stream distinct from ``inputs(seed)``'s so the cotangent is not
+        correlated with the input draw. Uses ``jax.eval_shape`` so the
+        oracle itself never runs just to size the cotangent."""
+        out = jax.eval_shape(lambda ins: self.ref_fn(**ins), inputs)
+        leaf = jax.tree_util.tree_leaves(out)[0]
+        rng = np.random.default_rng([seed, _COTANGENT_STREAM])
+        return jnp.asarray(rng.standard_normal(leaf.shape), leaf.dtype)
+
+    def grad_reference(self, inputs: Dict[str, jax.Array],
+                       cotangent: jax.Array) -> Dict[str, jax.Array]:
+        """Oracle gradients: ``jax.vjp`` over ``ref_fn`` w.r.t. every
+        float input, pulled back through ``cotangent``. Returns a dict
+        keyed like ``inputs`` (float entries only)."""
+        names = self.grad_input_names(inputs)
+        rest = {k: v for k, v in inputs.items() if k not in names}
+
+        def f(diff):
+            return self.ref_fn(**diff, **rest)
+
+        _, vjp = jax.vjp(f, {k: inputs[k] for k in names})
+        (grads,) = vjp(cotangent)
+        return dict(grads)
+
+
+#: Second word of the cotangent SeedSequence — keeps the cotangent draw
+#: decorrelated from ``inputs(seed)``'s ``default_rng(seed)`` stream.
+_COTANGENT_STREAM = 0xC07A
 
 
 def randn(rng, shape, scale=1.0, dtype=jnp.float32):

@@ -298,6 +298,30 @@ def _pallas_attention_bwd(causal, scale, platform, res, g):
 _pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
 
 
+def recompute_vjp(fwd_fn, ref_fn):
+    """Generalize the ``_pallas_attention`` machinery: wrap a Pallas-backed
+    forward in ``jax.custom_vjp`` whose backward recomputes through a
+    pure-XLA reference. ``pallas_call`` has no VJP rule, so this is what
+    makes a Pallas candidate differentiable for ``direction="fwd_bwd"``
+    verification: forward runs the kernel under test, backward is
+    flash-style recompute — ``jax.vjp`` over ``ref_fn`` at the saved
+    inputs, pulled back through the incoming cotangent. ``ref_fn`` must be
+    mathematically equivalent to ``fwd_fn`` on the same positional args."""
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fwd_fn(*args)
+
+    def fwd(*args):
+        return fwd_fn(*args), args
+
+    def bwd(res, g):
+        _, vjp = jax.vjp(ref_fn, *res)
+        return vjp(g)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
 # Self-attention at or below this Sq·Sk switches to the materialized path
 # under impl="xla" (transient (B,H,Sq,Sk) f32 / TP is cheap; no scan carries
 # are saved for backward). Longer sequences stream KV chunks.

@@ -143,8 +143,9 @@ register_platform(Platform(
                      "stability for large-magnitude inputs.",
     # The paper's §7.2 Metal case study: loop vectorization (8 elements per
     # thread) is the idiomatic landing for transferred elementwise kernels —
-    # on this profile that is the block_rows axis.
-    reference_hints={"swish": {"block_rows": 8}},
+    # on this profile that is the block_rows axis. Rope tiles cap at the
+    # threadgroup working-set ceiling (max_tile).
+    reference_hints={"swish": {"block_rows": 8}, "rope": {"block_s": 128}},
 ))
 
 register_platform(Platform(
@@ -168,5 +169,7 @@ register_platform(Platform(
                      "stability for large-magnitude inputs.",
     # Idiomatic GPU attention kernels are warp-specialized with wide query
     # tiles; any reference landing on this target biases block_q up-front.
-    reference_hints={"attention": {"block_q": 128}},
+    # Rope follows the same wide-tile bias up to the smem ceiling.
+    reference_hints={"attention": {"block_q": 128},
+                     "rope": {"block_s": 256}},
 ))

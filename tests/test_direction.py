@@ -1,0 +1,460 @@
+"""Direction-aware verification (fwd vs fwd_bwd): cache-key compatibility,
+gradient-oracle checks, GRAD_MISMATCH semantics, the two-section profile,
+and the campaign plumbing that journals/resumes the direction axis.
+
+The load-bearing regressions here:
+
+* forward-only keys are BYTE-IDENTICAL to the pre-direction scheme, so
+  persistent caches written by older runs stay valid;
+* a forward result is never served for a fwd_bwd request (direction
+  collision), while a fwd_bwd rerun against the same persistent cache is
+  100% hits;
+* a candidate whose forward output matches but whose backward is wrong
+  scores GRAD_MISMATCH naming the worst-offending gradient — not CORRECT.
+"""
+import hashlib
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign.cache import VerificationCache
+from repro.campaign.events import normalize_loop
+from repro.campaign.runner import run_campaign
+from repro.core import candidates as cand_mod
+from repro.core import kernelbench
+from repro.core.candidates import Candidate
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
+from repro.core.refinement import LoopConfig
+from repro.core.states import ExecutionState as ES
+from repro.core.synthesis import TemplateSearchBackend
+from repro.core.verification import (cache_key, executable_key, io_signature,
+                                     verify, verify_batch)
+from repro.core.workload import Workload, randn
+from repro.kernels import ref
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+def _diff_wl(name="T1/softmax_bwd", shape=(64, 128), tol=1e-5):
+    """A tiny differentiable workload for fast fwd_bwd tests."""
+    return Workload(
+        name=name, level=1, op="softmax", ref_fn=ref.softmax,
+        input_fn=lambda rng: {"x": randn(rng, shape, 3.0)},
+        input_shapes={"x": shape}, tol=tol, differentiable=True)
+
+
+def _fwd_wl(name="T1/softmax_fwd", shape=(64, 128)):
+    return Workload(
+        name=name, level=1, op="softmax", ref_fn=ref.softmax,
+        input_fn=lambda rng: {"x": randn(rng, shape, 3.0)},
+        input_shapes={"x": shape})
+
+
+# ---------------------------------------------------------------------------
+# Cache keys: fwd byte-identity, direction separation
+# ---------------------------------------------------------------------------
+
+def _legacy_cache_key(cand, wl, seed, platform_name):
+    """The EXACT pre-direction key derivation, frozen here as a regression
+    oracle: if fwd keys ever drift from this, every persistent cache and
+    CI cache-hit gate breaks silently."""
+    sig = {
+        "workload": wl.name,
+        "op": cand.op,
+        "params": sorted((k, repr(v)) for k, v in cand.params.items()),
+        "io": io_signature(wl),
+        "tol": wl.tol,
+        "seed": int(seed),
+        "platform": platform_name,
+    }
+    blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _legacy_executable_key(cand, wl, platform_name):
+    sig = {
+        "op": cand.op,
+        "params": sorted((k, repr(v)) for k, v in cand.params.items()),
+        "io": io_signature(wl),
+        "platform": platform_name,
+    }
+    blob = json.dumps(sig, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def test_fwd_cache_key_byte_identical_to_pre_direction_scheme():
+    wl = _diff_wl()
+    cand = Candidate("softmax", {"online": True, "block_rows": 8})
+    legacy = _legacy_cache_key(cand, wl, 3, "tpu_v5e")
+    assert cache_key(cand, wl, 3) == legacy
+    assert cache_key(cand, wl, 3, direction="fwd") == legacy
+    legacy_exe = _legacy_executable_key(cand, wl, "tpu_v5e")
+    assert executable_key(cand, wl) == legacy_exe
+    assert executable_key(cand, wl, direction="fwd") == legacy_exe
+
+
+def test_direction_folds_into_cache_and_executable_keys():
+    wl = _diff_wl()
+    cand = Candidate("softmax", {"online": True, "block_rows": 8})
+    assert cache_key(cand, wl, 0) != \
+        cache_key(cand, wl, 0, direction="fwd_bwd")
+    assert executable_key(cand, wl) != \
+        executable_key(cand, wl, direction="fwd_bwd")
+
+
+def test_unknown_direction_rejected():
+    wl = _diff_wl()
+    with pytest.raises(ValueError, match="unknown direction"):
+        verify(Candidate("softmax", {"online": True, "block_rows": 8}),
+               wl, seed=0, direction="bwd")
+
+
+def test_fwd_bwd_requires_differentiable_workload():
+    wl = _fwd_wl()
+    with pytest.raises(ValueError, match="differentiable"):
+        verify(Candidate("softmax", {"online": True, "block_rows": 8}),
+               wl, seed=0, direction="fwd_bwd")
+
+
+# ---------------------------------------------------------------------------
+# Gradient oracle: cotangent determinism, vjp reference
+# ---------------------------------------------------------------------------
+
+def test_cotangent_deterministic_and_seed_derived():
+    wl = _diff_wl()
+    inputs = wl.inputs(0)
+    c0a = wl.cotangent(inputs, seed=0)
+    c0b = wl.cotangent(inputs, seed=0)
+    c1 = wl.cotangent(inputs, seed=1)
+    np.testing.assert_array_equal(np.asarray(c0a), np.asarray(c0b))
+    assert not np.array_equal(np.asarray(c0a), np.asarray(c1))
+    assert c0a.shape == jax.eval_shape(lambda x: ref.softmax(x),
+                                       inputs["x"]).shape
+
+
+def test_grad_reference_matches_manual_vjp():
+    wl = _diff_wl()
+    inputs = wl.inputs(0)
+    cot = wl.cotangent(inputs, seed=0)
+    grads = wl.grad_reference(inputs, cot)
+    assert set(grads) == {"x"}
+    _, vjp = jax.vjp(ref.softmax, inputs["x"])
+    (expect,) = vjp(cot)
+    np.testing.assert_allclose(np.asarray(grads["x"]), np.asarray(expect),
+                               rtol=1e-6)
+
+
+def test_grad_input_names_excludes_integer_inputs():
+    wl = kernelbench.by_name("L1/rope")
+    inputs = wl.inputs(0)
+    assert wl.grad_input_names(inputs) == ("x",)
+
+
+# ---------------------------------------------------------------------------
+# fwd_bwd verification: CORRECT profile, GRAD_MISMATCH, caching
+# ---------------------------------------------------------------------------
+
+def test_fwd_bwd_correct_profile_has_two_sections():
+    wl = _diff_wl()
+    cand = Candidate("softmax", {"online": True, "block_rows": 8})
+    r = verify(cand, wl, seed=0, direction="fwd_bwd")
+    assert r.state is ES.CORRECT
+    prof = r.profile
+    assert prof["direction"] == "fwd_bwd"
+    assert set(prof["fwd"]) >= {"model_time_s", "baseline_time_s", "flops"}
+    assert set(prof["bwd"]) >= {"model_time_s", "baseline_time_s", "flops",
+                                "max_rel_err"}
+    factor = cand_mod.bwd_cost_factor("softmax")
+    assert prof["bwd"]["flops"] == pytest.approx(
+        prof["fwd"]["flops"] * factor)
+    assert prof["model_time_s"] == pytest.approx(
+        prof["fwd"]["model_time_s"] + prof["bwd"]["model_time_s"])
+    # the gradient phases were actually measured
+    assert {"grad_compile", "grad_run", "grad_check"} <= set(prof["phase_s"])
+
+
+def test_fwd_profile_unchanged_by_direction_axis():
+    wl = _diff_wl()
+    cand = Candidate("softmax", {"online": True, "block_rows": 8})
+    r = verify(cand, wl, seed=0)
+    assert r.state is ES.CORRECT
+    assert "direction" not in r.profile
+    assert "fwd" not in r.profile and "bwd" not in r.profile
+
+
+def test_fwd_correct_but_bwd_wrong_scores_grad_mismatch():
+    """The acceptance scenario: a candidate with a perfect forward and a
+    broken backward must NOT score CORRECT, and the feedback must name
+    the worst-offending gradient."""
+    wl = _diff_wl()
+
+    @jax.custom_vjp
+    def broken(x):
+        return ref.softmax(x)
+
+    def fwd(x):
+        return ref.softmax(x), x
+
+    def bwd(x, g):
+        _, vjp = jax.vjp(ref.softmax, x)
+        return (vjp(g)[0] * 2.0,)          # fwd-correct, gradients doubled
+
+    broken.defvjp(fwd, bwd)
+    r = verify(Candidate("softmax", {"online": True, "block_rows": 8}),
+               wl, seed=0, fn=broken, direction="fwd_bwd")
+    assert r.state is ES.GRAD_MISMATCH
+    assert "gradient wrt 'x'" in r.error
+    assert not r.correct
+    assert "grad_mismatch" in r.feedback()
+
+
+def test_naive_attention_grad_mismatch_names_gradient():
+    """The registered L2 workload behaves the same way: the naive
+    (non-online) attention candidate passes forward tolerance but its
+    -1e30 masking poisons the gradients."""
+    wl = kernelbench.by_name("L2/attention_bwd", small=True)
+    naive = Candidate("attention", dict(
+        cand_mod.NAIVE_DEFAULTS["attention"]))
+    assert not naive.params["online"]
+    r = verify(naive, wl, seed=0, direction="fwd_bwd")
+    assert r.state is ES.GRAD_MISMATCH
+    assert "gradient wrt '" in r.error and "max rel err" in r.error
+
+
+def test_fwd_result_never_served_for_fwd_bwd_and_rerun_hits(tmp_path):
+    """Direction-collision regression + the 100%-hit rerun acceptance
+    check, against one persistent cache file."""
+    wl = _diff_wl()
+    cands = [Candidate("softmax", {"online": True, "block_rows": br})
+             for br in (8, 16)]
+    path = tmp_path / "verify.jsonl"
+
+    cache = VerificationCache.open(path)
+    fwd = verify_batch(cands, wl, seed=0, cache=cache)
+    assert all(r.state is ES.CORRECT for r in fwd)
+    assert cache.hits == 0
+
+    # same candidates, fwd_bwd: the fwd results must NOT satisfy these
+    cache2 = VerificationCache.open(path)
+    bwd = verify_batch(cands, wl, seed=0, cache=cache2,
+                       direction="fwd_bwd")
+    assert cache2.hits == 0 and cache2.misses == len(cands)
+    assert all(r.profile["direction"] == "fwd_bwd" for r in bwd)
+
+    # fwd_bwd rerun against the same cache path: 100% hits
+    cache3 = VerificationCache.open(path)
+    again = verify_batch(cands, wl, seed=0, cache=cache3,
+                         direction="fwd_bwd")
+    assert cache3.hits == len(cands) and cache3.misses == 0
+    for a, b in zip(bwd, again):
+        assert a.state is b.state
+        assert a.profile["bwd"]["max_rel_err"] == \
+            b.profile["bwd"]["max_rel_err"]
+
+
+def test_fwd_bwd_shares_io_entry_and_grad_oracle_across_batch():
+    wl = _diff_wl()
+    io_cache = WorkloadIOCache()
+    cands = [Candidate("softmax", {"online": True, "block_rows": br})
+             for br in (8, 16, 32)]
+    rs = verify_batch(cands, wl, seed=0, io_cache=io_cache,
+                      direction="fwd_bwd")
+    assert all(r.state is ES.CORRECT for r in rs)
+    s = io_cache.stats()
+    assert s["oracle_computes"] == 1
+    assert s["grad_oracle_computes"] == 1      # shared across the batch
+
+
+def test_grad_executable_cached_across_seeds():
+    wl = _diff_wl()
+    exe_cache = ExecutableCache()
+    cand = Candidate("softmax", {"online": True, "block_rows": 8})
+    verify(cand, wl, seed=0, exe_cache=exe_cache, direction="fwd_bwd")
+    assert exe_cache.hits == 0
+    verify(cand, wl, seed=1, exe_cache=exe_cache, direction="fwd_bwd")
+    # fresh seed: both the forward and the gradient executable are reused
+    assert exe_cache.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# Registered differentiable workloads + the rope satellite
+# ---------------------------------------------------------------------------
+
+def test_suite_differentiable_filter():
+    diff = kernelbench.suite(differentiable=True)
+    names = {w.name for w in diff}
+    assert {"L1/rope", "L2/attention_bwd", "L2/swiglu_bwd",
+            "L3/mamba2_ssd_bwd"} <= names
+    assert all(w.differentiable for w in diff)
+    fwd_only = kernelbench.suite(differentiable=False)
+    assert not any(w.differentiable for w in fwd_only)
+    assert len(diff) + len(fwd_only) == len(kernelbench.suite())
+
+
+def test_rope_workload_reachable_and_correct():
+    wl = kernelbench.by_name("L1/rope", small=True)
+    naive = Candidate("rope", dict(cand_mod.NAIVE_DEFAULTS["rope"]))
+    r = verify(naive, wl, seed=0)
+    assert r.state is ES.CORRECT, r.error
+    r2 = verify(naive, wl, seed=0, direction="fwd_bwd")
+    assert r2.state is ES.CORRECT, r2.error
+
+
+def test_rope_reference_hints_are_in_space():
+    from repro.platforms import get_platform
+    for name in ("metal_m2", "gpu_sim"):
+        plat = get_platform(name)
+        hint = plat.reference_hints.get("rope")
+        assert hint, f"{name} has no rope reference hint"
+        space = cand_mod.space_for("rope", plat)
+        for k, v in hint.items():
+            assert v in space[k], (name, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Template backend: GRAD_MISMATCH repair
+# ---------------------------------------------------------------------------
+
+def test_template_backend_repairs_grad_mismatch_by_going_online():
+    from repro.core.states import EvalResult
+    from repro.core.synthesis import Generation
+    wl = kernelbench.by_name("L2/attention_bwd", small=True)
+    agent = TemplateSearchBackend()
+    naive = Candidate("attention", dict(
+        cand_mod.NAIVE_DEFAULTS["attention"]))
+    prev = Generation(candidate=naive, source=naive.describe())
+    bad = EvalResult(ES.GRAD_MISMATCH,
+                     error="gradient wrt 'q': max rel err 4e+01 > tol 5e-03")
+    gen = agent.generate(wl, prev=prev, prev_result=bad)
+    assert gen.candidate is not None
+    assert gen.candidate.params["online"] is True
+
+
+# ---------------------------------------------------------------------------
+# io_signature fallback accounting (satellite: silent-except bugfix)
+# ---------------------------------------------------------------------------
+
+def test_io_sig_fallback_counted_and_surfaced():
+    before = WorkloadIOCache.io_sig_fallbacks()
+
+    def exotic_input_fn(rng):
+        x = rng.standard_normal((8, 8))
+        # data-dependent guard: ShapeOnlyRng's constant fill trips it, a
+        # real generator does not — exactly the exotic-input_fn class the
+        # concrete fallback exists for
+        assert float(np.abs(np.asarray(x)).max()) > 0
+        return {"x": x}
+
+    wl = Workload(name="T1/exotic", level=1, op="swish", ref_fn=ref.swish,
+                  input_fn=exotic_input_fn, input_shapes={"x": (8, 8)})
+    sig = io_signature(wl)
+    assert sig == [("x", [8, 8], "float64")]
+    assert WorkloadIOCache.io_sig_fallbacks() == before + 1
+    assert WorkloadIOCache().stats()["io_sig_fallbacks"] == before + 1
+
+    # ...and the campaign report renders the warning
+    from repro.campaign.report import format_report, report_from_events
+    events = [{"event": "campaign_done", "cache": {},
+               "io_cache": {"entries": 1, "hits": 0, "misses": 1,
+                            "oracle_computes": 1, "grad_oracle_computes": 2,
+                            "input_computes": 1, "io_sig_fallbacks": 3}}]
+    text = format_report(report_from_events(events))
+    assert "WARNING: 3 io-signature concrete fallbacks" in text
+    assert "2 grad oracle computes" in text
+
+
+# ---------------------------------------------------------------------------
+# Campaign plumbing: journaling, mixed-direction resume, old-format logs
+# ---------------------------------------------------------------------------
+
+def test_workload_done_journals_direction(tmp_path):
+    wl = kernelbench.by_name("L1/rope", small=True)
+    log = tmp_path / "c.jsonl"
+    run_campaign([wl], LoopConfig(num_iterations=1, direction="fwd_bwd"),
+                 log_path=log, max_workers=1)
+    events = [json.loads(ln) for ln in log.read_text().splitlines()]
+    done = [e for e in events if e.get("event") == "workload_done"]
+    assert done and all(e["direction"] == "fwd_bwd" for e in done)
+    assert all(e["loop"]["direction"] == "fwd_bwd" for e in done)
+
+
+def test_resume_mixed_direction_log_keeps_directions_apart(tmp_path):
+    """One log interleaving fwd and fwd_bwd runs of the same workload:
+    each direction resumes only its own terminal events."""
+    wl = kernelbench.by_name("L1/rope", small=True)
+    log = tmp_path / "mixed.jsonl"
+    fwd_cfg = LoopConfig(num_iterations=1)
+    bwd_cfg = LoopConfig(num_iterations=1, direction="fwd_bwd")
+    first = run_campaign([wl], fwd_cfg, log_path=log, max_workers=1)
+    assert first.n_skipped == 0
+    second = run_campaign([wl], bwd_cfg, log_path=log, max_workers=1)
+    assert second.n_skipped == 0          # fwd terminal must not satisfy it
+    # now both directions are terminal: each rerun skips its own only
+    assert run_campaign([wl], fwd_cfg, log_path=log,
+                        max_workers=1).n_skipped == 1
+    assert run_campaign([wl], bwd_cfg, log_path=log,
+                        max_workers=1).n_skipped == 1
+
+
+def test_resume_tolerates_pre_direction_log_format(tmp_path):
+    """Satellite regression: a committed log written BEFORE the direction
+    field existed must keep resuming — normalize_loop fills the missing
+    field with its default, so old fwd logs read as direction='fwd'."""
+    fixture = FIXTURES / "pre_direction_campaign.jsonl"
+    events = [json.loads(ln) for ln in fixture.read_text().splitlines()]
+    for ev in events:     # guard: the fixture must stay old-format
+        assert "direction" not in ev
+        assert "direction" not in (ev.get("loop") or {})
+    log = tmp_path / "old.jsonl"
+    shutil.copy(fixture, log)
+    wl = kernelbench.by_name("L1/swish", small=True)
+    res = run_campaign([wl], LoopConfig(num_iterations=2), log_path=log,
+                       max_workers=1)
+    assert res.n_skipped == 1             # resumed, zero re-verification
+    # ...but a fwd_bwd run of the same name must NOT be satisfied by it
+    assert normalize_loop({"num_iterations": 2})["direction"] == "fwd"
+    assert normalize_loop({"num_iterations": 2, "direction": "fwd_bwd"}) \
+        != normalize_loop({"num_iterations": 2})
+
+
+def test_generation_event_journals_direction():
+    from repro.campaign.population import run_workload_pbt
+    wl = kernelbench.by_name("L2/swiglu_bwd", small=True)
+    cfg = LoopConfig(search="pbt", population=2, generations=1,
+                     direction="fwd_bwd")
+    out = run_workload_pbt(wl, cfg)
+    assert out.generations
+    for ev in out.generations:
+        assert ev["direction"] == "fwd_bwd"
+        assert ev["loop"]["direction"] == "fwd_bwd"
+    assert out.final.state is ES.CORRECT
+
+
+def test_cli_direction_fwd_bwd_runs_differentiable_suite(tmp_path, capsys):
+    from repro.campaign.__main__ import main
+    log = tmp_path / "cli.jsonl"
+    rc = main(["--suite", "small", "--level", "1", "--iters", "1",
+               "--workers", "1", "--direction", "fwd_bwd",
+               "--log", str(log)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "fast_0=" in out
+    events = [json.loads(ln) for ln in log.read_text().splitlines()]
+    done = [e for e in events if e.get("event") == "workload_done"]
+    # level-1 differentiable = L1/rope only
+    assert [e["workload"] for e in done] == ["L1/rope"]
+    assert done[0]["direction"] == "fwd_bwd"
+
+
+def test_cli_direction_fwd_bwd_errors_on_empty_selection(monkeypatch):
+    from repro.campaign import __main__ as cli
+    monkeypatch.setattr(cli.kernelbench, "suite",
+                        lambda *a, **kw: [])
+    with pytest.raises(SystemExit) as exc:
+        cli.main(["--suite", "small", "--direction", "fwd_bwd"])
+    assert exc.value.code == 2

@@ -99,7 +99,11 @@ def test_io_cache_hit_and_lazy_oracle():
     e2 = cache.entry(wl, seed=0)
     assert e1 is e2
     assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
-                             "oracle_computes": 0, "input_computes": 1}
+                             "oracle_computes": 0,
+                             "grad_oracle_computes": 0,
+                             "input_computes": 1,
+                             "io_sig_fallbacks":
+                                 WorkloadIOCache.io_sig_fallbacks()}
     out1 = e1.expected()
     out2 = e2.expected()
     assert out1 is out2

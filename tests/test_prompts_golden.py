@@ -105,6 +105,44 @@ def test_analysis_prompt_contract_fields_render_for_every_platform():
             assert label in p                          # reply contract
 
 
+# Training-shaped (fwd_bwd) analysis profile: the two-section roofline
+# ``verify`` stamps under direction="fwd_bwd". Named so it does NOT match
+# the ``analysis_prompt_*`` coverage glob below — that glob maps stems to
+# platforms one-to-one.
+def fwd_bwd_profile() -> dict:
+    prof = analysis_profile("tpu_v5e")
+    prof.update({
+        "direction": "fwd_bwd",
+        "fwd": {"model_time_s": 1.0e-4, "baseline_time_s": 2.0e-4,
+                "flops": 2.68e8},
+        "bwd": {"model_time_s": 3.0e-4, "baseline_time_s": 6.0e-4,
+                "flops": 8.05e8, "max_rel_err": 1.2e-6},
+        "model_time_s": 4.0e-4, "baseline_time_s": 8.0e-4,
+    })
+    return prof
+
+
+def test_fwd_bwd_analysis_prompt_matches_golden():
+    """The fwd_bwd analysis prompt renders BOTH rooflines (fwd and bwd
+    sections in the profile fence) plus the training-shaped guidance note
+    — and only then: the forward goldens above prove fwd prompts stayed
+    byte-identical."""
+    golden = GOLDEN_DIR / "fwd_bwd_analysis_prompt_tpu_v5e.txt"
+    plat = resolve_platform("tpu_v5e")
+    rendered = prompts.render_analysis(plat.descriptor, fwd_bwd_profile(),
+                                       space_for("matmul", plat))
+    if os.environ.get("UPDATE_GOLDENS"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        golden.write_text(rendered)
+    assert golden.exists(), (
+        f"missing golden {golden}; generate with UPDATE_GOLDENS=1")
+    assert rendered == golden.read_text(), (
+        "fwd_bwd analysis prompt drifted; if intentional, regenerate "
+        "with UPDATE_GOLDENS=1 so review sees the diff")
+    assert prompts.ANALYSIS_FWD_BWD_NOTE in rendered
+    assert '"fwd"' in rendered and '"bwd"' in rendered
+
+
 def test_goldens_cover_exactly_the_registered_platforms():
     """A platform added without a golden (or a golden for a dropped
     platform) fails here, keeping snapshots and registry in lock-step.

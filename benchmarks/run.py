@@ -29,8 +29,8 @@ import time
 from benchmarks import (bench_batch_sizes, bench_correctness,
                         bench_fastp_levels, bench_kernels_wall,
                         bench_profiling_impact, bench_roofline,
-                        bench_transfer, bench_transfer_matrix,
-                        bench_verify_throughput)
+                        bench_serve_throughput, bench_transfer,
+                        bench_transfer_matrix, bench_verify_throughput)
 from benchmarks.common import emit
 
 MODULES = {
@@ -43,6 +43,7 @@ MODULES = {
     "roofline": bench_roofline,
     "kernels_wall": bench_kernels_wall,
     "verify_throughput": bench_verify_throughput,
+    "serve_throughput": bench_serve_throughput,
 }
 
 

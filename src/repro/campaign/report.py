@@ -46,6 +46,7 @@ def report_from_events(events: Iterable[Dict[str, Any]],
     io_cache_stats = None
     exe_cache_stats = None
     llm_usage = None
+    requests: List[Dict[str, Any]] = []
     for ev in events:
         if ev.get("event") in ("workload_done", "workload_error"):
             if loop is None or \
@@ -66,6 +67,25 @@ def report_from_events(events: Iterable[Dict[str, Any]],
                 llm_usage = llm_usage or {}
                 for k, v in ev_usage.items():
                     llm_usage[k] = round(llm_usage.get(k, 0) + v, 6)
+        elif ev.get("event") == "request_done":
+            # service-daemon journals (repro.service): each request_done
+            # carries cumulative shared-cache snapshots — the latest one
+            # is the log's running total, exactly like campaign_done
+            requests.append(ev)
+            cache_stats = ev.get("cache", cache_stats)
+            io_cache_stats = ev.get("io_cache", io_cache_stats)
+            exe_cache_stats = ev.get("exe_cache", exe_cache_stats)
+            ev_usage = ev.get("llm_usage")
+            if ev_usage:
+                llm_usage = llm_usage or {}
+                for k, v in ev_usage.items():
+                    llm_usage[k] = round(llm_usage.get(k, 0) + v, 6)
+        elif ev.get("event") == "service_stop":
+            # the daemon's terminal event snapshots the final cache totals
+            # (same role campaign_done plays for batch runs)
+            cache_stats = ev.get("cache", cache_stats)
+            io_cache_stats = ev.get("io_cache", io_cache_stats)
+            exe_cache_stats = ev.get("exe_cache", exe_cache_stats)
     finals: Dict[int, List[EvalResult]] = {}
     names: Dict[int, List[str]] = {}
     iters: Dict[int, List[int]] = {}
@@ -113,7 +133,62 @@ def report_from_events(events: Iterable[Dict[str, Any]],
         # token/request accounting of LLM-backed runs (None for the
         # offline template backend): the campaign_done llm_usage snapshot
         "llm_usage": llm_usage,
+        # multi-tenant daemon traffic (None for batch-campaign logs)
+        "service": _service_section(requests),
     }
+
+
+def _service_section(requests: List[Dict[str, Any]]
+                     ) -> Optional[Dict[str, Any]]:
+    """Aggregate a service journal's ``request_done`` events: per-tenant
+    counts + attributed LLM spend, dedupe ratio, and queue/wall latency
+    percentiles. ``None`` when the log holds no daemon traffic."""
+    if not requests:
+        return None
+    tenants: Dict[str, Dict[str, Any]] = {}
+    served: Dict[str, int] = {}
+    for ev in requests:
+        t = tenants.setdefault(ev.get("tenant", "anon"),
+                               {"requests": 0, "ok": 0, "deduped": 0,
+                                "llm_usage": None})
+        t["requests"] += 1
+        if ev.get("ok"):
+            t["ok"] += 1
+        frm = ev.get("served_from") or "run"
+        served[frm] = served.get(frm, 0) + 1
+        if frm in ("memo", "coalesced"):
+            t["deduped"] += 1
+        usage = ev.get("llm_usage")
+        if usage:
+            t["llm_usage"] = t["llm_usage"] or {}
+            for k, v in usage.items():
+                t["llm_usage"][k] = round(t["llm_usage"].get(k, 0) + v, 6)
+    queue = sorted(ev.get("queue_s") for ev in requests
+                   if ev.get("queue_s") is not None)
+    wall = sorted(ev.get("wall_s") for ev in requests
+                  if ev.get("wall_s") is not None)
+    n = len(requests)
+    deduped = sum(v for k, v in served.items() if k != "run")
+    return {
+        "requests": n,
+        "ok": sum(bool(ev.get("ok")) for ev in requests),
+        "deduped": deduped,
+        "served_from": served,
+        "tenants": tenants,
+        "queue_p50_s": _percentile(queue, 0.50),
+        "queue_p95_s": _percentile(queue, 0.95),
+        "wall_p50_s": _percentile(wall, 0.50),
+        "wall_p95_s": _percentile(wall, 0.95),
+    }
+
+
+def _percentile(sorted_vals: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile over an already-sorted sample."""
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1,
+              max(0, int(round(q * len(sorted_vals) + 0.5)) - 1))
+    return sorted_vals[idx]
 
 
 def _mean_time_us(results: List[EvalResult]) -> float:
@@ -168,4 +243,24 @@ def format_report(report: Dict[str, Any]) -> str:
     if report.get("llm_usage"):
         from repro.llm import format_usage
         lines.append(f"  llm: {format_usage(report['llm_usage'])}")
+    svc = report.get("service")
+    if svc:
+        lines.append(f"service  ({svc['requests']} requests, "
+                     f"{svc['ok']} ok, {svc['deduped']} deduped)")
+        frm = ", ".join(f"{k}={v}"
+                        for k, v in sorted(svc["served_from"].items()))
+        lines.append(f"  served from: {frm}")
+        if svc.get("queue_p50_s") is not None:
+            lines.append(f"  queue latency: p50={svc['queue_p50_s']*1e3:.1f}"
+                         f" ms  p95={svc['queue_p95_s']*1e3:.1f} ms")
+        if svc.get("wall_p50_s") is not None:
+            lines.append(f"  request wall: p50={svc['wall_p50_s']*1e3:.1f}"
+                         f" ms  p95={svc['wall_p95_s']*1e3:.1f} ms")
+        for tenant, t in sorted(svc["tenants"].items()):
+            line = (f"  tenant {tenant}: {t['requests']} requests, "
+                    f"{t['ok']} ok, {t['deduped']} deduped")
+            if t.get("llm_usage"):
+                from repro.llm import format_usage
+                line += f", llm {format_usage(t['llm_usage'])}"
+            lines.append(line)
     return "\n".join(lines)

@@ -290,13 +290,19 @@ class LLMContext:
     def session(self, scheduler: Optional[Any] = None,
                 usage: Optional[UsageMeter] = None,
                 reply_check: Optional[Callable[[str], Optional[str]]] = None,
-                reprompt_instruction: Optional[str] = None) -> LLMSession:
+                reprompt_instruction: Optional[str] = None,
+                limiter: Optional[Any] = None) -> LLMSession:
         """A fresh session over the shared transport/limiter; accounting
         goes to ``usage`` (e.g. a per-leg meter parented on the fleet
         meter) or the context's own meter. ``reply_check`` /
         ``reprompt_instruction`` override the re-prompt contract (analysis
-        sessions); the defaults are the generation code-block contract."""
-        return LLMSession(self.transport, limiter=self.limiter,
+        sessions); the defaults are the generation code-block contract.
+        ``limiter`` overrides the context's shared limiter — the service
+        daemon passes a tenant-bound view of its fairness limiter here so
+        each tenant's sessions pace against that tenant's own budget."""
+        return LLMSession(self.transport,
+                          limiter=(limiter if limiter is not None
+                                   else self.limiter),
                           scheduler=scheduler,
                           usage=usage if usage is not None else self.usage,
                           max_attempts=self.max_attempts,
@@ -314,24 +320,28 @@ class LLMContext:
     def agent_factory(self, platform=None, *,
                       reference_sources: Optional[Dict] = None,
                       scheduler: Optional[Any] = None,
-                      usage: Optional[UsageMeter] = None
+                      usage: Optional[UsageMeter] = None,
+                      limiter: Optional[Any] = None
                       ) -> Callable[[], LLMBackend]:
         """A ``Campaign(agent_factory=...)``-shaped builder: every call
         returns a new ``LLMBackend`` with its own session, bound to
         ``platform`` and (for warm transfer legs) the harvested
         ``reference_sources`` by value — concurrency-safe the same way the
         matrix binds template-backend factories. ``usage`` redirects the
-        sessions' accounting (per-leg meters)."""
+        sessions' accounting (per-leg meters); ``limiter`` overrides the
+        shared limiter (per-tenant pacing in the service daemon)."""
         refs = dict(reference_sources or {})
 
         def build(platform=platform, refs=refs, usage=usage) -> LLMBackend:
-            return LLMBackend(complete=self.session(scheduler, usage=usage),
+            return LLMBackend(complete=self.session(scheduler, usage=usage,
+                                                    limiter=limiter),
                               platform=platform, reference_sources=refs)
         return build
 
     def analyzer_factory(self, platform=None, *,
                          scheduler: Optional[Any] = None,
-                         usage: Optional[UsageMeter] = None
+                         usage: Optional[UsageMeter] = None,
+                         limiter: Optional[Any] = None
                          ) -> Callable[[], Any]:
         """A ``Campaign(analyzer_factory=...)``-shaped builder for agent G:
         every call returns a new :class:`repro.llm.analyzer.LLMAnalyzer`
@@ -347,7 +357,8 @@ class LLMContext:
         def build(platform=platform, usage=usage) -> Any:
             session = self.session(scheduler, usage=usage,
                                    reply_check=analysis_reply_reason,
-                                   reprompt_instruction=ANALYSIS_REPROMPT)
+                                   reprompt_instruction=ANALYSIS_REPROMPT,
+                                   limiter=limiter)
             return LLMAnalyzer(session=session, platform=platform)
         return build
 

@@ -1,1 +1,11 @@
+"""repro.serve — the batched MODEL-INFERENCE engine (prefill/decode slots
+over a fixed-shape KV cache).
+
+Not to be confused with :mod:`repro.service`, the synthesis-as-a-service
+DAEMON (``python -m repro.service``): that package serves *synthesis
+requests* — queued ``(workload, platform, backend, direction, search)``
+jobs over a local HTTP JSON API — while this one serves *token
+generation* for a loaded model. See DESIGN.md §12 for the
+disambiguation.
+"""
 from repro.serve.engine import ServeConfig, Engine  # noqa: F401

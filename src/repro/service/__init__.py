@@ -1,0 +1,32 @@
+"""repro.service — the synthesis-as-a-service daemon (DESIGN.md §12).
+
+Naming note: this is NOT :mod:`repro.serve`. ``repro.serve`` is the
+seed's batched *model-inference* engine (prefill/decode slots over a
+fixed-shape KV cache); ``repro.service`` is the *synthesis* daemon — a
+long-running process that accepts queued synthesis requests over a local
+HTTP JSON API and multiplexes them onto the shared scheduler + cache
+stack. Start it with ``python -m repro.service``; talk to it with
+``tools/kforge_client.py``.
+
+Import discipline: importing this package must NOT import jax. The
+``python -m repro.service`` entrypoint pre-forks isolation workers
+*before* the jax-heavy daemon module loads (the pre-fork rule —
+:mod:`repro.service.workers`), so the daemon classes are exported lazily
+via PEP 562 ``__getattr__``; only :class:`PreforkPool` and
+:class:`TenantFairLimiter` (both stdlib-only) load eagerly.
+"""
+from repro.service.fairness import TenantFairLimiter
+from repro.service.workers import PreforkPool
+
+# jax-heavy names resolved lazily from repro.service.daemon on first touch
+_DAEMON_EXPORTS = ("ServiceConfig", "SynthesisService", "ServiceError",
+                   "isolated_request_handler")
+
+__all__ = ["PreforkPool", "TenantFairLimiter", *_DAEMON_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _DAEMON_EXPORTS:
+        from repro.service import daemon
+        return getattr(daemon, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

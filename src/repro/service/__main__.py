@@ -1,0 +1,109 @@
+"""CLI entrypoint: ``python -m repro.service`` (DESIGN.md §12).
+
+Order of operations is the whole point of this file: parse args, fork
+the isolation worker pool from a process that has never imported jax
+(the pre-fork rule — :mod:`repro.service.workers`), and only THEN import
+the jax-heavy daemon module and start serving. Keep module-level imports
+stdlib-only.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import threading
+from typing import List, Optional
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service",
+        description="KForge synthesis-as-a-service daemon: accepts queued "
+                    "synthesis requests over a local HTTP JSON API and "
+                    "multiplexes them onto a shared scheduler + cache "
+                    "stack (NOT repro.serve, the batched inference "
+                    "engine).")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (loopback only by design)")
+    ap.add_argument("--port", type=int, default=8741,
+                    help="TCP port; 0 picks an ephemeral port")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="scheduler slots: concurrent thread-mode requests")
+    ap.add_argument("--suite", choices=("small", "full"), default="small",
+                    help="workload resolution suite")
+    ap.add_argument("--timeout", type=float, default=None, metavar="S",
+                    help="per-request watchdog deadline in seconds "
+                         "(thread-mode runaway backstop)")
+    ap.add_argument("--log", default=None, metavar="PATH",
+                    help="JSONL service journal (also the resume source: "
+                         "a restarted daemon pre-warms its verification "
+                         "cache from it)")
+    ap.add_argument("--cache-path", default=None, metavar="PATH",
+                    help="persistent JSONL verification cache shared with "
+                         "isolated workers")
+    ap.add_argument("--isolate-workers", type=int, default=0, metavar="N",
+                    help="pre-fork N isolation workers before jax import; "
+                         "0 disables the isolate lane")
+    ap.add_argument("--rpm", type=float, default=None,
+                    help="fleet requests-per-minute budget (admissions + "
+                         "LLM calls)")
+    ap.add_argument("--tpm", type=float, default=None,
+                    help="fleet tokens-per-minute budget")
+    ap.add_argument("--tenant-rpm", type=float, default=None,
+                    help="per-tenant requests-per-minute slice of the "
+                         "fleet budget")
+    ap.add_argument("--tenant-tpm", type=float, default=None,
+                    help="per-tenant tokens-per-minute slice")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="record LLM-backed requests' sessions to this "
+                         "JSONL")
+    ap.add_argument("--replay", default=None, metavar="PATH",
+                    help="serve LLM-backed requests from a recorded "
+                         "session (zero live calls)")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.record and args.replay:
+        ap.error("--record and --replay are mutually exclusive")
+    if args.isolate_workers < 0:
+        ap.error("--isolate-workers must be >= 0")
+
+    pool = None
+    if args.isolate_workers:
+        # fork BEFORE the daemon import below pulls jax — children that
+        # fork from a jax-free parent can each import jax safely themselves
+        from repro.service.workers import PreforkPool
+        pool = PreforkPool(args.isolate_workers)
+
+    from repro.service.daemon import ServiceConfig, SynthesisService
+    cfg = ServiceConfig(
+        host=args.host, port=args.port, workers=args.workers,
+        suite=args.suite, request_timeout_s=args.timeout,
+        log_path=args.log, cache_path=args.cache_path,
+        rpm=args.rpm, tpm=args.tpm,
+        tenant_rpm=args.tenant_rpm, tenant_tpm=args.tenant_tpm,
+        llm_record=args.record, llm_replay=args.replay)
+    service = SynthesisService(cfg, pool=pool)
+    service.start()
+    print(f"kforge service on http://{service.host}:{service.port} "
+          f"(suite={cfg.suite}, workers={cfg.workers}, "
+          f"isolate_workers={args.isolate_workers}) — POST /synthesize, "
+          "GET /health, POST /shutdown", flush=True)
+
+    def _term(signum, frame):
+        threading.Thread(target=service.stop, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, _term)
+    try:
+        service.wait()
+    except KeyboardInterrupt:
+        print("draining...", flush=True)
+        service.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,837 @@
+"""Synthesis-as-a-service daemon (DESIGN.md §12).
+
+NOT :mod:`repro.serve` — that is the seed's *batched model-inference*
+engine (prefill/decode slots over a fixed-shape KV cache). This package,
+``repro.service``, is the *synthesis* service: a long-running daemon that
+keeps one warm process alive (jax imported once), accepts queued synthesis
+requests ``(workload, platform, backend, direction, search)`` over a local
+HTTP JSON API, and multiplexes them onto the PR-4 job-graph
+:class:`repro.campaign.Scheduler`.
+
+Why a daemon: the batch CLI pays the jax import, trace, and compile cost
+per process, and two users asking for the same kernel pay it twice. Here
+all tenants share one :class:`~repro.campaign.cache.VerificationCache` /
+:class:`~repro.core.evalio.WorkloadIOCache` /
+:class:`~repro.core.evalio.ExecutableCache` stack plus a completed-request
+memo, so duplicate requests dedupe at four layers:
+
+1. **memo** — an identical completed request is answered sub-ms from the
+   response memo, no scheduler round-trip at all;
+2. **in-flight coalescing** — concurrent identical requests attach to the
+   one running job (one verification bill, N responses);
+3. **verification cache** — a re-run with warm verifications (e.g. after
+   a daemon restart resumed from the journal) re-verifies nothing;
+4. **IO/executable caches** — distinct requests on the same workload
+   share generated inputs, the reference oracle, and compiled programs.
+
+Every request is journaled through the existing JSONL event layer
+(``request_received`` / ``request_done`` with tenant, queue latency and
+cache-hit stats, plus campaign-shaped ``iteration`` / ``workload_done``
+events), so ``repro.campaign.report_from_events`` renders a combined
+fast_p + service report from a service journal, and a restarted daemon
+pre-warms its verification cache from it (resume-safe).
+
+Fairness: every admission (and every LLM call of an LLM-backed request)
+reserves from a :class:`repro.service.fairness.TenantFairLimiter` — a
+per-tenant bucket pair drawing on the fleet rpm/tpm budget — so one hot
+tenant paces itself instead of starving the rest.
+
+Isolation: thread-mode requests (default) share the caches above and are
+deadline-bounded by the PR-6 scheduler watchdog (a hung job resolves as a
+timeout at the deadline, its thread abandoned). Requests with
+``"isolate": true`` run on the pre-forked
+:class:`repro.service.workers.PreforkPool` — forked BEFORE jax import by
+``python -m repro.service`` (the pre-fork rule), so a deadline actually
+SIGKILLs the worker and reclaims the slot. LLM-backed requests are
+thread-mode only: the whole point of the daemon is that they share one
+transport/limiter/meter (the ROADMAP fork-splits-shared-state gap), and
+per-request :class:`~repro.llm.UsageMeter` deltas attribute each tenant's
+spend exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+import time
+from collections import OrderedDict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.campaign import events as ev_mod
+from repro.campaign.cache import VerificationCache
+from repro.campaign.events import EventLog
+from repro.campaign.scheduler import Scheduler
+from repro.core import kernelbench
+from repro.core import verification as verif_mod
+from repro.core.evalio import ExecutableCache, WorkloadIOCache
+from repro.core.refinement import LoopConfig, run_workload
+from repro.platforms import DEFAULT_PLATFORM, available_platforms
+from repro.service.fairness import TenantFairLimiter
+from repro.service.workers import PreforkPool
+
+
+class ServiceError(Exception):
+    """A structured request failure: ``kind`` is machine-readable (the
+    client switch key), ``status`` the HTTP code. Raised by validation and
+    mapped to ``{"ok": false, "error": {"kind", "message"}}`` bodies."""
+
+    def __init__(self, kind: str, message: str, status: int = 400) -> None:
+        super().__init__(message)
+        self.kind = kind
+        self.status = status
+
+    def payload(self) -> Dict[str, Any]:
+        return {"ok": False,
+                "error": {"kind": self.kind, "message": str(self)}}
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    """Daemon configuration (the ``python -m repro.service`` flags)."""
+    host: str = "127.0.0.1"
+    port: int = 0                       # 0 = ephemeral (read service.port)
+    workers: int = 4                    # scheduler slot budget
+    suite: str = "small"                # workload resolution suite
+    request_timeout_s: Optional[float] = None   # scheduler watchdog deadline
+    log_path: Optional[Union[str, Path]] = None  # JSONL service journal
+    cache_path: Optional[str] = None    # persistent verification cache
+    rpm: Optional[float] = None         # fleet budget (admissions + LLM calls)
+    tpm: Optional[float] = None
+    tenant_rpm: Optional[float] = None  # each tenant's slice of the budget
+    tenant_tpm: Optional[float] = None
+    llm_record: Optional[str] = None    # record LLM sessions to this JSONL
+    llm_replay: Optional[str] = None    # replay a recorded session (0 live)
+    memo_entries: int = 256             # completed-request memo LRU cap
+
+
+# request fields accepted by /synthesize; anything else is a bad_request
+# (catching typos like "platfrom" instead of silently using the default)
+_SPEC_FIELDS = frozenset((
+    "workload", "platform", "backend", "direction", "search", "tenant",
+    "deadline_s", "isolate", "iters", "seed", "population", "generations",
+    "use_reference", "use_profiling", "single_shot",
+))
+
+
+@dataclasses.dataclass
+class _Request:
+    tenant: str
+    workload: Any                       # resolved Workload
+    loop: LoopConfig
+    backend: str
+    isolate: bool
+    deadline_s: Optional[float]
+    key: str                            # canonical dedupe address
+    rid: int = 0
+
+    @property
+    def name(self) -> str:
+        return self.workload.name
+
+
+class _Inflight:
+    """One running (or queued) deduped job plus its waiter count."""
+
+    __slots__ = ("job", "tenant", "t_enqueue", "waiters")
+
+    def __init__(self, tenant: str) -> None:
+        self.job = None
+        self.tenant = tenant
+        self.t_enqueue = time.perf_counter()
+        self.waiters = 1
+
+
+def _key_sha(key: str) -> str:
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+class SynthesisService:
+    """The long-running synthesis daemon; see module docstring.
+
+    Construct, :meth:`start` (binds the loopback HTTP server and returns
+    immediately), talk to it via ``tools/kforge_client.py`` or raw HTTP,
+    and :meth:`stop` to drain + shut down. ``pool`` (optional) is a
+    :class:`PreforkPool` created before jax import — required for
+    ``"isolate": true`` requests. ``llm`` (optional) injects a prebuilt
+    :class:`repro.llm.LLMContext`; by default one is built lazily from the
+    config's record/replay settings on the first LLM-backed request.
+    """
+
+    def __init__(self, cfg: ServiceConfig, *,
+                 pool: Optional[PreforkPool] = None,
+                 llm: Optional[Any] = None) -> None:
+        if cfg.suite not in ("small", "full"):
+            raise ValueError(f"suite must be 'small' or 'full', "
+                             f"got {cfg.suite!r}")
+        self.cfg = cfg
+        self.pool = pool
+        self.cache = (VerificationCache.open(cfg.cache_path)
+                      if cfg.cache_path else VerificationCache())
+        self.io_cache = WorkloadIOCache()
+        self.exe_cache = ExecutableCache()
+        self.scheduler = Scheduler(max_workers=cfg.workers,
+                                   timeout_s=cfg.request_timeout_s)
+        self.fairness = TenantFairLimiter(
+            rpm=cfg.rpm, tpm=cfg.tpm,
+            tenant_rpm=cfg.tenant_rpm, tenant_tpm=cfg.tenant_tpm)
+        self.log = EventLog(cfg.log_path) if cfg.log_path else None
+        self._llm = llm
+        self._llm_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, _Inflight] = {}
+        self._memo: "OrderedDict[str, Dict]" = OrderedDict()
+        self._rid = 0
+        self._counters = {"total": 0, "ok": 0, "errors": 0, "deduped": 0,
+                          "disconnects": 0}
+        self._tenants: Dict[str, Dict[str, Any]] = {}
+        self._accepting = True
+        self._stopped = False
+        self._stop_event = threading.Event()
+        self._t_start = time.perf_counter()
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self._warmed = 0
+        if self.log is not None:
+            # resume-safe journal: a restarted daemon pre-warms its
+            # verification cache from the previous runs' iteration /
+            # generation events, so a re-submitted request re-verifies
+            # nothing it already paid for
+            self._warmed = ev_mod.warm_cache(self.cache, self.log.events())
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def host(self) -> str:
+        return self.cfg.host
+
+    @property
+    def port(self) -> int:
+        if self._httpd is None:
+            raise RuntimeError("service not started")
+        return self._httpd.server_address[1]
+
+    def start(self) -> "SynthesisService":
+        """Bind the loopback HTTP server and serve in a daemon thread."""
+        self._httpd = _ServiceHTTPServer((self.cfg.host, self.cfg.port),
+                                         _Handler)
+        self._httpd.service = self
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="kforge-service-http",
+                                        daemon=True)
+        self._thread.start()
+        if self.log is not None:
+            self.log.append({
+                "event": "service_start", "host": self.cfg.host,
+                "port": self.port, "suite": self.cfg.suite,
+                "workers": self.cfg.workers,
+                "request_timeout_s": self.cfg.request_timeout_s,
+                "prefork_workers": self.pool.size if self.pool else 0,
+                "warmed_cache_entries": self._warmed,
+            })
+        return self
+
+    def begin_shutdown(self) -> int:
+        """Stop admitting new requests; returns the in-flight count. The
+        HTTP /shutdown route calls this before responding, then finishes
+        via :meth:`stop` on a separate thread."""
+        with self._lock:
+            self._accepting = False
+            return len(self._inflight)
+
+    def stop(self, drain: bool = True) -> None:
+        """Graceful shutdown: refuse new work, drain in-flight jobs (every
+        accepted request still gets its response), journal ``service_stop``
+        with the final cache stats (the persistent verification cache is
+        append-on-put, so its file is already flushed), close the HTTP
+        server and the prefork pool. Idempotent."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
+            self._accepting = False
+            jobs = [e.job for e in self._inflight.values()
+                    if e.job is not None]
+        if drain:
+            for job in jobs:
+                job.done.wait()
+        if self.log is not None:
+            self.log.append({
+                "event": "service_stop", "drained": len(jobs),
+                "requests": dict(self._counters),
+                "cache": self.cache.stats(),
+                "io_cache": self.io_cache.stats(),
+                "exe_cache": self.exe_cache.stats(),
+            })
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(5.0)
+        if self.pool is not None:
+            self.pool.close()
+        self._stop_event.set()
+
+    def wait(self) -> None:
+        """Block until :meth:`stop` completes (the CLI foreground loop)."""
+        self._stop_event.wait()
+
+    # -- request validation ------------------------------------------------
+
+    def _parse(self, body: Dict[str, Any]) -> _Request:
+        if not isinstance(body, dict):
+            raise ServiceError("bad_request",
+                               "request body must be a JSON object")
+        unknown = sorted(set(body) - _SPEC_FIELDS)
+        if unknown:
+            raise ServiceError(
+                "bad_request",
+                f"unknown request field(s) {', '.join(unknown)}; accepted: "
+                + ", ".join(sorted(_SPEC_FIELDS)))
+        name = body.get("workload")
+        if not isinstance(name, str) or not name:
+            raise ServiceError("bad_request",
+                               "'workload' (string) is required")
+        small = self.cfg.suite == "small"
+        try:
+            wl = kernelbench.by_name(name, small=small)
+        except KeyError:
+            names = ", ".join(w.name for w in kernelbench.suite(small=small))
+            raise ServiceError("bad_request",
+                               f"unknown workload {name!r}; available "
+                               f"({self.cfg.suite} suite): {names}")
+        platform = body.get("platform", DEFAULT_PLATFORM)
+        if platform not in available_platforms():
+            raise ServiceError(
+                "bad_request",
+                f"unknown platform {platform!r}; available: "
+                + ", ".join(available_platforms()))
+        backend = body.get("backend", "template")
+        if backend not in ("template", "llm"):
+            raise ServiceError("bad_request",
+                               f"backend must be 'template' or 'llm', "
+                               f"got {backend!r}")
+        direction = body.get("direction", "fwd")
+        if direction not in ("fwd", "fwd_bwd"):
+            raise ServiceError("bad_request",
+                               f"direction must be 'fwd' or 'fwd_bwd', "
+                               f"got {direction!r}")
+        if direction == "fwd_bwd" and not wl.differentiable:
+            raise ServiceError(
+                "bad_request",
+                f"workload {name!r} is not differentiable; fwd_bwd "
+                "verification needs a jax.vjp-compatible oracle")
+        search = body.get("search", "lineage")
+        if search not in ("lineage", "pbt"):
+            raise ServiceError("bad_request",
+                               f"search must be 'lineage' or 'pbt', "
+                               f"got {search!r}")
+        if search == "pbt" and backend == "llm":
+            raise ServiceError(
+                "bad_request",
+                "search 'pbt' requires the template backend: population "
+                "search exploit-copies declarative tiling params, which "
+                "LLM callable candidates do not carry")
+        isolate = bool(body.get("isolate", False))
+        if isolate and self.pool is None:
+            raise ServiceError(
+                "bad_request",
+                "isolate requested but this daemon has no pre-forked "
+                "worker pool (start it with --isolate-workers N)")
+        if isolate and backend == "llm":
+            raise ServiceError(
+                "bad_request",
+                "LLM-backed requests are thread-mode only: a forked worker "
+                "would split the daemon's shared transport/limiter/meter "
+                "state (drop 'isolate')")
+        deadline = body.get("deadline_s")
+        if deadline is not None:
+            if not isinstance(deadline, (int, float)) or deadline <= 0:
+                raise ServiceError("bad_request",
+                                   f"deadline_s must be a positive number, "
+                                   f"got {deadline!r}")
+            deadline = float(deadline)
+        iters = body.get("iters", 5)
+        if not isinstance(iters, int) or iters < 1:
+            raise ServiceError("bad_request",
+                               f"iters must be a positive integer, "
+                               f"got {iters!r}")
+        population = body.get("population", 4)
+        generations = body.get("generations", 4)
+        if search == "pbt":
+            if not isinstance(population, int) or population < 2:
+                raise ServiceError("bad_request",
+                                   f"population must be an integer >= 2, "
+                                   f"got {population!r}")
+            if not isinstance(generations, int) or generations < 1:
+                raise ServiceError("bad_request",
+                                   f"generations must be an integer >= 1, "
+                                   f"got {generations!r}")
+        tenant = body.get("tenant", "anon")
+        if not isinstance(tenant, str) or not tenant:
+            raise ServiceError("bad_request",
+                               "'tenant' must be a non-empty string")
+        loop = LoopConfig(
+            num_iterations=iters, seed=int(body.get("seed", 0)),
+            platform=platform, direction=direction, search=search,
+            population=population, generations=generations,
+            use_reference=bool(body.get("use_reference", False)),
+            use_profiling=bool(body.get("use_profiling", False)),
+            single_shot=bool(body.get("single_shot", False)))
+        key = json.dumps({"workload": name, "suite": self.cfg.suite,
+                          "backend": backend, "isolate": isolate,
+                          "loop": dataclasses.asdict(loop)}, sort_keys=True)
+        return _Request(tenant=tenant, workload=wl, loop=loop,
+                        backend=backend, isolate=isolate,
+                        deadline_s=deadline, key=key)
+
+    # -- LLM context -------------------------------------------------------
+
+    def _llm_context(self):
+        """The daemon-wide LLM fleet context (one shared transport, meter
+        and — via the fairness limiter — pacing), built lazily on the
+        first LLM-backed request."""
+        with self._llm_lock:
+            if self._llm is None:
+                from repro.llm import build_llm_context
+                self._llm = build_llm_context(record=self.cfg.llm_record,
+                                              replay=self.cfg.llm_replay)
+            return self._llm
+
+    # -- request execution -------------------------------------------------
+
+    def _execute(self, req: _Request) -> Dict[str, Any]:
+        """Run one request to completion inside a scheduler job; returns
+        the response core (always a dict, ``ok`` False on infra errors)."""
+        wl, loop = req.workload, req.loop
+        t0 = time.perf_counter()
+        if req.isolate:
+            spec = {"workload": wl.name, "suite": self.cfg.suite,
+                    "loop": dataclasses.asdict(loop),
+                    "cache_path": self.cfg.cache_path}
+            timeout = req.deadline_s or self.cfg.request_timeout_s
+            core = self.pool.submit(spec, timeout_s=timeout)
+            core.setdefault("workload", wl.name)
+            core.setdefault("platform", loop.platform)
+            core["isolated"] = True
+            core["duration_s"] = time.perf_counter() - t0
+            core["llm_usage"] = None
+            if core.get("ok") and self.log is not None:
+                self._journal_workload_done(req, core)
+            return core
+        meter = None
+        agent = None
+        if req.backend == "llm":
+            ctx = self._llm_context()
+            from repro.llm import UsageMeter
+            # per-request meter parented on the fleet meter: THIS tenant's
+            # spend journals as its own delta (the PR-5 matrix-leg pattern)
+            # while the fleet meter still totals everything
+            meter = UsageMeter(parent=ctx.usage)
+            agent = ctx.agent_factory(
+                platform=loop.platform, scheduler=self.scheduler,
+                usage=meter, limiter=self.fairness.for_tenant(req.tenant))()
+        on_iteration = None
+        if self.log is not None:
+            def on_iteration(it):
+                self.log.append(ev_mod.iteration_event(
+                    wl.name, wl.level, it, platform=loop.platform))
+        if loop.search == "pbt":
+            from repro.campaign import population as pop_mod
+            outcome = pop_mod.run_workload_pbt(
+                wl, loop, cache=self.cache, io_cache=self.io_cache,
+                exe_cache=self.exe_cache, scheduler=self.scheduler,
+                on_generation=(self.log.append if self.log is not None
+                               else None))
+        else:
+            outcome = run_workload(
+                wl, loop, agent=agent, cache=self.cache,
+                io_cache=self.io_cache, exe_cache=self.exe_cache,
+                on_iteration=on_iteration)
+        final = outcome.final
+        usage = meter.snapshot() if meter is not None else None
+        if usage is not None:
+            self._account_llm(req.tenant, usage)
+        core = {
+            "ok": True, "workload": wl.name, "platform": loop.platform,
+            "level": wl.level, "state": final.state.value,
+            "correct": final.correct, "speedup": final.speedup,
+            "model_time_s": final.model_time_s,
+            "iterations": len(outcome.logs),
+            "iters_to_correct": ev_mod.iterations_to_correct(outcome.logs),
+            "result": ev_mod.result_to_dict(final),
+            "isolated": False,
+            "duration_s": time.perf_counter() - t0,
+            "llm_usage": usage,
+        }
+        if self.log is not None:
+            self._journal_workload_done(req, core)
+        return core
+
+    def _journal_workload_done(self, req: _Request, core: Dict) -> None:
+        """Campaign-shaped terminal event: the service journal stays a
+        valid campaign log (``--report-only`` and resume both work)."""
+        self.log.append({
+            "event": "workload_done", "workload": req.name,
+            "level": req.workload.level,
+            "duration_s": core.get("duration_s"),
+            "iterations": core.get("iterations"),
+            "iters_to_correct": core.get("iters_to_correct"),
+            "io": core.get("io") or verif_mod.io_signature(req.workload),
+            "platform": req.loop.platform,
+            "direction": req.loop.direction,
+            "loop": dataclasses.asdict(req.loop),
+            "final": core["result"],
+        })
+
+    def _run_request(self, req: _Request) -> Dict[str, Any]:
+        """The scheduler-job body: execute, then retire the in-flight
+        entry and (on success) memoize the response core."""
+        try:
+            core = self._execute(req)
+        finally:
+            with self._lock:
+                self._inflight.pop(req.key, None)
+        if core.get("ok"):
+            memo = dict(core)
+            # memo copies never re-attribute the creator's LLM spend
+            memo["llm_usage"] = None
+            with self._lock:
+                self._memo[req.key] = memo
+                self._memo.move_to_end(req.key)
+                while len(self._memo) > self.cfg.memo_entries:
+                    self._memo.popitem(last=False)
+        return core
+
+    # -- the /synthesize route ---------------------------------------------
+
+    def handle_synthesize(self, body: Dict[str, Any]
+                          ) -> Tuple[int, Dict[str, Any]]:
+        t_recv = time.perf_counter()
+        req = self._parse(body)
+        with self._lock:
+            if not self._accepting:
+                raise ServiceError("shutting_down",
+                                   "daemon is draining; not accepting new "
+                                   "requests", status=503)
+            self._rid += 1
+            req.rid = self._rid
+        if self.log is not None:
+            self.log.append({
+                "event": "request_received", "rid": req.rid,
+                "tenant": req.tenant, "workload": req.name,
+                "platform": req.loop.platform, "backend": req.backend,
+                "search": req.loop.search,
+                "direction": req.loop.direction,
+                "isolate": req.isolate, "key": _key_sha(req.key),
+            })
+        # per-tenant admission pacing: the delay is slept HERE, in the
+        # handler thread, before the request ever touches the scheduler
+        throttle_s = self.fairness.reserve(req.tenant, tokens=0)
+        if throttle_s > 0:
+            time.sleep(throttle_s)
+
+        served_from = "run"
+        entry: Optional[_Inflight] = None
+        with self._lock:
+            memo = self._memo.get(req.key)
+            if memo is not None:
+                self._memo.move_to_end(req.key)
+            else:
+                entry = self._inflight.get(req.key)
+                if entry is not None:
+                    entry.waiters += 1
+                    served_from = "coalesced"
+                else:
+                    entry = _Inflight(req.tenant)
+                    self._inflight[req.key] = entry
+                    entry.job = self.scheduler.submit(
+                        f"req{req.rid}:{req.name}",
+                        lambda: self._run_request(req))
+        if memo is not None:
+            resp = dict(memo)
+            resp.update(served_from="memo", queue_s=0.0,
+                        throttle_s=round(throttle_s, 6))
+            return self._finish(req, 200, resp, t_recv)
+
+        job = entry.job
+        if not job.done.wait(req.deadline_s):
+            cancelled = False
+            with self._lock:
+                entry.waiters -= 1
+                if entry.waiters == 0 and job.try_cancel(
+                        f"deadline {req.deadline_s}s exceeded while queued"):
+                    self._inflight.pop(req.key, None)
+                    cancelled = True
+            tail = ("cancelled while queued" if cancelled else
+                    "still running; its result will land in the daemon's "
+                    "memo and caches")
+            resp = {"ok": False, "workload": req.name,
+                    "served_from": served_from,
+                    "throttle_s": round(throttle_s, 6),
+                    "error": {"kind": "deadline",
+                              "message": f"request exceeded its "
+                                         f"{req.deadline_s}s deadline "
+                                         f"({tail})"}}
+            return self._finish(req, 504, resp, t_recv)
+
+        queue_s = max(0.0, (job.started_at or entry.t_enqueue)
+                      - entry.t_enqueue)
+        if job.error is not None:
+            kind = "timeout" if "timeout" in job.error else "run_error"
+            resp = {"ok": False, "workload": req.name,
+                    "served_from": served_from,
+                    "queue_s": round(queue_s, 6),
+                    "throttle_s": round(throttle_s, 6),
+                    "error": {"kind": kind, "message": job.error}}
+            return self._finish(req, 504 if kind == "timeout" else 500,
+                                resp, t_recv)
+        resp = dict(job.value)
+        resp.update(served_from=served_from, queue_s=round(queue_s, 6),
+                    throttle_s=round(throttle_s, 6))
+        if served_from == "coalesced":
+            # the job creator's tenant owns the LLM spend, not attachers
+            resp["llm_usage"] = None
+        if not resp.get("ok"):
+            err = resp.get("error") or {}
+            status = 504 if err.get("kind") == "deadline" else 500
+            return self._finish(req, status, resp, t_recv)
+        return self._finish(req, 200, resp, t_recv)
+
+    def _finish(self, req: _Request, status: int, resp: Dict[str, Any],
+                t_recv: float) -> Tuple[int, Dict[str, Any]]:
+        """Stamp response metadata, bump counters, journal request_done."""
+        resp["rid"] = req.rid
+        resp["tenant"] = req.tenant
+        resp["wall_s"] = round(time.perf_counter() - t_recv, 6)
+        ok = bool(resp.get("ok"))
+        deduped = resp.get("served_from") in ("memo", "coalesced")
+        with self._lock:
+            self._counters["total"] += 1
+            self._counters["ok" if ok else "errors"] += 1
+            if deduped:
+                self._counters["deduped"] += 1
+            t = self._tenants.setdefault(
+                req.tenant, {"requests": 0, "ok": 0, "errors": 0,
+                             "deduped": 0, "llm_usage": None})
+            t["requests"] += 1
+            t["ok" if ok else "errors"] += 1
+            if deduped:
+                t["deduped"] += 1
+        if self.log is not None:
+            self.log.append({
+                "event": "request_done", "rid": req.rid,
+                "tenant": req.tenant, "workload": req.name,
+                "platform": req.loop.platform, "ok": ok, "status": status,
+                "served_from": resp.get("served_from"),
+                "state": resp.get("state"),
+                "queue_s": resp.get("queue_s"),
+                "wall_s": resp.get("wall_s"),
+                "throttle_s": resp.get("throttle_s"),
+                "llm_usage": resp.get("llm_usage"),
+                "error": resp.get("error"),
+                # cumulative shared-cache snapshots: cache effectiveness is
+                # auditable per request from the journal alone
+                "cache": self.cache.stats(),
+                "io_cache": self.io_cache.stats(),
+                "exe_cache": self.exe_cache.stats(),
+            })
+        return status, resp
+
+    def _account_llm(self, tenant: str, usage: Dict[str, Any]) -> None:
+        with self._lock:
+            t = self._tenants.setdefault(
+                tenant, {"requests": 0, "ok": 0, "errors": 0,
+                         "deduped": 0, "llm_usage": None})
+            if t["llm_usage"] is None:
+                t["llm_usage"] = dict(usage)
+            else:
+                for k, v in usage.items():
+                    t["llm_usage"][k] = round(t["llm_usage"].get(k, 0) + v, 6)
+
+    def note_disconnect(self) -> None:
+        """A client vanished mid-request (broken pipe while replying);
+        journaled so operators can see flapping clients — the daemon
+        itself keeps serving."""
+        with self._lock:
+            self._counters["disconnects"] += 1
+        if self.log is not None:
+            self.log.append({"event": "request_error",
+                             "kind": "client_disconnect"})
+
+    def note_bad_request(self, kind: str, message: str) -> None:
+        with self._lock:
+            self._counters["errors"] += 1
+        if self.log is not None:
+            self.log.append({"event": "request_error", "kind": kind,
+                             "error": message})
+
+    # -- the /health route -------------------------------------------------
+
+    def health(self) -> Dict[str, Any]:
+        with self._lock:
+            counters = dict(self._counters)
+            tenants = {k: dict(v) for k, v in sorted(self._tenants.items())}
+            inflight = len(self._inflight)
+            memo_entries = len(self._memo)
+            accepting = self._accepting
+        out = {
+            "ok": True, "accepting": accepting,
+            "uptime_s": round(time.perf_counter() - self._t_start, 3),
+            "suite": self.cfg.suite,
+            "requests": counters, "tenants": tenants,
+            "inflight": inflight, "memo_entries": memo_entries,
+            "warmed_cache_entries": self._warmed,
+            "cache": self.cache.stats(),
+            "io_cache": self.io_cache.stats(),
+            "exe_cache": self.exe_cache.stats(),
+            "scheduler": self.scheduler.telemetry(),
+            "fairness": self.fairness.stats(),
+            "pool": self.pool.stats() if self.pool is not None else None,
+        }
+        if self._llm is not None:
+            out["llm_usage"] = self._llm.usage.snapshot()
+        return out
+
+    def report_text(self) -> str:
+        """The combined fast_p + service report rendered from the journal
+        (requires ``log_path``)."""
+        from repro.campaign.report import format_report, report_from_events
+        if self.log is None:
+            raise ServiceError("no_journal",
+                               "this daemon runs without --log; no journal "
+                               "to report from", status=404)
+        return format_report(report_from_events(self.log.events()))
+
+
+# -- prefork child-side handler ---------------------------------------------
+
+def isolated_request_handler(spec: Dict[str, Any]) -> Dict[str, Any]:
+    """The request handler run INSIDE a pre-forked worker (imported by the
+    child after the fork — this module pulls jax, which is exactly why
+    :mod:`repro.service.workers` defers the import).
+
+    Isolated workers share no memory with the daemon: only the persistent
+    JSONL verification cache (``cache_path``) is shared, via the
+    filesystem. Returns the same response core shape as the thread path.
+    """
+    wl = kernelbench.by_name(spec["workload"],
+                             small=spec.get("suite", "small") == "small")
+    loop = LoopConfig(**spec["loop"])
+    cache = (VerificationCache.open(spec["cache_path"])
+             if spec.get("cache_path") else None)
+    t0 = time.perf_counter()
+    outcome = run_workload(wl, loop, cache=cache)
+    final = outcome.final
+    return {
+        "ok": True, "workload": wl.name, "platform": loop.platform,
+        "level": wl.level, "state": final.state.value,
+        "correct": final.correct, "speedup": final.speedup,
+        "model_time_s": final.model_time_s,
+        "iterations": len(outcome.logs),
+        "iters_to_correct": ev_mod.iterations_to_correct(outcome.logs),
+        "result": ev_mod.result_to_dict(final),
+        "io": verif_mod.io_signature(wl),
+        "duration_s": time.perf_counter() - t0,
+    }
+
+
+# -- HTTP layer --------------------------------------------------------------
+
+class _ServiceHTTPServer(ThreadingHTTPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+    service: SynthesisService
+
+
+class _Handler(BaseHTTPRequestHandler):
+    """Thin JSON shim over :class:`SynthesisService`: one thread per
+    connection (ThreadingHTTPServer), every route answered with a JSON
+    body, every failure structured. Client disconnects while replying are
+    absorbed (``note_disconnect``) — a flapping client never takes the
+    daemon down."""
+
+    protocol_version = "HTTP/1.1"
+    server_version = "KForgeService/1.0"
+    timeout = 120
+
+    @property
+    def service(self) -> SynthesisService:
+        return self.server.service
+
+    def log_message(self, fmt: str, *args: Any) -> None:  # quiet
+        pass
+
+    def _reply(self, status: int, payload: Dict[str, Any]) -> None:
+        data = json.dumps(payload, default=str).encode()
+        try:
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+        except (BrokenPipeError, ConnectionResetError, OSError):
+            self.close_connection = True
+            self.service.note_disconnect()
+
+    def _json_body(self) -> Dict[str, Any]:
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length > 0 else b""
+        if len(raw) < length:
+            raise ServiceError(
+                "client_disconnect",
+                f"request body truncated ({len(raw)}/{length} bytes) — "
+                "client disconnected mid-request", status=400)
+        try:
+            return json.loads(raw.decode() or "{}")
+        except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+            raise ServiceError("bad_json",
+                               f"request body is not valid JSON: {exc}")
+
+    def do_POST(self) -> None:  # noqa: N802 — stdlib handler contract
+        try:
+            if self.path == "/shutdown":
+                drained = self.service.begin_shutdown()
+                self._reply(200, {"ok": True, "draining": drained})
+                threading.Thread(target=self.service.stop,
+                                 daemon=True).start()
+                return
+            body = self._json_body()
+            if self.path == "/synthesize":
+                status, payload = self.service.handle_synthesize(body)
+            else:
+                raise ServiceError("not_found",
+                                   f"unknown route {self.path!r}; POST "
+                                   "/synthesize or /shutdown", status=404)
+        except ServiceError as exc:
+            if exc.kind in ("bad_json", "bad_request", "client_disconnect"):
+                self.service.note_bad_request(exc.kind, str(exc))
+            status, payload = exc.status, exc.payload()
+        except Exception as exc:  # noqa: BLE001 — daemon must stay up
+            status, payload = 500, {
+                "ok": False,
+                "error": {"kind": "internal",
+                          "message": f"{type(exc).__name__}: {exc}"}}
+        self._reply(status, payload)
+
+    def do_GET(self) -> None:  # noqa: N802 — stdlib handler contract
+        try:
+            if self.path == "/health":
+                status, payload = 200, self.service.health()
+            elif self.path == "/report":
+                status, payload = 200, {"ok": True,
+                                        "report": self.service.report_text()}
+            else:
+                raise ServiceError("not_found",
+                                   f"unknown route {self.path!r}; GET "
+                                   "/health or /report", status=404)
+        except ServiceError as exc:
+            status, payload = exc.status, exc.payload()
+        except Exception as exc:  # noqa: BLE001 — daemon must stay up
+            status, payload = 500, {
+                "ok": False,
+                "error": {"kind": "internal",
+                          "message": f"{type(exc).__name__}: {exc}"}}
+        self._reply(status, payload)

@@ -1,0 +1,119 @@
+"""Per-tenant fairness over the fleet rate budget (DESIGN.md §12).
+
+The PR-5 :class:`repro.llm.RateLimiter` already solves fleet-wide pacing:
+one shared token-bucket pair (rpm/tpm) turns N concurrent workers into an
+evenly spaced call train. A multi-tenant daemon needs one more property —
+a single hot tenant must not monopolize the whole fleet budget while
+everyone else starves.
+
+:class:`TenantFairLimiter` composes two bucket layers:
+
+* **the fleet bucket** — every reserve, from every tenant, debits it, so
+  the aggregate issue schedule can never exceed the fleet budget no
+  matter how tenants interleave (the hypothesis property lane proves
+  this: burst allowance + refill is a hard ceiling);
+* **a per-tenant bucket** (lazily minted per tenant when per-tenant
+  budgets are configured) — a tenant that has spent its share waits on
+  its OWN deficit, while a fresh tenant's bucket is full, so its pacing
+  delay is bounded by the fleet deficit alone rather than by the hot
+  tenant's backlog.
+
+``reserve(tenant, tokens)`` returns ``max(fleet delay, tenant delay)`` —
+debiting both layers immediately, never sleeping (sleeping is the
+caller's job, exactly like the underlying limiter). ``for_tenant``
+returns a bound single-argument adapter that satisfies the
+``LLMSession(limiter=...)`` duck type, so the daemon's per-request LLM
+sessions draw their pacing from the tenant's buckets transparently.
+
+Deterministic under an injected ``clock``; thread-safe.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+from repro.llm.limiter import RateLimiter
+
+
+class _TenantBoundLimiter:
+    """``RateLimiter``-shaped view of one tenant's slice: ``reserve(tokens)``
+    delegates to ``fair.reserve(tenant, tokens)``. What the daemon hands to
+    per-request :class:`repro.llm.LLMSession` instances."""
+
+    __slots__ = ("_fair", "tenant")
+
+    def __init__(self, fair: "TenantFairLimiter", tenant: str) -> None:
+        self._fair = fair
+        self.tenant = tenant
+
+    def reserve(self, tokens: int = 0) -> float:
+        return self._fair.reserve(self.tenant, tokens)
+
+    def stats(self) -> Dict[str, Optional[float]]:
+        return self._fair.tenant_stats(self.tenant)
+
+
+class TenantFairLimiter:
+    """Fleet bucket + lazily minted per-tenant buckets; see module doc.
+
+    Args:
+        rpm / tpm: the FLEET budgets (requests / tokens per minute;
+            ``None`` = unlimited), enforced across all tenants combined.
+        tenant_rpm / tenant_tpm: each tenant's own budget. ``None`` skips
+            the per-tenant layer entirely (fleet pacing only).
+        clock: monotonic time source (injectable for the property tests).
+    """
+
+    def __init__(self, rpm: Optional[float] = None,
+                 tpm: Optional[float] = None, *,
+                 tenant_rpm: Optional[float] = None,
+                 tenant_tpm: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.fleet = RateLimiter(rpm=rpm, tpm=tpm, clock=clock)
+        self.tenant_rpm = tenant_rpm
+        self.tenant_tpm = tenant_tpm
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._tenants: Dict[str, RateLimiter] = {}
+
+    def _bucket(self, tenant: str) -> Optional[RateLimiter]:
+        if self.tenant_rpm is None and self.tenant_tpm is None:
+            return None
+        with self._lock:
+            bucket = self._tenants.get(tenant)
+            if bucket is None:
+                bucket = RateLimiter(rpm=self.tenant_rpm,
+                                     tpm=self.tenant_tpm, clock=self._clock)
+                self._tenants[tenant] = bucket
+            return bucket
+
+    def reserve(self, tenant: str, tokens: int = 0) -> float:
+        """Debit one request (+ ``tokens``) from the fleet bucket AND the
+        tenant's own bucket; return the pacing delay (the max of the two
+        layers' deficits). Never sleeps, never blocks."""
+        wait = self.fleet.reserve(tokens)
+        bucket = self._bucket(tenant)
+        if bucket is not None:
+            wait = max(wait, bucket.reserve(tokens))
+        return wait
+
+    def for_tenant(self, tenant: str) -> _TenantBoundLimiter:
+        """A ``limiter.reserve(tokens)``-shaped adapter bound to one
+        tenant — drop-in for :class:`repro.llm.LLMSession`'s limiter."""
+        return _TenantBoundLimiter(self, tenant)
+
+    def tenant_stats(self, tenant: str) -> Dict[str, Optional[float]]:
+        bucket = self._bucket(tenant)
+        return bucket.stats() if bucket is not None else {}
+
+    def stats(self) -> Dict[str, object]:
+        """Fleet stats plus per-tenant reserved-work counters — the
+        daemon's ``/health`` fairness section."""
+        with self._lock:
+            tenants = {name: bucket.stats()
+                       for name, bucket in sorted(self._tenants.items())}
+        return {"fleet": self.fleet.stats(),
+                "tenant_rpm": self.tenant_rpm,
+                "tenant_tpm": self.tenant_tpm,
+                "tenants": tenants}

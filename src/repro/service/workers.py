@@ -1,0 +1,223 @@
+"""Pre-forked isolation workers for the synthesis daemon.
+
+THE PRE-FORK RULE (DESIGN.md §12): this module must stay stdlib-only at
+import time, and :class:`PreforkPool` must be constructed BEFORE anything
+imports jax. ``fork()`` after jax import is the classic hazard the
+campaign CLI's ``--isolate`` mode documents — jax spins up threads and
+holds locks that a forked child inherits mid-state. The daemon sidesteps
+it structurally: ``python -m repro.service`` forks its worker pool first,
+from a process that has never imported jax, and only then imports the
+jax-heavy daemon module. Each worker imports jax *itself*, inside the
+child, on its first request.
+
+A worker is one long-lived child process looping on a duplex pipe:
+``recv`` a request spec (a JSON-able dict), run it through the handler,
+``send`` back a result dict. The parent-side :meth:`PreforkPool.submit`
+is synchronous: it checks out an idle worker, ships the spec, and waits
+for the reply up to ``timeout_s`` — on expiry the worker is SIGKILLed
+(real kill semantics, like the PR-4 process-isolation scheduler) and a
+fresh worker is forked in its place; on a worker dying mid-job (OOM kill,
+segfault, bug) the death is detected as pipe EOF, the slot is reclaimed,
+and the caller gets a structured ``worker_died`` error instead of a hang.
+The pool never takes the daemon down: every failure path returns an
+error dict and respawns the worker.
+
+The cost of the lane (mirroring ``--isolate``): workers share no
+in-memory caches with the daemon or each other — only the persistent
+JSONL verification cache (``cache_path``) is shared, through the
+filesystem. Thread-mode requests (the daemon default) are where the
+shared WorkloadIOCache/ExecutableCache/VerificationCache stack dedupes
+concurrent tenants; the prefork lane buys kill-ability instead.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+
+def _default_handler(spec: Dict[str, Any]) -> Dict[str, Any]:
+    """Resolve the synthesis handler lazily INSIDE the child — this import
+    pulls jax, which must happen after the fork, never before it."""
+    from repro.service.daemon import isolated_request_handler
+    return isolated_request_handler(spec)
+
+
+def _worker_main(conn, handler: Optional[Callable[[Dict], Dict]]) -> None:
+    """Child process loop: request spec in, result dict out, forever.
+
+    ``None`` over the pipe (or parent-side EOF) is the shutdown sentinel.
+    A handler exception is isolated into a structured error result — a
+    worker only dies for process-level reasons (kill, OOM, crash), which
+    the parent detects as EOF.
+    """
+    if handler is None:
+        handler = _default_handler
+    while True:
+        try:
+            spec = conn.recv()
+        except (EOFError, OSError):
+            return
+        if spec is None:
+            return
+        try:
+            result = handler(spec)
+        except BaseException as exc:  # noqa: BLE001 — isolate the worker
+            result = {"ok": False,
+                      "error": {"kind": "worker_error",
+                                "message": f"{type(exc).__name__}: {exc}"}}
+        try:
+            conn.send(result)
+        except (BrokenPipeError, OSError):
+            return
+
+
+class _Worker:
+    __slots__ = ("proc", "conn")
+
+    def __init__(self, proc, conn) -> None:
+        self.proc = proc
+        self.conn = conn
+
+
+class PreforkPool:
+    """``n`` pre-forked worker processes behind a checkout queue.
+
+    Args:
+        n: worker count (also the pool's concurrency bound — callers
+            holding no idle worker block in :meth:`submit`).
+        handler: request handler run in the child; ``None`` (the daemon
+            default) lazily imports the synthesis handler inside the
+            child after the fork. Tests inject cheap handlers here.
+
+    Thread-safe: any number of daemon threads may ``submit`` concurrently;
+    each checks out one worker for the duration of its request.
+    """
+
+    def __init__(self, n: int, *,
+                 handler: Optional[Callable[[Dict], Dict]] = None) -> None:
+        if n < 1:
+            raise ValueError(f"PreforkPool needs >= 1 worker, got {n}")
+        self.size = int(n)
+        self._handler = handler
+        self._ctx = multiprocessing.get_context("fork")
+        self._lock = threading.Lock()
+        self._closed = False
+        self.respawns = 0            # workers replaced after death/kill
+        self.jobs = 0
+        self._idle: "queue.Queue[_Worker]" = queue.Queue()
+        self._workers: List[_Worker] = []
+        for _ in range(self.size):
+            w = self._spawn()
+            self._workers.append(w)
+            self._idle.put(w)
+
+    def _spawn(self) -> _Worker:
+        parent_conn, child_conn = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(target=_worker_main,
+                                 args=(child_conn, self._handler),
+                                 daemon=True)
+        proc.start()
+        child_conn.close()
+        return _Worker(proc, parent_conn)
+
+    def _replace(self, dead: _Worker) -> None:
+        """Reclaim a dead worker's slot with a fresh fork; the pool's
+        capacity is restored before the caller's error even returns."""
+        try:
+            dead.conn.close()
+        except OSError:
+            pass
+        with self._lock:
+            if self._closed:
+                return
+            self.respawns += 1
+            fresh = self._spawn()
+            try:
+                self._workers[self._workers.index(dead)] = fresh
+            except ValueError:
+                self._workers.append(fresh)
+        self._idle.put(fresh)
+
+    @property
+    def pids(self) -> List[int]:
+        """Live worker pids (tests kill these to exercise the death path)."""
+        with self._lock:
+            return [w.proc.pid for w in self._workers]
+
+    def submit(self, spec: Dict[str, Any],
+               timeout_s: Optional[float] = None) -> Dict[str, Any]:
+        """Run one request on an idle worker; always returns a dict.
+
+        Failure paths (worker killed on ``timeout_s`` expiry, worker died
+        mid-job) come back as ``{"ok": False, "error": {"kind": ...}}`` —
+        callers never see an exception and the dead worker's slot is
+        respawned before returning.
+        """
+        if self._closed:
+            return {"ok": False,
+                    "error": {"kind": "pool_closed",
+                              "message": "worker pool is shut down"}}
+        worker = self._idle.get()
+        with self._lock:
+            self.jobs += 1
+        pid = worker.proc.pid
+        try:
+            worker.conn.send(spec)
+        except (BrokenPipeError, OSError):
+            self._replace(worker)
+            return {"ok": False,
+                    "error": {"kind": "worker_died",
+                              "message": f"worker pid={pid} was dead at "
+                                         "submit; respawned"}}
+        if not worker.conn.poll(timeout_s):
+            # deadline: the child is actually killed (PR-4 semantics) and
+            # its slot comes back with a fresh fork
+            worker.proc.kill()
+            worker.proc.join(10.0)
+            self._replace(worker)
+            return {"ok": False,
+                    "error": {"kind": "deadline",
+                              "message": f"worker pid={pid} killed after "
+                                         f"{timeout_s:.3g}s deadline"}}
+        try:
+            result = worker.conn.recv()
+        except (EOFError, OSError):
+            worker.proc.join(10.0)
+            code = worker.proc.exitcode
+            self._replace(worker)
+            return {"ok": False,
+                    "error": {"kind": "worker_died",
+                              "message": f"worker pid={pid} died mid-job "
+                                         f"(exit code {code}); slot "
+                                         "respawned"}}
+        self._idle.put(worker)
+        return result
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"workers": self.size, "jobs": self.jobs,
+                    "respawns": self.respawns}
+
+    def close(self) -> None:
+        """Shut every worker down (sentinel first, kill as backstop)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            workers = list(self._workers)
+        for w in workers:
+            try:
+                w.conn.send(None)
+            except (BrokenPipeError, OSError):
+                pass
+        for w in workers:
+            w.proc.join(2.0)
+            if w.proc.is_alive():
+                w.proc.kill()
+                w.proc.join(10.0)
+            try:
+                w.conn.close()
+            except OSError:
+                pass

@@ -1,0 +1,531 @@
+"""Acceptance lane for the synthesis-as-a-service daemon (DESIGN.md §12).
+
+Every daemon test here runs over a REAL loopback socket — the daemon is
+started on an ephemeral port and spoken to through
+``tools/kforge_client.py`` (or a raw socket, for the fault-injection
+cases that need to send garbage). Structure:
+
+* acceptance: health, synthesis round-trip, memo dedupe, concurrent
+  multi-tenant dedupe with per-tenant attribution, resume-safe journal,
+  graceful-shutdown drain;
+* fault injection: malformed JSON, unknown fields/workloads, client
+  disconnect mid-request, worker death mid-job (slot reclaimed, daemon
+  stays up), deadline-exceeded;
+* units: PreforkPool and TenantFairLimiter in isolation (the hypothesis
+  property lane for the limiter lives in test_service_property.py);
+* the ROADMAP bugfix regression: LLM-backed requests in thread-mode
+  workers with per-tenant ``llm_usage`` attribution under record→replay.
+"""
+import json
+import os
+import signal
+import socket
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.service import PreforkPool, TenantFairLimiter
+from repro.service.daemon import (ServiceConfig, ServiceError,
+                                  SynthesisService)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+from kforge_client import ServiceClient  # noqa: E402
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    """A running daemon on an ephemeral loopback port + bound client;
+    always stopped (drained) at teardown."""
+    started = []
+
+    def start(**cfg_kwargs):
+        pool = cfg_kwargs.pop("pool", None)
+        cfg_kwargs.setdefault("port", 0)
+        cfg_kwargs.setdefault("workers", 4)
+        cfg_kwargs.setdefault("log_path", tmp_path / "service.jsonl")
+        svc = SynthesisService(ServiceConfig(**cfg_kwargs), pool=pool)
+        svc.start()
+        started.append(svc)
+        return svc, ServiceClient(port=svc.port)
+
+    yield start
+    for svc in started:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: round-trip, dedupe, attribution
+# ---------------------------------------------------------------------------
+
+def test_health_then_synthesize_then_memo(daemon):
+    svc, client = daemon()
+    h = client.health()
+    assert h["ok"] and h["accepting"]
+    assert h["requests"]["total"] == 0
+
+    r = client.synthesize("L1/swish", iters=2, tenant="alice")
+    assert r["ok"] and r["state"] == "correct"
+    assert r["served_from"] == "run"
+    assert r["tenant"] == "alice"
+    assert r["workload"] == "L1/swish"
+
+    # identical spec from another tenant: answered from the memo with no
+    # new oracle work — the sub-ms cache-hit path (allow generous margin
+    # for the HTTP round-trip itself)
+    oracle_before = svc.io_cache.stats()["oracle_computes"]
+    t0 = time.perf_counter()
+    r2 = client.synthesize("L1/swish", iters=2, tenant="bob")
+    wall = time.perf_counter() - t0
+    assert r2["ok"] and r2["served_from"] == "memo"
+    assert svc.io_cache.stats()["oracle_computes"] == oracle_before
+    assert wall < 0.25, f"memo hit took {wall:.3f}s"
+
+    h = client.health()
+    assert h["requests"]["total"] == 2
+    assert h["requests"]["deduped"] == 1
+    assert h["tenants"]["alice"]["requests"] == 1
+    assert h["tenants"]["bob"]["deduped"] == 1
+
+
+@pytest.mark.slow
+def test_concurrent_tenants_dedupe_and_attribution(daemon, tmp_path):
+    """N tenants × overlapping workloads over one socket: the oracle runs
+    once per unique workload, never once per request."""
+    svc, client = daemon()
+    tenants = ["alice", "bob", "carol"]
+    workloads = ["L1/swish", "L1/softmax"]
+    results = {}
+
+    def tenant_thread(tenant):
+        c = ServiceClient(port=svc.port)
+        for wl in workloads:
+            results[(tenant, wl)] = c.synthesize(wl, iters=2, tenant=tenant)
+
+    threads = [threading.Thread(target=tenant_thread, args=(t,))
+               for t in tenants]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert len(results) == len(tenants) * len(workloads)
+    assert all(r["ok"] for r in results.values())
+    # dedupe: 6 requests but only 2 unique specs — the oracle ran for one
+    # synthesis per unique workload (a run touches a couple of seeds),
+    # never once per request
+    stats = svc.io_cache.stats()
+    assert stats["oracle_computes"] < len(tenants) * len(workloads)
+    h = client.health()
+    assert h["requests"]["total"] == 6
+    assert h["requests"]["deduped"] >= 4
+    for tenant in tenants:
+        assert h["tenants"][tenant]["requests"] == len(workloads)
+
+    # the journal attributes every request to its tenant
+    events = svc.log.events()
+    done = [e for e in events if e.get("event") == "request_done"]
+    assert len(done) == 6
+    assert {e["tenant"] for e in done} == set(tenants)
+    assert all(e["ok"] for e in done)
+    # dedupe visible per-event: served_from run/coalesced/memo
+    assert sum(e["served_from"] != "run" for e in done) >= 4
+
+
+def test_resume_safe_journal_warms_cache(daemon, tmp_path):
+    log = tmp_path / "service.jsonl"
+    svc, client = daemon(log_path=log)
+    r = client.synthesize("L1/swish", iters=2, tenant="alice")
+    assert r["ok"]
+    svc.stop()
+
+    # a restarted daemon over the same journal pre-warms its verification
+    # cache: the same request re-verifies nothing
+    svc2, client2 = daemon(log_path=log)
+    h = client2.health()
+    assert h["warmed_cache_entries"] > 0
+    hits_before = svc2.cache.stats()["hits"]
+    r2 = client2.synthesize("L1/swish", iters=2, tenant="alice")
+    assert r2["ok"] and r2["served_from"] == "run"  # fresh memo, warm cache
+    assert svc2.cache.stats()["hits"] > hits_before
+
+
+def test_graceful_shutdown_drains_inflight(daemon, tmp_path):
+    svc, client = daemon()
+    responses = {}
+
+    def submit():
+        responses["r"] = client.synthesize("L1/softmax", iters=3,
+                                           tenant="alice")
+
+    t = threading.Thread(target=submit)
+    t.start()
+    # wait until the request is actually in flight
+    deadline = time.time() + 10
+    while not svc._inflight and time.time() < deadline:
+        time.sleep(0.01)
+    assert svc._inflight, "request never became in-flight"
+
+    out = ServiceClient(port=svc.port).shutdown()
+    assert out["ok"] and out["draining"] >= 1
+    t.join(timeout=120)
+    assert not t.is_alive()
+    # the drained request still got its full answer
+    assert responses["r"]["ok"] and responses["r"]["state"] == "correct"
+    svc.wait()  # stop() completes
+    events = svc.log.events()
+    stop_ev = [e for e in events if e.get("event") == "service_stop"]
+    assert len(stop_ev) == 1 and stop_ev[0]["drained"] >= 1
+    # every accepted request has a matching terminal journal entry
+    n_recv = sum(e.get("event") == "request_received" for e in events)
+    n_done = sum(e.get("event") == "request_done" for e in events)
+    assert n_recv == n_done
+
+
+def test_rejects_new_requests_while_draining(daemon):
+    svc, client = daemon()
+    svc.begin_shutdown()
+    r = client.synthesize("L1/swish", iters=2, tenant="alice")
+    assert not r["ok"] and r["error"]["kind"] == "shutting_down"
+
+
+def test_report_renders_from_service_journal(daemon):
+    svc, client = daemon()
+    assert client.synthesize("L1/swish", iters=2, tenant="alice")["ok"]
+    out = client.report()
+    assert out["ok"]
+    assert "level 1" in out["report"]   # the synthesis result landed
+    assert "service" in out["report"]
+    assert "tenant alice" in out["report"]
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def _raw_post(port, payload: bytes, path=b"/synthesize") -> bytes:
+    with socket.create_connection(("127.0.0.1", port), timeout=10) as s:
+        s.sendall(b"POST " + path + b" HTTP/1.1\r\n"
+                  b"Host: localhost\r\nContent-Type: application/json\r\n"
+                  b"Content-Length: " + str(len(payload)).encode()
+                  + b"\r\nConnection: close\r\n\r\n" + payload)
+        chunks = []
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            chunks.append(chunk)
+    return b"".join(chunks)
+
+
+def test_malformed_json_is_structured_400(daemon):
+    svc, client = daemon()
+    raw = _raw_post(svc.port, b'{"workload": "L1/swish", INVALID')
+    assert b"400" in raw.split(b"\r\n", 1)[0]
+    body = json.loads(raw.split(b"\r\n\r\n", 1)[1])
+    assert body["error"]["kind"] == "bad_json"
+    # daemon unharmed
+    assert client.health()["ok"]
+    assert any(e.get("kind") == "bad_json" for e in svc.log.events()
+               if e.get("event") == "request_error")
+
+
+@pytest.mark.parametrize("spec,expect", [
+    ({"workload": "L9/nope"}, "unknown workload"),
+    ({"workload": "L1/swish", "platfrom": "tpu_v5e"}, "unknown request"),
+    ({"workload": "L1/swish", "deadline_s": -1}, "deadline_s"),
+    ({"workload": "L1/swish", "backend": "gpt"}, "backend"),
+    ({"workload": "L1/swish", "isolate": True}, "no pre-forked"),
+    ({"workload": "L1/swish", "backend": "llm", "search": "pbt"}, "pbt"),
+    ({}, "required"),
+])
+def test_bad_requests_are_structured(daemon, spec, expect):
+    svc, _ = daemon()
+    raw = _raw_post(svc.port, json.dumps(spec).encode())
+    body = json.loads(raw.split(b"\r\n\r\n", 1)[1])
+    assert not body["ok"]
+    assert body["error"]["kind"] == "bad_request"
+    assert expect in body["error"]["message"]
+
+
+def test_client_disconnect_mid_request_daemon_stays_up(daemon):
+    svc, client = daemon()
+    # declare a body, send half of it, vanish
+    with socket.create_connection(("127.0.0.1", svc.port), timeout=10) as s:
+        s.sendall(b"POST /synthesize HTTP/1.1\r\nHost: x\r\n"
+                  b"Content-Type: application/json\r\n"
+                  b"Content-Length: 500\r\n\r\n" + b'{"workload": "L1')
+        # abortive close: RST instead of FIN, the rudest disconnect
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     b"\x01\x00\x00\x00\x00\x00\x00\x00")
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        events = [e for e in svc.log.events()
+                  if e.get("event") == "request_error"]
+        if events:
+            break
+        time.sleep(0.05)
+    assert events, "disconnect was never journaled"
+    # the daemon keeps serving
+    assert client.health()["ok"]
+    assert client.synthesize("L1/swish", iters=2, tenant="alice")["ok"]
+
+
+def test_deadline_exceeded_is_structured_504(daemon):
+    svc, client = daemon()
+    r = client.synthesize("L1/softmax", iters=4, tenant="alice",
+                          deadline_s=0.05)
+    assert not r["ok"]
+    assert r["error"]["kind"] == "deadline"
+    assert "deadline" in r["error"]["message"]
+    # daemon unharmed; the abandoned job finishes in the background and
+    # its result lands in the memo for the next caller
+    assert client.health()["ok"]
+    deadline = time.time() + 120
+    while svc._inflight and time.time() < deadline:
+        time.sleep(0.05)
+    r2 = client.synthesize("L1/softmax", iters=4, tenant="alice")
+    assert r2["ok"] and r2["served_from"] == "memo"
+
+
+def test_worker_death_mid_job_reclaims_slot(daemon):
+    """Kill a pre-forked worker mid-job: the caller gets a structured
+    ``worker_died`` error, the slot is respawned, and the daemon keeps
+    serving isolate requests."""
+    def handler(spec):
+        if spec["loop"]["seed"] == 999:     # the doomed request
+            time.sleep(120)
+        return {"ok": True, "workload": spec["workload"],
+                "state": "correct", "correct": True, "speedup": 1.0,
+                "model_time_s": 0.001, "iterations": 1,
+                "iters_to_correct": 1, "level": 1,
+                "result": {"state": "correct"}, "io": []}
+
+    pool = PreforkPool(1, handler=handler)
+    svc, client = daemon(pool=pool)
+    pids_before = pool.pids
+
+    def doomed():
+        return client.synthesize("L1/swish", iters=1, seed=999,
+                                 isolate=True, tenant="alice")
+
+    holder = {}
+    t = threading.Thread(target=lambda: holder.update(r=doomed()))
+    t.start()
+    # wait for the job to reach the worker, then kill it
+    deadline = time.time() + 10
+    while pool.jobs == 0 and time.time() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.2)
+    os.kill(pids_before[0], signal.SIGKILL)
+    t.join(timeout=30)
+    assert not t.is_alive()
+    r = holder["r"]
+    assert not r["ok"] and r["error"]["kind"] == "worker_died"
+    assert "respawned" in r["error"]["message"]
+
+    # slot reclaimed: a fresh worker serves the next isolate request
+    assert pool.respawns == 1
+    assert pool.pids != pids_before
+    r2 = client.synthesize("L1/swish", iters=1, isolate=True,
+                           tenant="alice")
+    assert r2["ok"] and r2["isolated"]
+    assert client.health()["ok"]
+
+
+def test_prefork_deadline_kills_worker(daemon):
+    def handler(spec):
+        time.sleep(120)
+
+    pool = PreforkPool(1, handler=handler)
+    svc, client = daemon(pool=pool)
+    r = client.synthesize("L1/swish", iters=1, isolate=True,
+                          deadline_s=0.3, tenant="alice")
+    assert not r["ok"] and r["error"]["kind"] == "deadline"
+    # the pool-side kill + respawn completes just after the handler's own
+    # deadline response goes out; give it a moment
+    deadline = time.time() + 10
+    while pool.respawns == 0 and time.time() < deadline:
+        time.sleep(0.05)
+    assert pool.respawns == 1          # killed worker replaced
+    assert client.health()["ok"]
+
+
+@pytest.mark.slow
+def test_prefork_isolate_e2e_real_synthesis(tmp_path):
+    """The real lane, end to end through ``python -m repro.service``: the
+    daemon subprocess forks its worker pool BEFORE importing jax (the
+    pre-fork rule — forking from this jax-loaded pytest process instead
+    would be exactly the hazard the ordering avoids), then a pre-forked
+    worker imports jax inside the child and runs a real refinement loop."""
+    import subprocess
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.service", "--port", "0",
+         "--isolate-workers", "1", "--workers", "2",
+         "--log", str(tmp_path / "svc.jsonl")],
+        cwd=str(Path(__file__).resolve().parent.parent),
+        env=env, stdout=subprocess.PIPE, text=True)
+    try:
+        line = proc.stdout.readline()       # "kforge service on http://..."
+        port = int(line.split("http://")[1].split()[0].rsplit(":", 1)[1])
+        client = ServiceClient(port=port)
+        r = client.synthesize("L1/swish", iters=2, isolate=True,
+                              tenant="alice")
+        assert r["ok"] and r["state"] == "correct" and r["isolated"]
+        out = client.shutdown()
+        assert out["ok"]
+        assert proc.wait(timeout=60) == 0   # graceful exit after drain
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP bugfix regression: LLM-backed requests in thread-mode workers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_llm_tenants_get_attributed_usage_record_then_replay(daemon,
+                                                             tmp_path):
+    rec = str(tmp_path / "llm_session.jsonl")
+
+    def run_pair(**cfg):
+        svc, client = daemon(**cfg)
+        ra = client.synthesize("L1/swish", iters=2, backend="llm",
+                               tenant="alice")
+        rb = client.synthesize("L1/softmax", iters=2, backend="llm",
+                               tenant="bob")
+        h = client.health()
+        svc.stop()
+        return svc, ra, rb, h
+
+    # record leg: MockTransport behind a recorder
+    _, ra, rb, h = run_pair(llm_record=rec,
+                            log_path=tmp_path / "rec.jsonl")
+    assert ra["ok"] and rb["ok"]
+    assert ra["llm_usage"]["requests"] > 0
+    assert rb["llm_usage"]["requests"] > 0
+
+    # replay leg: zero live calls, same attribution story
+    svc2, ra2, rb2, h2 = run_pair(llm_replay=rec,
+                                  log_path=tmp_path / "rep.jsonl")
+    assert ra2["ok"] and rb2["ok"]
+    # per-tenant deltas: each tenant's spend is its own, not the fleet's
+    assert ra2["llm_usage"]["requests"] > 0
+    assert rb2["llm_usage"]["requests"] > 0
+    ta = h2["tenants"]["alice"]["llm_usage"]
+    tb = h2["tenants"]["bob"]["llm_usage"]
+    assert ta["requests"] == ra2["llm_usage"]["requests"]
+    assert tb["requests"] == rb2["llm_usage"]["requests"]
+    # fleet meter totals both tenants
+    assert h2["llm_usage"]["requests"] == \
+        ta["requests"] + tb["requests"]
+    # the journal carries the per-request deltas too
+    done = [e for e in svc2.log.events() if
+            e.get("event") == "request_done" and e.get("llm_usage")]
+    assert {e["tenant"] for e in done} == {"alice", "bob"}
+
+
+# ---------------------------------------------------------------------------
+# PreforkPool units (no daemon)
+# ---------------------------------------------------------------------------
+
+def test_pool_roundtrip_and_close():
+    pool = PreforkPool(2, handler=lambda spec: {"ok": True,
+                                                "echo": spec["x"]})
+    try:
+        assert pool.submit({"x": 1})["echo"] == 1
+        assert pool.submit({"x": 2})["echo"] == 2
+        assert pool.stats()["jobs"] == 2
+        assert pool.stats()["respawns"] == 0
+    finally:
+        pool.close()
+    assert pool.submit({"x": 3})["error"]["kind"] == "pool_closed"
+
+
+def test_pool_handler_exception_is_isolated():
+    def handler(spec):
+        raise ValueError("boom")
+
+    pool = PreforkPool(1, handler=handler)
+    try:
+        r = pool.submit({})
+        assert not r["ok"]
+        assert r["error"]["kind"] == "worker_error"
+        assert "boom" in r["error"]["message"]
+        # the worker survived the exception — same pid serves again
+        assert pool.respawns == 0
+    finally:
+        pool.close()
+
+
+def test_pool_worker_death_detected_and_respawned():
+    def handler(spec):
+        os.kill(os.getpid(), signal.SIGKILL)
+
+    pool = PreforkPool(1, handler=handler)
+    try:
+        r = pool.submit({})
+        assert not r["ok"] and r["error"]["kind"] == "worker_died"
+        assert pool.respawns == 1
+        # reclaimed slot works (fresh worker, fresh handler state)
+        pool2_pid = pool.pids[0]
+        assert pool2_pid is not None
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# TenantFairLimiter units (property lane in test_service_property.py)
+# ---------------------------------------------------------------------------
+
+def test_fair_limiter_unlimited_is_free():
+    fair = TenantFairLimiter()
+    assert fair.reserve("a") == 0.0
+    assert fair.reserve("b", tokens=10_000) == 0.0
+
+
+def test_fair_limiter_fleet_budget_paces_everyone():
+    t = {"now": 0.0}
+    fair = TenantFairLimiter(rpm=60, clock=lambda: t["now"])
+    # burst allowance: the first 60 reserves are free, then 1/s pacing
+    delays = [fair.reserve("a") for _ in range(61)]
+    assert delays[:60] == [0.0] * 60
+    assert delays[60] == pytest.approx(1.0)
+
+
+def test_fair_limiter_fresh_tenant_not_starved_by_hot_one():
+    t = {"now": 0.0}
+    fair = TenantFairLimiter(rpm=1000, tenant_rpm=60,
+                             clock=lambda: t["now"])
+    # hot tenant burns far past its per-tenant slice
+    hot_delay = 0.0
+    for _ in range(120):
+        hot_delay = fair.reserve("hot")
+    assert hot_delay > 0          # the hot tenant is paying its backlog
+    # a fresh tenant's bucket is full and the fleet bucket still has
+    # burst room: it pays nothing, not the hot tenant's deficit
+    assert fair.reserve("fresh") == 0.0
+
+
+def test_fair_limiter_for_tenant_duck_type():
+    t = {"now": 0.0}
+    fair = TenantFairLimiter(rpm=60, clock=lambda: t["now"])
+    bound = fair.for_tenant("alice")
+    for _ in range(60):
+        bound.reserve()
+    assert bound.reserve(tokens=5) == pytest.approx(1.0)
+    assert fair.stats()["fleet"]["reserved_requests"] == 61
+
+
+def test_fair_limiter_stats_shape():
+    fair = TenantFairLimiter(rpm=10, tenant_rpm=5)
+    fair.reserve("a")
+    fair.reserve("b")
+    s = fair.stats()
+    assert set(s["tenants"]) == {"a", "b"}
+    assert s["tenant_rpm"] == 5

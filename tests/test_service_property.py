@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the per-tenant fairness limiter
+(repro.service.fairness.TenantFairLimiter), registered alongside the
+CI-enforced non-skip hypothesis lane from the population-property tests.
+
+The two service-level invariants the daemon's admission control rests on:
+
+1. **Fleet budget is a hard ceiling** — under ANY interleaving of
+   reserves across any set of tenants, the number of reserves whose
+   pacing delay permits issue inside a window can never exceed the
+   burst allowance plus the window's refill. The token-bucket algebra
+   behind it: with a frozen clock and budget R rpm, the bucket starts at
+   R and each reserve debits 1, so the k-th reserve (0-indexed) sees a
+   deficit of ``max(0, k + 1 - R)`` and must pace ``deficit * 60 / R``
+   seconds — whoever the tenants are.
+
+2. **A starved tenant's delay is bounded by the fleet deficit alone** —
+   per-tenant buckets only ever ADD delay for the tenant that spent its
+   own slice (max composition); a fresh tenant's bucket is full, so the
+   hot tenant's backlog never leaks into the fresh tenant's pacing.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not vendored; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.service.fairness import TenantFairLimiter
+
+# an interleaving: each entry is (tenant index, token cost)
+_INTERLEAVINGS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 200)),
+    min_size=1, max_size=120)
+
+
+def _frozen():
+    t = {"now": 0.0}
+    return t, (lambda: t["now"])
+
+
+@settings(max_examples=80, deadline=None)
+@given(_INTERLEAVINGS, st.integers(1, 50))
+def test_fleet_budget_never_exceeded_under_any_interleaving(seq, rpm):
+    """Invariant 1: reserves that may issue within any horizon T obey
+    ``burst + refill``: issue_time(k) >= (k + 1 - rpm) * 60 / rpm, so at
+    most ``rpm + T * rpm / 60`` calls can have issue times <= T."""
+    t, clock = _frozen()
+    fair = TenantFairLimiter(rpm=rpm, clock=clock)
+    delays = [fair.reserve(f"t{ti}") for ti, _ in seq]
+    for k, delay in enumerate(delays):
+        expected = max(0.0, (k + 1 - rpm) * 60.0 / rpm)
+        assert delay == pytest.approx(expected), \
+            f"reserve {k}: delay {delay} != {expected} (rpm={rpm})"
+    # the window form of the same bound, for a few horizons
+    for horizon in (0.0, 30.0, 60.0, 120.0):
+        issued = sum(d <= horizon for d in delays)
+        assert issued <= rpm + horizon * rpm / 60.0 + 1e-9
+
+
+@settings(max_examples=80, deadline=None)
+@given(_INTERLEAVINGS, st.integers(60, 6000))
+def test_fleet_token_budget_never_exceeded(seq, tpm):
+    """Invariant 1 for the token bucket: cumulative tokens issuable by
+    time T never exceed burst (tpm) + refill (T * tpm / 60)."""
+    t, clock = _frozen()
+    fair = TenantFairLimiter(tpm=tpm, clock=clock)
+    spent = 0
+    for i, (tenant, tokens) in enumerate(seq):
+        delay = fair.reserve(f"t{tenant}", tokens=tokens)
+        spent += tokens
+        deficit = spent - tpm
+        expected = max(0.0, deficit * 60.0 / tpm)
+        assert delay == pytest.approx(expected)
+
+
+@settings(max_examples=80, deadline=None)
+@given(_INTERLEAVINGS, st.integers(2, 50), st.integers(1, 20))
+def test_per_tenant_buckets_only_add_delay_for_the_spender(seq, rpm,
+                                                          tenant_rpm):
+    """Per-tenant pacing is the max of the two layers: every delay is >=
+    the fleet-only delay (same interleaving, no tenant buckets), and any
+    EXTRA delay is explained entirely by that tenant's own spend."""
+    t1, clock1 = _frozen()
+    fleet_only = TenantFairLimiter(rpm=rpm, clock=clock1)
+    t2, clock2 = _frozen()
+    fair = TenantFairLimiter(rpm=rpm, tenant_rpm=tenant_rpm, clock=clock2)
+
+    per_tenant_count = {}
+    for tenant_idx, _ in seq:
+        tenant = f"t{tenant_idx}"
+        base = fleet_only.reserve(tenant)
+        combined = fair.reserve(tenant)
+        k_t = per_tenant_count.get(tenant, 0)
+        per_tenant_count[tenant] = k_t + 1
+        own = max(0.0, (k_t + 1 - tenant_rpm) * 60.0 / tenant_rpm)
+        assert combined == pytest.approx(max(base, own))
+        assert combined >= base - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 200), st.integers(2, 50), st.integers(1, 20))
+def test_fresh_tenant_delay_bounded_by_fleet_deficit(hot_reserves, rpm,
+                                                     tenant_rpm):
+    """Invariant 2: after a hot tenant issues any number of reserves, a
+    fresh tenant's first delay equals the pure fleet deficit — the hot
+    tenant's per-tenant backlog does not leak."""
+    t, clock = _frozen()
+    fair = TenantFairLimiter(rpm=rpm, tenant_rpm=tenant_rpm, clock=clock)
+    for _ in range(hot_reserves):
+        fair.reserve("hot")
+    fleet_deficit = max(0.0, (hot_reserves + 1 - rpm) * 60.0 / rpm)
+    assert fair.reserve("fresh") == pytest.approx(fleet_deficit)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 100), st.integers(2, 60))
+def test_refill_restores_burst_headroom(n, rpm):
+    """Advancing the frozen clock refills the bucket at rpm/60 per second
+    (capped at the burst allowance): after a full minute idle, a drained
+    fleet bucket admits a full burst again."""
+    t, clock = _frozen()
+    fair = TenantFairLimiter(rpm=rpm, clock=clock)
+    for _ in range(n):
+        fair.reserve("a")
+    # idle one minute past the backlog (+1 s of float-rounding margin)
+    t["now"] += 61.0 + (max(0, n - rpm) * 60.0 / rpm)
+    delays = [fair.reserve("b") for _ in range(rpm)]
+    assert delays == [0.0] * rpm

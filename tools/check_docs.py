@@ -10,6 +10,9 @@ Fails (exit 1, one line per problem) when:
 * a ``python -m repro.campaign`` CLI flag (introspected from the live
   argument parser, so new flags are covered automatically — aliases like
   ``--use-profiling`` included) is missing from README.md or docs/api.md;
+* a ``python -m repro.service`` daemon CLI flag, or a name exported by
+  ``repro.service`` (``__all__``), is missing from README.md or
+  docs/api.md — the service surface must stay documented too;
 * an LLM-subsystem CLI flag (one whose parser help text mentions
   ``--backend llm`` or ``LLM``) is additionally missing from
   docs/llm_backends.md — the LLM guide must cover its own surface;
@@ -134,6 +137,28 @@ def main() -> int:
                 f"docs/llm_backends.md: LLM-subsystem CLI flag {flag} "
                 "undocumented (its --help names the LLM backend)")
 
+    # service daemon: CLI flags (live parser, stdlib-only import) + the
+    # package's __all__ exports must appear in README.md and docs/api.md
+    from repro.service.__main__ import build_parser as build_service_parser
+    service_flags = sorted({
+        opt for action in build_service_parser()._actions
+        for opt in action.option_strings
+        if opt.startswith("--") and opt != "--help"})
+    for flag in service_flags:
+        pattern = re.compile(re.escape(flag) + r"(?![\w-])")
+        for doc_name, text in (("README.md", readme), ("docs/api.md", api)):
+            if not pattern.search(text):
+                problems.append(
+                    f"{doc_name}: service daemon CLI flag {flag} "
+                    "undocumented")
+
+    import repro.service as service_mod
+    service_public = sorted(service_mod.__all__)
+    for name in service_public:
+        if name not in api:
+            problems.append(f"docs/api.md: repro.service.{name} "
+                            "undocumented")
+
     public = [n for n in vars(campaign)
               if (not n.startswith("_") and n[0].isupper())
               or n in ("run_campaign", "run_transfer_sweep",
@@ -168,7 +193,9 @@ def main() -> int:
         print(f"docs-consistency: OK ({n} platforms, "
               f"{len(set(public))} campaign exports, "
               f"{len(set(llm_public))} llm exports, "
+              f"{len(service_public)} service exports, "
               f"{len(flags)} CLI flags ({len(llm_flags)} llm-gated), "
+              f"{len(service_flags)} service flags, "
               f"{n_blocks} doc code blocks)")
     return 1 if problems else 0
 

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Tiny stdlib client for the KForge synthesis daemon (repro.service).
+
+Talks plain HTTP/JSON to a running ``python -m repro.service`` daemon —
+no repro import, no jax, safe to run anywhere. Doubles as the library
+helper the tests and benches use (:class:`ServiceClient`).
+
+Usage:
+    python tools/kforge_client.py --port 8741 health
+    python tools/kforge_client.py --port 8741 synthesize L1/swish \\
+        --platform tpu_v5e --iters 2 --tenant alice --deadline 120
+    python tools/kforge_client.py --port 8741 report
+    python tools/kforge_client.py --port 8741 shutdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import urllib.error
+import urllib.request
+from typing import Any, Dict, Optional
+
+
+class ServiceClient:
+    """Thin JSON-over-HTTP wrapper bound to one daemon address.
+
+    Every method returns the decoded response body as a dict; HTTP error
+    statuses are NOT raised — the daemon's structured
+    ``{"ok": false, "error": {...}}`` payload is returned as-is (callers
+    branch on ``resp["ok"]``, like the daemon's own tests do). Only
+    transport-level failures (daemon not listening) raise.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8741, *,
+                 timeout_s: float = 600.0) -> None:
+        self.base = f"http://{host}:{port}"
+        self.timeout_s = timeout_s
+
+    def _call(self, method: str, path: str,
+              body: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        data = (json.dumps(body).encode()
+                if body is not None else (b"" if method == "POST" else None))
+        req = urllib.request.Request(
+            self.base + path, data=data, method=method,
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return json.loads(resp.read().decode())
+        except urllib.error.HTTPError as exc:
+            # daemon errors carry a structured JSON body; surface it
+            try:
+                return json.loads(exc.read().decode())
+            except (ValueError, OSError):
+                return {"ok": False,
+                        "error": {"kind": "http_error",
+                                  "message": f"HTTP {exc.code}: "
+                                             f"{exc.reason}"}}
+
+    def health(self) -> Dict[str, Any]:
+        return self._call("GET", "/health")
+
+    def report(self) -> Dict[str, Any]:
+        return self._call("GET", "/report")
+
+    def synthesize(self, workload: str, **spec: Any) -> Dict[str, Any]:
+        """POST /synthesize. Keyword args are the request spec fields:
+        platform, backend, direction, search, tenant, deadline_s, isolate,
+        iters, seed, population, generations, use_reference,
+        use_profiling, single_shot."""
+        body = {"workload": workload}
+        body.update({k: v for k, v in spec.items() if v is not None})
+        return self._call("POST", "/synthesize", body)
+
+    def shutdown(self) -> Dict[str, Any]:
+        return self._call("POST", "/shutdown")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="kforge_client",
+        description="CLI client for the repro.service synthesis daemon")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8741)
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="client-side HTTP timeout in seconds")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("health", help="GET /health")
+    sub.add_parser("report", help="GET /report (rendered service report)")
+    sub.add_parser("shutdown", help="POST /shutdown (graceful drain)")
+    syn = sub.add_parser("synthesize", help="POST /synthesize and wait")
+    syn.add_argument("workload", help="workload name, e.g. L1/swish")
+    syn.add_argument("--platform", default=None)
+    syn.add_argument("--backend", default=None,
+                     choices=("template", "llm"))
+    syn.add_argument("--direction", default=None,
+                     choices=("fwd", "fwd_bwd"))
+    syn.add_argument("--search", default=None, choices=("lineage", "pbt"))
+    syn.add_argument("--tenant", default=None)
+    syn.add_argument("--deadline", type=float, default=None, metavar="S",
+                     help="per-request deadline_s")
+    syn.add_argument("--iters", type=int, default=None)
+    syn.add_argument("--seed", type=int, default=None)
+    syn.add_argument("--isolate", action="store_true",
+                     help="run on a pre-forked isolation worker")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    client = ServiceClient(args.host, args.port, timeout_s=args.timeout)
+    if args.cmd == "health":
+        out = client.health()
+    elif args.cmd == "report":
+        out = client.report()
+        if out.get("ok"):
+            print(out["report"])
+            return 0
+    elif args.cmd == "shutdown":
+        out = client.shutdown()
+    else:
+        out = client.synthesize(
+            args.workload, platform=args.platform, backend=args.backend,
+            direction=args.direction, search=args.search,
+            tenant=args.tenant, deadline_s=args.deadline,
+            iters=args.iters, seed=args.seed,
+            isolate=args.isolate or None)
+    print(json.dumps(out, indent=2, default=str))
+    return 0 if out.get("ok") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
